@@ -1,0 +1,63 @@
+"""Paper Fig. 2: deployment-strategy comparison.
+
+eEnergy-Split (Algorithm 1) vs K-means vs GASBAC on the paper's three
+layouts: uniform 25/100ac, random 25/100ac, uniform 49/200ac (CR = 200 m).
+Reports #edge devices, TSP tour length, per-round UAV energy, load balance.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.deployment import (coverage_ok, deploy_edge_devices,
+                                   deploy_gasbac, deploy_kmeans,
+                                   random_sensors, uniform_grid_sensors)
+from repro.core.trajectory import greedy_tour_plan, plan_tour
+
+CR = 200.0
+LAYOUTS = [
+    ("uniform_100ac_25", lambda: uniform_grid_sensors(100, 25)),
+    ("random_100ac_25", lambda: random_sensors(100, 25, seed=7)),
+    ("uniform_200ac_49", lambda: uniform_grid_sensors(200, 49)),
+]
+METHODS = [
+    ("eEnergy-Split", deploy_edge_devices, plan_tour),
+    ("K-means", deploy_kmeans, greedy_tour_plan),
+    ("GASBAC", deploy_gasbac, greedy_tour_plan),
+]
+
+
+def run(print_csv: bool = True) -> list[dict]:
+    rows = []
+    base = np.zeros(2)
+    for lname, gen in LAYOUTS:
+        pts = gen()
+        for mname, deploy, planner in METHODS:
+            t0 = time.perf_counter()
+            dep = deploy(pts, CR)
+            plan = planner(dep.edge_coords, base)
+            us = (time.perf_counter() - t0) * 1e6
+            loads = dep.loads
+            rows.append({
+                "bench": "deployment(fig2)",
+                "case": f"{lname}/{mname}",
+                "us_per_call": us,
+                "edge_devices": len(dep.edge_indices),
+                "tour_m": round(plan.tour_length, 1),
+                "kj_per_round": round(plan.e_per_round / 1e3, 2),
+                "rounds": plan.rounds,
+                "covered": coverage_ok(dep),
+                "load_imbalance": round(float(loads.max() / max(loads.mean(), 1e-9)), 2),
+            })
+    if print_csv:
+        for r in rows:
+            print(f"{r['bench']},{r['case']},{r['us_per_call']:.0f},"
+                  f"edges={r['edge_devices']};tour={r['tour_m']}m;"
+                  f"kJ/round={r['kj_per_round']};rounds={r['rounds']};"
+                  f"covered={r['covered']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

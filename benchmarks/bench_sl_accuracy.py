@@ -1,0 +1,112 @@
+"""Paper Fig. 3: FL vs SL_{a,b} classification performance (radar metrics).
+
+Synthetic KAP stand-in (12 classes, non-IID: 4 clients x 3 classes). The
+claim under test is the paper's qualitative one: with a server-heavy split
+(server >= 60% of layers), SL matches or beats FL under non-IID data —
+because the server sub-model is updated on every client's batch, while FL
+only averages diverged full models once per round.
+
+Default scope is CPU-budgeted: MobileNetV2 (the paper's best backbone) with
+FL, SL_25,75 and SL_15,85; ``--full`` runs all 3 backbones x 5 settings.
+Results cache to results/sl_accuracy.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.paper_train import PaperTrainConfig, train_fl, train_sl
+from repro.data.synthetic import SyntheticPestImages
+
+CACHE = "results/sl_accuracy.json"
+
+# paper Fig. 3 reference numbers (accuracy %) for the report
+PAPER_ACC = {
+    "resnet18": {"FL": 72.34, "SL_75_25": 71.34, "SL_40_60": 75.98,
+                 "SL_25_75": 73.89, "SL_15_85": 78.53},
+    "googlenet": {"FL": 63.15, "SL_40_60": 78.16, "SL_25_75": 80.35,
+                  "SL_15_85": 80.16},
+    "mobilenetv2": {"FL": 80.62, "SL_75_25": 81.35, "SL_40_60": 80.62,
+                    "SL_25_75": 82.35, "SL_15_85": 80.98},
+}
+
+
+def run(models=("mobilenetv2",), settings=("FL", "SL_25_75", "SL_15_85"),
+        rounds: int = 12, local_steps: int = 4, n_train: int = 1200,
+        n_test: int = 240, image_size: int = 32, use_cache: bool = True,
+        print_csv: bool = True) -> list[dict]:
+    cached = {}
+    if use_cache and os.path.exists(CACHE):
+        cached = {r["case"]: r for r in json.load(open(CACHE))}
+
+    gen = SyntheticPestImages(image_size=image_size)
+    x, y = map(np.asarray, gen.dataset(n_train))
+    xt, yt = map(np.asarray, gen.sample(jax.random.PRNGKey(99), n_test))
+
+    rows = []
+    for model in models:
+        for setting in settings:
+            case = f"{model}/{setting}"
+            if case in cached:
+                rows.append(cached[case])
+                continue
+            t0 = time.time()
+            cfg = PaperTrainConfig(model=model, global_rounds=rounds,
+                                   local_steps=local_steps,
+                                   image_size=image_size)
+            if setting == "FL":
+                res = train_fl(cfg, x, y, xt, yt)
+                extra = {}
+            else:
+                frac = {"SL_75_25": 0.75, "SL_40_60": 0.40,
+                        "SL_25_75": 0.25, "SL_15_85": 0.15}[setting]
+                cfg.client_fraction = frac
+                res = train_sl(cfg, x, y, xt, yt)
+                extra = {"link_MB": round(res["link_bytes"] / 1e6, 2),
+                         "cut_index": res["cut_index"]}
+            m = res["metrics"]
+            rows.append({
+                "bench": "sl_accuracy(fig3)",
+                "case": case,
+                "seconds": round(time.time() - t0, 1),
+                "accuracy": round(m["accuracy"], 4),
+                "f1": round(m["f1"], 4),
+                "mcc": round(m["mcc"], 4),
+                "precision": round(m["precision"], 4),
+                "recall": round(m["recall"], 4),
+                "client_kj": round(res["client_energy"].energy_j / 1e3, 4),
+                "server_kj": round(res["server_energy"].energy_j / 1e3, 4),
+                "paper_acc_pct": PAPER_ACC.get(model, {}).get(setting),
+                **extra,
+            })
+            os.makedirs("results", exist_ok=True)
+            json.dump(rows, open(CACHE, "w"), indent=1)
+    if print_csv:
+        for r in rows:
+            print(f"{r['bench']},{r['case']},{int(r.get('seconds', 0)*1e6)},"
+                  f"acc={r['accuracy']};f1={r['f1']};mcc={r['mcc']};"
+                  f"client_kJ={r['client_kj']};paper_acc={r['paper_acc_pct']}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--no-cache", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        run(models=("resnet18", "googlenet", "mobilenetv2"),
+            settings=("FL", "SL_75_25", "SL_40_60", "SL_25_75", "SL_15_85"),
+            rounds=args.rounds, use_cache=not args.no_cache)
+    else:
+        run(rounds=args.rounds, use_cache=not args.no_cache)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""§Perf hillclimb driver: run tagged dry-run variants for the three chosen
+pairs and append hypothesis→change→before→after records to
+results/PERF_LOG.md.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate
+
+Chosen pairs (from the baseline roofline table):
+  A yi-9b x train_4k        — most representative of the paper's technique:
+                              the DP-only client tier costs 16x per-device
+                              FLOPs on its 8 layers (body probes).
+  B jamba-1.5-large-398b x train_4k — largest collective term of the table
+                              (MoE gather/scatter crosses the data shards).
+  C qwen1.5-32b x decode_32k — worst fit: 43.9 GB/dev peak (KV cache) on a
+                              16 GB chip; memory-dominated.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json      # noqa: E402
+import sys       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_one          # noqa: E402
+from repro.launch.steps import PerfOptions       # noqa: E402
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+# (arch, shape, tag, PerfOptions, hypothesis)
+VARIANTS = [
+    # A — yi-9b train
+    ("yi-9b", "train_4k", "sp_client",
+     PerfOptions(seq_parallel_client=True),
+     "client tier is DP-only (paper constraint) -> its 8 layers burn 16x "
+     "per-device FLOPs (6.3e13 vs 3.9e12/layer, body probes). Sharding the "
+     "SEQUENCE over the idle 'model' axis during the client phase keeps "
+     "weights unsharded (still edge-faithful) but divides client compute "
+     "by 16: predict corrected FLOPs 7.3e14 -> ~3.2e14 (-56%) and memory "
+     "term down similarly; small new all-gather at the attention boundary."),
+    ("yi-9b", "train_4k", "sp_both",
+     PerfOptions(seq_parallel_client=True, seq_parallel_server=True),
+     "extend sequence sharding to the server tier's norm/elementwise "
+     "regions (Megatron-SP): predict bytes term down ~10-30% more; "
+     "collective term roughly flat (all-gather moves, doesn't grow)."),
+    # B — jamba train
+    ("jamba-1.5-large-398b", "train_4k", "moe_grouped",
+     PerfOptions(moe_groups=16),
+     "baseline MoE dispatch gathers tokens globally -> cross-shard "
+     "gather/scatter dominates collectives. Grouping dispatch by the 16 "
+     "data shards keeps gather/scatter local; only the expert tables move "
+     "(all-to-all). Predict collective bytes down >2x on MoE layers."),
+    ("jamba-1.5-large-398b", "train_4k", "moe_grouped_sp",
+     PerfOptions(moe_groups=16, seq_parallel_client=True,
+                 seq_parallel_server=True),
+     "stack sequence-parallelism on top: mamba scans are token-local, so "
+     "seq sharding should cut their per-device bytes too."),
+    # C — qwen decode
+    ("qwen1.5-32b", "decode_32k", "kv_int8",
+     PerfOptions(kv_dtype="int8"),
+     "decode reads the whole KV cache every token: 5.5TB/256 = 21.5GB/dev "
+     "bf16. int8 cache halves cache bytes and the 43.9GB peak; predict "
+     "memory term ~2x down, quantization noise <2% (tested)."),
+    ("qwen1.5-32b", "decode_32k", "kv_int8_donate",
+     PerfOptions(kv_dtype="int8", donate=True),
+     "the cache update also materializes input+output copies without "
+     "aliasing. Donating the state buffer should cut peak memory by "
+     "roughly the cache size again -> fits 16GB v5e."),
+]
+
+
+def terms(rec):
+    f = rec.get("flops_corrected", rec.get("flops", 0))
+    b = rec.get("bytes_corrected", rec.get("bytes_accessed", 0))
+    c = rec.get("coll_bytes_corrected",
+                rec.get("collectives", {}).get("total_bytes", 0))
+    peak = rec.get("memory", {}).get("peak_memory_in_bytes")
+    return {"t_compute": f / PEAK_FLOPS, "t_memory": b / HBM_BW,
+            "t_collective": c / ICI_BW, "peak_gb": (peak or 0) / 1e9}
+
+
+def load_baseline(arch, shape):
+    path = f"results/dryrun/{arch}__{shape}__pod16x16.json"
+    return json.load(open(path))
+
+
+def fmt(t):
+    return (f"compute {t['t_compute']:.3e}s / memory {t['t_memory']:.3e}s / "
+            f"collective {t['t_collective']:.3e}s / peak {t['peak_gb']:.1f}GB")
+
+
+def main():
+    os.makedirs("results", exist_ok=True)
+    log_path = "results/PERF_LOG.md"
+    new_file = not os.path.exists(log_path)
+    log = open(log_path, "a")
+    if new_file:
+        log.write(
+            "## §Perf — hillclimb log (3 chosen pairs)\n\n"
+            "Chosen from the baseline table: **yi-9b x train_4k** (most "
+            "representative of the paper's technique — the DP-only client "
+            "tier), **jamba-1.5-large-398b x train_4k** (most collective-"
+            "bound), **qwen1.5-32b x decode_32k** (worst memory fit: "
+            "43.9GB/dev on a 16GB chip). Paper-faithful BASELINE rows and "
+            "beyond-paper OPTIMIZED rows are recorded separately; terms "
+            "are per-device roofline seconds on TPU v5e constants.\n\n"
+            "Note: the memory term inherits the CPU backend's fusion "
+            "granularity, so its absolute value is an upper bound; deltas "
+            "between variants (same backend) are the signal.\n\n")
+    for arch, shape, tag, opts, hyp in VARIANTS:
+        base = load_baseline(arch, shape)
+        tb = terms(base)
+        print(f"[perf] {arch} x {shape} :: {tag} ...", flush=True)
+        rec = run_one(arch, shape, multi_pod=False, tag=tag, opts=opts)
+        if rec["status"] != "ok":
+            log.write(f"### {arch} x {shape} — `{tag}`: **ERROR** "
+                      f"{rec.get('error', '')[:300]}\n\n")
+            log.flush()
+            continue
+        tv = terms(rec)
+        dom = max(("t_compute", "t_memory", "t_collective"),
+                  key=lambda k: tb[k])
+        delta = (tb[dom] - tv[dom]) / tb[dom] * 100 if tb[dom] else 0.0
+        verdict = "CONFIRMED" if delta > 5 else (
+            "PARTIAL" if delta > 0 else "REFUTED")
+        log.write(
+            f"### {arch} x {shape} — `{tag}`\n\n"
+            f"**Hypothesis.** {hyp}\n\n"
+            f"- before (paper-faithful baseline): {fmt(tb)}\n"
+            f"- after (`{tag}`): {fmt(tv)}\n"
+            f"- dominant term ({dom.replace('t_', '')}): "
+            f"{tb[dom]:.3e}s -> {tv[dom]:.3e}s (**{delta:+.1f}%**) — "
+            f"**{verdict}**\n\n")
+        log.flush()
+    log.close()
+    print("[perf] log appended to", log_path)
+
+
+if __name__ == "__main__":
+    main()

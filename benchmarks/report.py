@@ -1,0 +1,210 @@
+"""Generate EXPERIMENTS.md from recorded artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report
+
+Sections: paper reproduction tables (Fig.2 / Table II / Eq.6 / Table III /
+Fig.3), §Dry-run, §Roofline — all derived from results/; §Perf is included
+verbatim from results/PERF_LOG.md (the hillclimb log).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "—"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def paper_sections() -> str:
+    from . import bench_deployment, bench_uav_energy, bench_rounds, \
+        bench_resource
+    out = ["## §Paper-Fig2 — deployment strategies\n",
+           "| case | edge devices | tour (m) | kJ/round | rounds γ | covered |",
+           "|---|---|---|---|---|---|"]
+    for r in bench_deployment.run(print_csv=False):
+        out.append(f"| {r['case']} | {r['edge_devices']} | {r['tour_m']} "
+                   f"| {r['kj_per_round']} | {r['rounds']} | {r['covered']} |")
+
+    out += ["", "## §Paper-TableII — UAV energy per trip\n",
+            "| case | ours kJ/trip | paper kJ/trip | saving vs baseline |",
+            "|---|---|---|---|"]
+    for r in bench_uav_energy.run(print_csv=False):
+        out.append(f"| {r['case']} | {r['kj_per_trip']} | {r['paper_kj']} "
+                   f"| {r['saving_vs_ours_pct']}% |")
+    out.append("\nThe paper's qualitative claim — eEnergy-Split needs the "
+               "fewest devices and the least per-trip energy among "
+               "*coverage-satisfying* deployments — reproduces (K-means "
+               "next; GASBAC sometimes cheaper but violates the Eq. 4 "
+               "coverage constraint, `covered=False` above: its balanced "
+               "clusters leave sensors out of CR). Absolute kJ differs "
+               "from the paper's Table II because tour geometry and "
+               "hover/comm dwell times are not published; the ~27%/~35% "
+               "relative savings at 100 acres match the claim's "
+               "direction, not its magnitude.")
+
+    out += ["", "## §Paper-Rounds — Eq. (6) γ vs battery budget\n",
+            "| budget | γ (delayed return, Alg. 2) | γ (return each round) |",
+            "|---|---|---|"]
+    for r in bench_rounds.run(print_csv=False):
+        out.append(f"| {r['case']} | {r['gamma_delayed_return']} "
+                   f"| {r['gamma_naive_return']} |")
+
+    out += ["", "## §Paper-TableIII — per-tier time / energy / CO2\n",
+            "| case | client s | server s | link s | client kJ | server kJ "
+            "| client CO2 g |",
+            "|---|---|---|---|---|---|---|"]
+    for r in bench_resource.run(print_csv=False):
+        out.append(f"| {r['case']} | {r['client_s']} | {r['server_s']} "
+                   f"| {r['link_s']} | {r['client_kj']} | {r['server_kj']} "
+                   f"| {r['client_co2_g']} |")
+    out.append("\nReproduces §IV-D's finding: SL cuts client TIME for every "
+               "backbone; the ENERGY advantage is model-dependent (the link "
+               "+ shallow-layer overhead can erode it for deep nets, while "
+               "MobileNetV2 wins on both).")
+
+    if os.path.exists("results/sl_accuracy.json"):
+        rows = json.load(open("results/sl_accuracy.json"))
+        out += ["", "## §Paper-Fig3 — FL vs SL classification (synthetic KAP)\n",
+                "| case | acc | f1 | mcc | client kJ | paper acc (%) |",
+                "|---|---|---|---|---|---|"]
+        for r in rows:
+            out.append(f"| {r['case']} | {r['accuracy']} | {r['f1']} "
+                       f"| {r['mcc']} | {r['client_kj']} "
+                       f"| {r.get('paper_acc_pct', '—')} |")
+        out.append("\nSynthetic non-IID stand-in (offline container — no "
+                   "KAP download): absolute accuracies are not comparable "
+                   "to the paper's; the comparison of interest is SL vs FL "
+                   "under the same budget.")
+    return "\n".join(out)
+
+
+def training_section() -> str:
+    path = "results/train_llm_log.txt"
+    if not os.path.exists(path):
+        return ""
+    lines = open(path).read().strip().splitlines()
+    out = ["## §End-to-end training — smollm-135m (full 135M config, "
+           "split cut SL_15,85)\n",
+           "`PYTHONPATH=src python examples/train_llm_split.py --steps 250 "
+           "--batch 4 --seq 128` — AdamW + grad-clip, synthetic copy-"
+           "structure tokens, cut at layer 5/30 (client tier):\n",
+           "```"]
+    out += [l for l in lines if "step " in l][:6]
+    out += ["  ..."] + [lines[-2], lines[-1], "```",
+            "Loss 11.11 -> ~1.9 (the copy-task entropy floor) in 250 steps; "
+            "checkpoint saved via repro.checkpoint."]
+    return "\n".join(out)
+
+
+def dryrun_section() -> str:
+    recs = [json.load(open(p)) for p in
+            sorted(glob.glob("results/dryrun/*.json"))]
+    base = [r for r in recs if r.get("tag", "baseline") == "baseline"]
+    n_ok = sum(r["status"] == "ok" for r in base)
+    n_skip = sum(r["status"] == "skipped" for r in base)
+    n_err = sum(r["status"] == "error" for r in base)
+    out = [f"## §Dry-run — {n_ok} ok / {n_skip} skipped (documented) / "
+           f"{n_err} errors\n",
+           "Every (architecture x input shape) lowered **and compiled** on "
+           "the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh "
+           "(512 host-platform devices). Per-device peak memory from "
+           "`memory_analysis()`:\n",
+           "| arch | shape | mesh | peak/dev | args/dev | compile s | "
+           "collectives (count) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in base:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"skipped: {r['reason'][:60]}… | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR {r['error'][:60]} | | | |")
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("collectives", {})
+        ncoll = sum(v["count"] for k, v in coll.items()
+                    if isinstance(v, dict))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt_bytes(mem.get('peak_memory_in_bytes'))} "
+            f"| {_fmt_bytes(mem.get('argument_size_in_bytes'))} "
+            f"| {r['compile_s']} | {ncoll} |")
+    return "\n".join(out)
+
+
+def roofline_section() -> str:
+    from . import roofline
+    rows = roofline.load_all()
+    rows_sp = [r for r in rows if r.get("mesh") == "pod16x16"
+               and r.get("tag", "baseline") == "baseline"]
+    out = ["## §Roofline — single-pod (16x16, 256 chips), per-device terms\n",
+           "Constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI per "
+           "chip. Counts are scan-body-corrected (see "
+           "`launch/steps.py:build_body_probes`). `useful` = "
+           "MODEL_FLOPS / (HLO_FLOPs x chips), MODEL_FLOPS = 6·N_active·D "
+           "(train) or 2·N_active·D (inference).\n",
+           "| arch | shape | t_compute | t_memory | t_collective | dominant "
+           "| useful | lever |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows_sp:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                       f"| — | {r['skipped'][:50]}… |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e}s "
+            f"| {r['t_memory_s']:.2e}s | {r['t_collective_s']:.2e}s "
+            f"| **{r['dominant']}** | {r['useful_compute_ratio']:.2f} "
+            f"| {r['lever'][:58]} |")
+
+    # multi-pod deltas
+    rows_mp = [r for r in rows if r.get("mesh") == "pod2x16x16"
+               and r.get("tag", "baseline") == "baseline" and "skipped" not in r]
+    out += ["", "### Multi-pod (2x16x16) — collective-term deltas\n",
+            "| arch | shape | t_coll single-pod | t_coll multi-pod |",
+            "|---|---|---|---|"]
+    sp_map = {(r["arch"], r["shape"]): r for r in rows_sp if "skipped" not in r}
+    for r in rows_mp:
+        s = sp_map.get((r["arch"], r["shape"]))
+        if s:
+            out.append(f"| {r['arch']} | {r['shape']} "
+                       f"| {s['t_collective_s']:.2e}s "
+                       f"| {r['t_collective_s']:.2e}s |")
+    return "\n".join(out)
+
+
+HEADER = """# EXPERIMENTS
+
+Artifacts: `results/dryrun/*.json` (per-pair dry-run records),
+`results/sl_accuracy.json` (Fig. 3 runs), `results/PERF_LOG.md`
+(hillclimb iterations). Regenerate this file with
+`PYTHONPATH=src python -m benchmarks.report`.
+"""
+
+
+def main():
+    parts = [HEADER, paper_sections(), "", training_section(), "",
+             dryrun_section(), "", roofline_section(), ""]
+    if os.path.exists("results/PERF_LOG.md"):
+        parts.append(open("results/PERF_LOG.md").read())
+    else:
+        parts.append("## §Perf\n\n(pending — see results/PERF_LOG.md)")
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the whole eEnergy-Split stack in one script.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. deploy edge devices on a simulated 100-acre farm (Algorithm 1)
+2. plan the energy-optimal UAV tour (Algorithm 2, exact TSP)
+3. run a few rounds of split learning on synthetic pest images
+   (Algorithm 3) and report accuracy + per-tier energy
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core.deployment import deploy_edge_devices, uniform_grid_sensors
+from repro.core.trajectory import plan_tour
+from repro.core.paper_train import PaperTrainConfig, train_sl
+from repro.data.synthetic import SyntheticPestImages
+
+# 1. deployment -------------------------------------------------------------
+sensors = uniform_grid_sensors(acres=100, n_sensors=25)
+dep = deploy_edge_devices(sensors, cr=200.0)
+print(f"[1] {len(sensors)} sensors -> {len(dep.edge_indices)} edge devices "
+      f"(loads: {dep.loads.tolist()})")
+
+# 2. UAV tour ---------------------------------------------------------------
+plan = plan_tour(dep.edge_coords, base=np.zeros(2))
+print(f"[2] optimal tour {plan.tour_length:.0f} m, "
+      f"{plan.e_per_round/1e3:.1f} kJ/round, gamma={plan.rounds} rounds "
+      f"on one battery")
+
+# 3. split learning ---------------------------------------------------------
+gen = SyntheticPestImages(image_size=32)
+x, y = map(np.asarray, gen.dataset(800))
+xt, yt = map(np.asarray, gen.sample(jax.random.PRNGKey(99), 160))
+cfg = PaperTrainConfig(model="mobilenetv2", client_fraction=0.25,
+                       num_clients=len(dep.edge_indices) if
+                       len(dep.edge_indices) >= 2 else 4,
+                       global_rounds=min(4, plan.rounds), local_steps=3)
+res = train_sl(cfg, x, y, xt, yt)
+m = res["metrics"]
+print(f"[3] SL_25,75 after {cfg.global_rounds} UAV rounds: "
+      f"acc={m['accuracy']:.3f} f1={m['f1']:.3f} "
+      f"client={res['client_energy'].energy_j/1e3:.3f}kJ "
+      f"server={res['server_energy'].energy_j/1e3:.4f}kJ "
+      f"link={res['link_bytes']/1e6:.1f}MB")
+print("done — see benchmarks/ for the full paper tables.")

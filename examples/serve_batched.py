@@ -1,0 +1,19 @@
+"""Batched serving example: greedy decode with KV caches through the
+split-learning tiers (client prefix + server suffix).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-7b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--reduced", "--batch", "4",
+                "--prompt-len", "16", "--gen", "16"])

@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-param LLM (smollm-135m, full config)
+with the eEnergy-Split cut for a few hundred steps on synthetic tokens.
+
+    PYTHONPATH=src python examples/train_llm_split.py --steps 300
+
+This is the deliverable-(b) end-to-end run: full-size smollm-135m (30
+layers, d_model 576, vocab 49152 — 135M params), split at SL_15,85, AdamW,
+loss curve printed. On the production mesh the same step lowers via
+repro.launch.steps; here it runs on CPU with a small batch.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    train_main(["--arch", "smollm-135m", "--steps", str(args.steps),
+                "--batch", str(args.batch), "--seq", str(args.seq),
+                "--client-fraction", "0.15",
+                "--ckpt", "results/smollm_split.msgpack"])

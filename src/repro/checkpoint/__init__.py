@@ -1,0 +1,3 @@
+from .ckpt import save_checkpoint, restore_checkpoint, tree_flatten_with_paths
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "tree_flatten_with_paths"]

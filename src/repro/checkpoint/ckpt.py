@@ -1,0 +1,94 @@
+"""msgpack-based checkpointing with sharding-aware restore.
+
+Format: a single .msgpack file containing
+  {"meta": {...}, "leaves": {path: {"dtype","shape","data"}}}
+bf16 is serialized via a uint16 view (msgpack has no bf16).
+
+On restore, pass ``shardings`` (a pytree of NamedSharding or None) to
+device_put each leaf directly to its target sharding — the multi-host-safe
+pattern (each process would read its slice; on one host we put the whole
+array with the right layout).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def tree_flatten_with_paths(tree: Any) -> dict[str, jax.Array]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def _encode_leaf(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        data = arr.view(np.uint16).tobytes()
+        dtype = "bfloat16"
+    else:
+        data = arr.tobytes()
+        dtype = arr.dtype.str
+    return {"dtype": dtype, "shape": list(arr.shape), "data": data}
+
+
+def _decode_leaf(d: dict) -> np.ndarray:
+    shape = tuple(d["shape"])
+    if d["dtype"] == "bfloat16":
+        arr = np.frombuffer(d["data"], dtype=np.uint16).reshape(shape)
+        return arr.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(shape)
+
+
+def save_checkpoint(path: str, tree: Any, *, meta: Optional[dict] = None) -> None:
+    flat = tree_flatten_with_paths(tree)
+    payload = {"meta": meta or {}, "leaves": {k: _encode_leaf(v) for k, v in flat.items()}}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic
+
+
+def restore_checkpoint(path: str, like: Any, *, shardings: Any = None) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_by_path = payload["leaves"]
+    flat_like = tree_flatten_with_paths(like)
+    flat_shard = tree_flatten_with_paths(shardings) if shardings is not None else {}
+    out = {}
+    for key, ref in flat_like.items():
+        if key not in leaves_by_path:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = _decode_leaf(leaves_by_path[key])
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} vs model {ref.shape}")
+        sh = flat_shard.get(key)
+        out[key] = jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+    # rebuild the tree in `like`'s structure
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = [out["/".join(_path_str(p) for p in path)] for path, _ in paths]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), ordered)
+
+
+def checkpoint_meta(path: str) -> dict:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    return payload["meta"]

@@ -1,0 +1,35 @@
+"""Architecture registry: the 10 assigned architectures + the paper's CNNs.
+
+``get_config(name)`` returns the full production ArchConfig;
+``get_config(name).reduced()`` the CPU smoke-test variant.
+"""
+from .base import ArchConfig, InputShape, INPUT_SHAPES, SplitConfig
+
+from .qwen1_5_32b import CONFIG as qwen1_5_32b
+from .pixtral_12b import CONFIG as pixtral_12b
+from .whisper_tiny import CONFIG as whisper_tiny
+from .arctic_480b import CONFIG as arctic_480b
+from .h2o_danube_1_8b import CONFIG as h2o_danube_1_8b
+from .deepseek_moe_16b import CONFIG as deepseek_moe_16b
+from .smollm_135m import CONFIG as smollm_135m
+from .jamba_1_5_large_398b import CONFIG as jamba_1_5_large_398b
+from .rwkv6_7b import CONFIG as rwkv6_7b
+from .yi_9b import CONFIG as yi_9b
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c for c in [
+        qwen1_5_32b, pixtral_12b, whisper_tiny, arctic_480b,
+        h2o_danube_1_8b, deepseek_moe_16b, smollm_135m,
+        jamba_1_5_large_398b, rwkv6_7b, yi_9b,
+    ]
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "SplitConfig",
+           "ARCHS", "get_config"]

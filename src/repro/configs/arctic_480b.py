@@ -1,0 +1,12 @@
+"""arctic-480b [moe] — 128 experts top-2 IN PARALLEL with a dense residual
+FFN on every layer. GQA kv=8. [hf:Snowflake/snowflake-arctic-base]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000,
+    n_experts=128, top_k=2, dense_residual=True,
+    moe_d_ff=4864,
+    source="hf:Snowflake/snowflake-arctic-base",
+)

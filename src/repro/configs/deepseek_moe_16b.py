@@ -1,0 +1,12 @@
+"""deepseek-moe-16b [moe] — fine-grained 64 routed experts top-6 + 2 shared
+experts; layer 0 is dense. [arXiv:2401.06066]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=102400,
+    n_experts=64, top_k=6, n_shared_experts=2, moe_d_ff=1408,
+    first_moe_layer=1,
+    source="arXiv:2401.06066",
+)

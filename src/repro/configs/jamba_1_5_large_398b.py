@@ -1,0 +1,14 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave
+(1 attention layer per 8), MoE 16 experts top-2 every other layer.
+GQA kv=8. [arXiv:2403.19887]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=24576, vocab=65536,
+    n_experts=16, top_k=2, moe_layer_period=2,
+    attn_period=8, ssm_kind="mamba", ssm_state_dim=16, ssm_expand=2,
+    swa_window=4096,      # attention layers use SWA for the long_500k shape
+    source="arXiv:2403.19887",
+)

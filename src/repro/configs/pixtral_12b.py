@@ -1,0 +1,12 @@
+"""pixtral-12b [vlm] — pixtral-ViT frontend (stub) + mistral-nemo decoder.
+GQA kv=8. [hf:mistralai/Pixtral-12B-2409]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=131072, head_dim=160,
+    rope_theta=1_000_000.0,
+    frontend="patch_embed", frontend_tokens=1024,   # 1024 image tokens (stub ViT)
+    source="hf:mistralai/Pixtral-12B-2409",
+)

@@ -1,0 +1,12 @@
+"""rwkv6-7b [ssm] — "Finch": attention-free, data-dependent decay.
+[arXiv:2404.05892]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=0, n_kv_heads=0,
+    head_dim=64,                       # rwkv head size
+    d_ff=14336, vocab=65536,
+    ssm_kind="rwkv6", attn_period=0,
+    source="arXiv:2404.05892",
+)

@@ -1,0 +1,14 @@
+"""whisper-tiny [audio] — enc-dec; conv/mel frontend is a STUB that provides
+precomputed frame embeddings (B, 1500, 384). [arXiv:2212.04356]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51865,
+    norm="layernorm", ffn="gelu",
+    enc_dec=True, n_enc_layers=4, enc_seq_len=1500,
+    frontend="audio_frames",
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)

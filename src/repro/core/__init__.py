@@ -1,0 +1,20 @@
+"""eEnergy-Split core: the paper's contribution as composable JAX modules."""
+from .deployment import (deploy_edge_devices, deploy_kmeans, deploy_gasbac,
+                         uniform_grid_sensors, random_sensors, coverage_ok,
+                         Deployment, build_csr_adjacency, field_side_meters)
+from .trajectory import (plan_tour, greedy_tour_plan, solve_tsp, held_karp,
+                         nearest_neighbor_tour, two_opt, TourPlan)
+from .uav_energy import UAVParams, DEFAULT_UAV, tour_energy
+from .energy import (EnergyTracker, HardwareProfile, RTX_A5000,
+                     JETSON_AGX_ORIN, TPU_V5E, scale_time, roofline_time,
+                     CO2_G_PER_J)
+from .link import LinkConfig, smashed_bytes
+from .split import (Stage, SplitStep, init_stages, apply_stages,
+                    partition_stages, cut_index_for_fraction, split_stack,
+                    merge_stack, stack_cut_index, make_split_train_step,
+                    make_multi_client_round)
+from .fedavg import fedavg, fedavg_stack, fedavg_pmean
+from .adaptive_cut import (profile_cuts_cnn, profile_cuts_transformer,
+                           select_cut, CutChoice)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

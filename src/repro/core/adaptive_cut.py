@@ -1,0 +1,122 @@
+"""Adaptive split-point selection (the paper's §V future work, implemented).
+
+Given a model (CNN stage list or transformer ArchConfig), enumerate cut
+points and pick the one minimizing *client-side energy per batch*:
+
+    E(cut) = T_client(cut) * P_edge + T_link(cut) * P_radio
+
+where T_client comes from an XLA-counted-FLOPs roofline on the edge
+profile (paper Eq. 9 methodology) and T_link = L/R (Eq. 8) with the
+smashed-data bytes L of that cut (optionally int8-compressed). An optional
+``min_client_layers`` floor models the privacy constraint (raw data must
+not leave the device, so at least one layer stays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import build_groups  # noqa: F401 (API surface)
+from .energy import (HardwareProfile, JETSON_AGX_ORIN, RTX_A5000, scale_time)
+from .link import LinkConfig
+from .split import Stage, apply_stages, partition_stages
+
+
+@dataclasses.dataclass(frozen=True)
+class CutChoice:
+    cut_index: int
+    client_fraction: float
+    client_flops: float
+    smashed_bytes: int
+    t_client_s: float
+    t_link_s: float
+    energy_j: float
+
+
+def _flops(fn, *args) -> float:
+    try:
+        c = jax.jit(fn).lower(*args).compile().cost_analysis()
+        return float(c.get("flops", 0.0)) if c else 0.0
+    except Exception:
+        return 0.0
+
+
+def profile_cuts_cnn(stages: Sequence[Stage], params, x,
+                     *, edge: HardwareProfile = JETSON_AGX_ORIN,
+                     link: Optional[LinkConfig] = None,
+                     min_client_layers: int = 1,
+                     bwd_factor: float = 3.0) -> list[CutChoice]:
+    """Energy profile for every admissible cut of a CNN stage list."""
+    link = link or LinkConfig()
+    total_depth = sum(s.depth for s in stages)
+    out = []
+    for k in range(min_client_layers, len(stages)):
+        cs, cp, _, _, _ = (list(stages[:k]), list(params[:k]),
+                           None, None, k)
+        fwd = _flops(lambda p, xx, cs=cs: apply_stages(cs, p, xx), cp, x)
+        smashed = jax.eval_shape(lambda p, xx, cs=cs: apply_stages(cs, p, xx),
+                                 cp, x)
+        sm_bytes = int(smashed.size) * smashed.dtype.itemsize
+        # edge time: fwd + bwd of the prefix, scaled per Eq. 9 methodology
+        t_src = bwd_factor * fwd / (RTX_A5000.fp32_tflops * 1e12)
+        t_client = scale_time(t_src, RTX_A5000, edge)
+        t_link = link.transfer_time_s(2 * sm_bytes, smashed.dtype.itemsize)
+        e = t_client * edge.power_w + t_link * link.radio_power_w
+        out.append(CutChoice(
+            cut_index=k,
+            client_fraction=sum(s.depth for s in stages[:k]) / total_depth,
+            client_flops=fwd, smashed_bytes=sm_bytes,
+            t_client_s=t_client, t_link_s=t_link, energy_j=e))
+    return out
+
+
+def select_cut(choices: Sequence[CutChoice], *,
+               max_link_s: Optional[float] = None) -> CutChoice:
+    """Minimum-energy cut, optionally subject to a per-round link deadline
+    (the UAV hover window from Algorithm 2)."""
+    admissible = [c for c in choices
+                  if max_link_s is None or c.t_link_s <= max_link_s]
+    if not admissible:
+        # fall back: the fastest-link cut even if over deadline
+        return min(choices, key=lambda c: c.t_link_s)
+    return min(admissible, key=lambda c: c.energy_j)
+
+
+def profile_cuts_transformer(cfg, *, batch: int, seq: int,
+                             edge: HardwareProfile = JETSON_AGX_ORIN,
+                             link: Optional[LinkConfig] = None,
+                             bwd_factor: float = 3.0) -> list[CutChoice]:
+    """Analytic cut profile for a transformer ArchConfig: client layers are
+    homogeneous, so per-layer FLOPs ~ 6*params_layer*tokens/3 (fwd) and the
+    smashed tensor is always (batch, seq, d_model)."""
+    link = link or LinkConfig()
+    tokens = batch * seq
+    d = cfg.d_model
+    # per-layer fwd flops (dense approx; MoE uses active experts)
+    if cfg.ssm_kind == "rwkv6":
+        layer_params = 5 * d * d + 2 * d * cfg.d_ff + d * d
+    else:
+        layer_params = (d * cfg.n_heads * cfg.hd
+                        + 2 * d * cfg.n_kv_heads * cfg.hd
+                        + cfg.n_heads * cfg.hd * d)
+        if cfg.n_experts:
+            layer_params += cfg.top_k * 3 * d * (cfg.moe_d_ff or cfg.d_ff)
+        else:
+            layer_params += 3 * d * cfg.d_ff
+    sm_bytes = tokens * d * (2 if cfg.dtype == "bfloat16" else 4)
+    out = []
+    n = cfg.n_enc_layers if cfg.enc_dec else cfg.n_layers
+    for k in range(1, n):
+        fwd = 2.0 * k * layer_params * tokens
+        t_src = bwd_factor * fwd / (RTX_A5000.fp32_tflops * 1e12)
+        t_client = scale_time(t_src, RTX_A5000, edge)
+        t_link = link.transfer_time_s(2 * sm_bytes, 2)
+        e = t_client * edge.power_w + t_link * link.radio_power_w
+        out.append(CutChoice(cut_index=k, client_fraction=k / n,
+                             client_flops=fwd, smashed_bytes=sm_bytes,
+                             t_client_s=t_client, t_link_s=t_link,
+                             energy_j=e))
+    return out

@@ -1,0 +1,45 @@
+"""FedAvg aggregation (paper Algorithm 3, line 19: theta_agg = mean_e theta_e).
+
+Two representations:
+- explicit client axis (leading dim) -> ``fedavg_stack`` (mean + rebroadcast)
+- list of per-client pytrees        -> ``fedavg`` (weighted mean)
+In the SPMD mapping, FedAvg over the `data` mesh axis is a pmean — provided
+as ``fedavg_pmean`` for use inside shard_map'd steps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(client_params: Sequence, weights: Optional[Sequence[float]] = None):
+    n = len(client_params)
+    if weights is None:
+        w = [1.0 / n] * n
+    else:
+        tot = float(sum(weights))
+        w = [float(x) / tot for x in weights]
+
+    def mean_leaf(*leaves):
+        acc = jnp.zeros_like(leaves[0], dtype=jnp.float32)
+        for wi, leaf in zip(w, leaves):
+            acc = acc + wi * leaf.astype(jnp.float32)
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(mean_leaf, *client_params)
+
+
+def fedavg_stack(stacked_params):
+    """Mean over a leading client axis, rebroadcast to every client."""
+    def agg(x):
+        m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+    return jax.tree_util.tree_map(agg, stacked_params)
+
+
+def fedavg_pmean(params, axis_name: str):
+    """SPMD FedAvg: mean over a mesh axis (use inside shard_map)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.pmean(x, axis_name), params)

@@ -1,0 +1,264 @@
+"""Faithful reproduction pipelines: FL baseline vs SL (Algorithm 3).
+
+Multi-client (explicit client list, non-IID partitions, 4 clients x 3
+classes as in §IV-C):
+
+  FL      : each client trains the FULL model on its shard for `local_steps`
+            minibatches; server FedAvg's all client models each global round.
+  SL      : eEnergy-Split / SplitFed — client prefix (cut at SL_{a,b}) runs
+            locally; smashed activations (+labels) go to the server model,
+            which backprops and returns the cut gradient; server params
+            update per client-batch (sequential, as the UAV visits clients
+            one at a time); client prefixes FedAvg every global round.
+
+Both loops meter FLOPs-based client/server energy through EnergyTracker
+(Table III) and the UAV link through LinkConfig (Eq. 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.partition import partition_non_iid
+from ..models.cnn import CNN_BUILDERS, accuracy, cross_entropy_loss
+from ..optim import adamw, apply_updates
+from .energy import (EnergyTracker, HardwareProfile, JETSON_AGX_ORIN,
+                     RTX_A5000, scale_time)
+from .fedavg import fedavg
+from .link import LinkConfig
+from .split import apply_stages, init_stages, partition_stages
+
+
+@dataclasses.dataclass
+class PaperTrainConfig:
+    model: str = "mobilenetv2"
+    num_clients: int = 4
+    classes_per_client: int = 3
+    num_classes: int = 12
+    client_fraction: float = 0.25      # SL_{a,b}: a = client share
+    global_rounds: int = 8
+    local_steps: int = 4
+    batch_size: int = 16
+    lr: float = 1e-3
+    image_size: int = 32
+    compress_link: bool = False
+    seed: int = 0
+
+
+def _flops_of(fn, *args) -> float:
+    """XLA-counted FLOPs of a jitted callable (per invocation)."""
+    try:
+        c = jax.jit(fn).lower(*args).compile().cost_analysis()
+        return float(c.get("flops", 0.0)) if c else 0.0
+    except Exception:
+        return 0.0
+
+
+def _client_batches(x, y, parts, batch_size, steps, rng):
+    """per-client list of `steps` minibatches."""
+    out = []
+    for idx in parts:
+        sel = rng.choice(idx, size=(steps, min(batch_size, len(idx))),
+                         replace=True)
+        out.append([(x[s], y[s]) for s in sel])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FL baseline
+# ---------------------------------------------------------------------------
+
+def train_fl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
+    stages = CNN_BUILDERS[cfg.model](cfg.num_classes)
+    key = jax.random.PRNGKey(cfg.seed)
+    global_params = init_stages(key, stages)
+    opt = adamw(cfg.lr)
+    parts = partition_non_iid(np.asarray(y_train), cfg.num_clients,
+                              cfg.classes_per_client,
+                              num_classes=cfg.num_classes, seed=cfg.seed)
+    rng = np.random.RandomState(cfg.seed)
+    tracker_c = EnergyTracker(JETSON_AGX_ORIN)
+    tracker_s = EnergyTracker(RTX_A5000)
+
+    @jax.jit
+    def local_step(params, opt_state, bx, by):
+        def loss_fn(p):
+            return cross_entropy_loss(apply_stages(stages, p, bx), by)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    sample = (x_train[:cfg.batch_size], y_train[:cfg.batch_size])
+    step_flops = _flops_of(
+        lambda p, bx, by: jax.grad(
+            lambda q: cross_entropy_loss(apply_stages(stages, q, bx), by))(p),
+        global_params, *sample)
+
+    history = []
+    for rnd in range(cfg.global_rounds):
+        batches = _client_batches(x_train, y_train, parts, cfg.batch_size,
+                                  cfg.local_steps, rng)
+        client_models = []
+        for ci in range(cfg.num_clients):
+            params = jax.tree_util.tree_map(jnp.copy, global_params)
+            opt_state = opt.init(params)
+            for bx, by in batches[ci]:
+                params, opt_state, loss = local_step(params, opt_state, bx, by)
+                # full fwd+bwd on the edge device (Jetson-scaled via Eq. 9)
+                t_src = _roofline_s(step_flops, RTX_A5000)
+                tracker_c.track_time(f"r{rnd}/c{ci}",
+                                     scale_time(t_src, RTX_A5000,
+                                                JETSON_AGX_ORIN))
+            client_models.append(params)
+        global_params = fedavg(client_models)
+        # server cost: aggregation only (negligible flops, small time)
+        tracker_s.track_time(f"r{rnd}/agg", 1e-3)
+        history.append(_evaluate(stages, global_params, x_test, y_test))
+    return {"params": global_params, "history": history,
+            "client_energy": tracker_c.total(), "server_energy": tracker_s.total(),
+            "metrics": history[-1], "step_flops": step_flops}
+
+
+# ---------------------------------------------------------------------------
+# SL (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def train_sl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
+    stages = CNN_BUILDERS[cfg.model](cfg.num_classes)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_stages(key, stages)
+    cs, cp0, ss, sp, k = partition_stages(stages, params, cfg.client_fraction)
+    opt_c, opt_s = adamw(cfg.lr), adamw(cfg.lr)
+    parts = partition_non_iid(np.asarray(y_train), cfg.num_clients,
+                              cfg.classes_per_client,
+                              num_classes=cfg.num_classes, seed=cfg.seed)
+    rng = np.random.RandomState(cfg.seed)
+    tracker_c = EnergyTracker(JETSON_AGX_ORIN)
+    tracker_s = EnergyTracker(RTX_A5000)
+    link = LinkConfig(compress="int8" if cfg.compress_link else "none")
+    link_bytes_total = 0.0
+
+    client_params = [jax.tree_util.tree_map(jnp.copy, cp0)
+                     for _ in range(cfg.num_clients)]
+    client_opts = [opt_c.init(cp0) for _ in range(cfg.num_clients)]
+    server_params = sp
+    server_opt = opt_s.init(sp)
+
+    maybe_compress = None
+    if cfg.compress_link:
+        from ..kernels.quant.ops import link_compress as maybe_compress
+
+    @jax.jit
+    def split_step(cp, cop, spar, sop, bx, by):
+        def loss_fn(cp_, sp_):
+            smashed = apply_stages(cs, cp_, bx)
+            if maybe_compress is not None:
+                smashed = maybe_compress(smashed)
+            logits = apply_stages(ss, sp_, smashed)
+            return cross_entropy_loss(logits, by), smashed
+        (loss, smashed), (gc, gs) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(cp, spar)
+        upc, cop = opt_c.update(gc, cop, cp)
+        ups, sop = opt_s.update(gs, sop, spar)
+        return (apply_updates(cp, upc), cop, apply_updates(spar, ups), sop,
+                loss, smashed)
+
+    # FLOP accounting split by tier
+    sample = (x_train[:cfg.batch_size], y_train[:cfg.batch_size])
+    fl_client = _flops_of(
+        lambda p, bx: apply_stages(cs, p, bx), cp0, sample[0])
+    smashed_shape = jax.eval_shape(lambda p, bx: apply_stages(cs, p, bx),
+                                   cp0, sample[0])
+    fl_server = _flops_of(
+        lambda p, sm, by: jax.grad(
+            lambda q: cross_entropy_loss(apply_stages(ss, q, sm), by))(p),
+        sp, jnp.zeros(smashed_shape.shape, smashed_shape.dtype), sample[1])
+
+    history = []
+    for rnd in range(cfg.global_rounds):
+        batches = _client_batches(x_train, y_train, parts, cfg.batch_size,
+                                  cfg.local_steps, rng)
+        for step in range(cfg.local_steps):
+            for ci in range(cfg.num_clients):
+                bx, by = batches[ci][step]
+                (client_params[ci], client_opts[ci], server_params,
+                 server_opt, loss, smashed) = split_step(
+                    client_params[ci], client_opts[ci], server_params,
+                    server_opt, bx, by)
+                # client: fwd + bwd of the prefix ~ 3x prefix fwd flops
+                t_src = _roofline_s(3 * fl_client, RTX_A5000)
+                tracker_c.track_time(
+                    f"r{rnd}/c{ci}", scale_time(t_src, RTX_A5000,
+                                                JETSON_AGX_ORIN))
+                tracker_s.track_time(f"r{rnd}/c{ci}",
+                                     _roofline_s(fl_server, RTX_A5000))
+                sm_bytes = smashed.size * smashed.dtype.itemsize
+                link_bytes_total += 2 * link.wire_bytes(
+                    sm_bytes, smashed.dtype.itemsize)  # fwd + grad return
+        # FedAvg of client prefixes (Alg. 3 line 19)
+        avg = fedavg(client_params)
+        client_params = [jax.tree_util.tree_map(jnp.copy, avg)
+                         for _ in range(cfg.num_clients)]
+        history.append(_evaluate_split(cs, avg, ss, server_params,
+                                       x_test, y_test))
+    return {"client_params": client_params[0], "server_params": server_params,
+            "history": history, "metrics": history[-1],
+            "client_energy": tracker_c.total(),
+            "server_energy": tracker_s.total(),
+            "link_bytes": link_bytes_total,
+            "link_time_s": link.transfer_time_s(link_bytes_total, 1),
+            "cut_index": k,
+            "client_flops": fl_client, "server_flops": fl_server}
+
+
+def _roofline_s(flops: float, hw: HardwareProfile) -> float:
+    return flops / (hw.fp32_tflops * 1e12)
+
+
+# ---------------------------------------------------------------------------
+# metrics (paper Fig. 3 radar: Acc / Precision / Recall / F1 / MCC)
+# ---------------------------------------------------------------------------
+
+def classification_metrics(logits: jax.Array, labels: jax.Array,
+                           num_classes: int) -> dict:
+    pred = np.asarray(logits.argmax(-1))
+    y = np.asarray(labels)
+    acc = float((pred == y).mean())
+    precs, recs, f1s = [], [], []
+    for c in range(num_classes):
+        tp = float(((pred == c) & (y == c)).sum())
+        fp = float(((pred == c) & (y != c)).sum())
+        fn = float(((pred != c) & (y == c)).sum())
+        p = tp / (tp + fp) if tp + fp else 0.0
+        r = tp / (tp + fn) if tp + fn else 0.0
+        precs.append(p)
+        recs.append(r)
+        f1s.append(2 * p * r / (p + r) if p + r else 0.0)
+    # multiclass MCC
+    n = len(y)
+    t_k = np.bincount(y, minlength=num_classes).astype(float)
+    p_k = np.bincount(pred, minlength=num_classes).astype(float)
+    c = float((pred == y).sum())
+    s2 = n * n
+    num = c * n - float(t_k @ p_k)
+    den = np.sqrt(max(s2 - float(p_k @ p_k), 0.0)) * \
+        np.sqrt(max(s2 - float(t_k @ t_k), 0.0))
+    mcc = num / den if den else 0.0
+    return {"accuracy": acc, "precision": float(np.mean(precs)),
+            "recall": float(np.mean(recs)), "f1": float(np.mean(f1s)),
+            "mcc": float(mcc)}
+
+
+def _evaluate(stages, params, x_test, y_test) -> dict:
+    logits = apply_stages(stages, params, x_test)
+    return classification_metrics(logits, y_test, int(logits.shape[-1]))
+
+
+def _evaluate_split(cs, cp, ss, sp, x_test, y_test) -> dict:
+    logits = apply_stages(ss, sp, apply_stages(cs, cp, x_test))
+    return classification_metrics(logits, y_test, int(logits.shape[-1]))

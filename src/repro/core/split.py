@@ -1,0 +1,219 @@
+"""Split learning core — paper Algorithm 3 (SplitFed pattern), generalized.
+
+Two composition styles are supported:
+
+1. **Stage lists** (heterogeneous stacks — the paper's CNNs): a model is a
+   list of ``Stage(init, apply, name)``; ``partition_stages`` cuts it into
+   client/server prefix/suffix at a layer fraction. Used by the faithful
+   reproduction benches.
+
+2. **Stacked blocks** (homogeneous transformer stacks, scan-over-layers):
+   block params carry a leading n_layers axis; ``split_stack`` slices that
+   axis at the cut index. Used by the 10 assigned architectures, where the
+   cut is additionally a sharding boundary (client prefix: pure DP; server
+   suffix: DP x TP) — see DESIGN.md §3.
+
+The split train step is ONE differentiable program: client forward ->
+(link: sharding-constraint boundary whose bytes = smashed data L) -> server
+forward + loss; ``jax.grad`` over (params_c, params_s) yields exactly the
+distributed backward of Algorithm 3. The U-shaped variant keeps labels (and
+the final head) on the client so labels never cross the link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# 1. stage lists (CNN repro)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str
+    init: Callable[[jax.Array], Params]
+    apply: Callable[[Params, jax.Array], jax.Array]
+    # relative depth weight for cut placement (a "stage" may hold several
+    # paper-layers, e.g. a ResNet group of 2 blocks)
+    depth: int = 1
+
+
+def init_stages(key: jax.Array, stages: Sequence[Stage]) -> list[Params]:
+    keys = jax.random.split(key, len(stages))
+    return [s.init(k) for s, k in zip(stages, keys)]
+
+
+def apply_stages(stages: Sequence[Stage], params: Sequence[Params], x: jax.Array) -> jax.Array:
+    for s, p in zip(stages, params):
+        x = s.apply(p, x)
+    return x
+
+
+def cut_index_for_fraction(stages: Sequence[Stage], client_fraction: float) -> int:
+    """Smallest prefix whose depth-share >= client_fraction (paper's SL_{a,b}:
+    client holds a% of layers). Always leaves >=1 stage per side."""
+    total = sum(s.depth for s in stages)
+    acc = 0
+    for i, s in enumerate(stages):
+        acc += s.depth
+        if acc / total >= client_fraction - 1e-9:
+            return min(max(i + 1, 1), len(stages) - 1)
+    return len(stages) - 1
+
+
+class SplitStages(NamedTuple):
+    client: list  # [(Stage, params)]
+    server: list
+
+    def client_apply(self, params_c, x):
+        for s, _ in self.client:
+            pass
+        raise NotImplementedError  # use functions below
+
+
+def partition_stages(stages: Sequence[Stage], params: Sequence[Params],
+                     client_fraction: float) -> tuple[list, list, list, list, int]:
+    """Returns (client_stages, client_params, server_stages, server_params, k)."""
+    k = cut_index_for_fraction(stages, client_fraction)
+    return list(stages[:k]), list(params[:k]), list(stages[k:]), list(params[k:]), k
+
+
+# ---------------------------------------------------------------------------
+# 2. stacked blocks (transformers; scan-over-layers)
+# ---------------------------------------------------------------------------
+
+def split_stack(stacked: Params, k: int) -> tuple[Params, Params]:
+    """Slice every leaf's leading (layer) axis at k."""
+    client = jax.tree_util.tree_map(lambda x: x[:k], stacked)
+    server = jax.tree_util.tree_map(lambda x: x[k:], stacked)
+    return client, server
+
+
+def merge_stack(client: Params, server: Params) -> Params:
+    return jax.tree_util.tree_map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                                  client, server)
+
+
+def stack_cut_index(n_layers: int, client_fraction: float,
+                    *, max_client: Optional[int] = None) -> int:
+    """Cut index for a homogeneous stack; optionally clamped (e.g. MoE archs
+    force the cut at/below the first MoE layer — experts can't live on the
+    edge tier, DESIGN.md §4)."""
+    k = max(1, min(n_layers - 1, int(math.ceil(client_fraction * n_layers))))
+    if max_client is not None:
+        k = min(k, max(1, max_client))
+    return k
+
+
+# ---------------------------------------------------------------------------
+# split train/eval steps (differentiable end-to-end)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SplitStep:
+    """Builds jit-able split-learning steps from client/server apply fns.
+
+    client_fwd(params_c, inputs)            -> smashed
+    server_loss(params_s, smashed, targets) -> (loss, aux)
+    For the U-shaped variant additionally:
+    server_body(params_s, smashed)          -> features   (no labels server-side)
+    client_head_loss(params_c, feats, tgts) -> (loss, aux)
+    """
+    client_fwd: Callable
+    server_loss: Optional[Callable] = None
+    server_body: Optional[Callable] = None
+    client_head_loss: Optional[Callable] = None
+    link_constraint: Optional[Callable] = None  # smashed -> smashed (sharding)
+    variant: str = "vanilla"  # "vanilla" | "ushaped"
+
+    def loss_fn(self, params_c, params_s, batch):
+        inputs, targets = batch["inputs"], batch["targets"]
+        smashed = self.client_fwd(params_c, inputs)
+        if self.link_constraint is not None:
+            smashed = self.link_constraint(smashed)
+        if self.variant == "vanilla":
+            loss, aux = self.server_loss(params_s, smashed, targets)
+        elif self.variant == "ushaped":
+            feats = self.server_body(params_s, smashed)
+            if self.link_constraint is not None:
+                feats = self.link_constraint(feats)
+            loss, aux = self.client_head_loss(params_c, feats, targets)
+        else:
+            raise ValueError(self.variant)
+        aux = dict(aux)
+        aux["smashed_elems"] = jnp.asarray(
+            sum(x.size for x in jax.tree_util.tree_leaves(smashed)), jnp.float32)
+        return loss, aux
+
+    def grads(self, params_c, params_s, batch):
+        (loss, aux), (g_c, g_s) = jax.value_and_grad(
+            self.loss_fn, argnums=(0, 1), has_aux=True)(params_c, params_s, batch)
+        return loss, aux, g_c, g_s
+
+
+def make_split_train_step(step: SplitStep, opt_c, opt_s):
+    """Returns f(params_c, params_s, oc, os, batch) -> (params_c, params_s, oc, os, metrics)."""
+    from ..optim.optimizers import apply_updates
+
+    def train_step(params_c, params_s, oc, os_, batch):
+        loss, aux, g_c, g_s = step.grads(params_c, params_s, batch)
+        up_c, oc = opt_c.update(g_c, oc, params_c)
+        up_s, os_ = opt_s.update(g_s, os_, params_s)
+        params_c = apply_updates(params_c, up_c)
+        params_s = apply_updates(params_s, up_s)
+        metrics = {"loss": loss, **aux}
+        return params_c, params_s, oc, os_, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# multi-client (faithful Algorithm 3: r local split rounds, then FedAvg)
+# ---------------------------------------------------------------------------
+
+def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int):
+    """One *global* round of Algorithm 3 over an explicit client axis.
+
+    params_c carries a leading client axis (vmap); the single server model is
+    shared — its gradient is summed over clients sequentially (the UAV visits
+    clients one at a time, so server updates are sequential per client batch,
+    matching Alg. 3's inner loop). After r local rounds per client, client
+    params are FedAvg'd (leading-axis mean) and re-broadcast.
+    """
+    from ..optim.optimizers import apply_updates
+    from .fedavg import fedavg_stack
+
+    def one_client_update(carry, client_state):
+        params_s, os_ = carry
+        params_c, oc, batch = client_state
+        loss, aux, g_c, g_s = step.grads(params_c, params_s, batch)
+        up_c, oc = opt_c.update(g_c, oc, params_c)
+        params_c = apply_updates(params_c, up_c)
+        up_s, os_ = opt_s.update(g_s, os_, params_s)
+        params_s = apply_updates(params_s, up_s)
+        return (params_s, os_), (params_c, oc, loss)
+
+    def global_round(params_c_stack, params_s, oc_stack, os_, batches):
+        # batches: pytree with leading (clients, local_rounds) axes
+        losses = []
+        for r in range(local_rounds):
+            def scan_body(carry, xs):
+                pc, oc_i, batch = xs
+                return one_client_update(carry, (pc, oc_i, batch))
+            batch_r = jax.tree_util.tree_map(lambda x: x[:, r], batches)
+            (params_s, os_), (params_c_stack, oc_stack, loss_c) = jax.lax.scan(
+                scan_body, (params_s, os_),
+                (params_c_stack, oc_stack, batch_r))
+            losses.append(loss_c)
+        # FedAvg of client sub-models (Alg. 3 line 19)
+        params_c_stack = fedavg_stack(params_c_stack)
+        return params_c_stack, params_s, oc_stack, os_, jnp.stack(losses)
+
+    return global_round

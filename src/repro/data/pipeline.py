@@ -1,0 +1,49 @@
+"""Batching / sharding pipeline.
+
+CPU-side numpy batching with optional device sharding via
+``jax.device_put(x, NamedSharding(mesh, spec))`` — the same call pattern a
+real multi-host input pipeline uses per-process.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class BatchIterator:
+    """Epoch-shuffling minibatch iterator over in-memory arrays."""
+
+    def __init__(self, arrays: tuple, batch_size: int, *, seed: int = 0,
+                 drop_last: bool = True):
+        self.arrays = tuple(np.asarray(a) for a in arrays)
+        n = self.arrays[0].shape[0]
+        assert all(a.shape[0] == n for a in self.arrays)
+        self.n = n
+        self.batch_size = batch_size
+        self.drop_last = drop_last
+        self.rng = np.random.RandomState(seed)
+
+    def __iter__(self) -> Iterator[tuple]:
+        order = self.rng.permutation(self.n)
+        stop = self.n - (self.n % self.batch_size) if self.drop_last else self.n
+        for i in range(0, stop, self.batch_size):
+            sel = order[i:i + self.batch_size]
+            yield tuple(a[sel] for a in self.arrays)
+
+    def steps_per_epoch(self) -> int:
+        return self.n // self.batch_size
+
+
+def shard_batch(batch, mesh, spec: Optional[P] = None):
+    """Place a host batch onto the mesh, sharded on the 'data' axis."""
+    if spec is None:
+        spec = P(("pod", "data") if "pod" in mesh.axis_names else "data")
+
+    def put(x):
+        s = NamedSharding(mesh, P(*spec) if not isinstance(spec, P) else spec)
+        return jax.device_put(x, s)
+
+    return jax.tree_util.tree_map(put, batch)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window, GQA-ready).
+
+Canonical TPU tiling: grid (B, H, nq, nk) with ``dimension_semantics``
+("parallel","parallel","parallel","arbitrary") — the innermost kv axis runs
+sequentially per q block, carrying the online-softmax state (m, l, acc) in
+VMEM scratch. Block shapes are explicit BlockSpecs; q/kv block defaults
+(256, 512) keep the working set (q + k + v + acc tiles) well under VMEM
+while the (bq x bk) score tile feeds the MXU with 128-aligned dims.
+
+Causal + window masking is done per-tile; fully-masked tiles are skipped
+with @pl.when so SWA costs O(S * window).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, bq: int, bk: int, nk: int, causal: bool,
+                  window):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = iq * bq
+    k_lo = ik * bk
+    # tile-level skip: no query in this block can see any key in that block
+    live = True
+    if causal:
+        live = k_lo <= q_lo + bq - 1
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None,
+                    block_q: int = 256, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,H,S,D); k,v (B,H,Sk,D) — GQA callers repeat KV heads first.
+    Returns (B,H,S,D)."""
+    b, h, s, d = q.shape
+    sk = k.shape[2]
+    bq = min(block_q, s)
+    bk = min(block_k, sk)
+    while s % bq:
+        bq //= 2
+    while sk % bk:
+        bk //= 2
+    nq, nk = s // bq, sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                               nk=nk, causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel (O(S^2), f32)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q (B,H,S,D); k,v (B,H,Sk,D)."""
+    b, h, s, d = q.shape
+    sk = k.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,46 @@
+"""jit'd wrappers: straight-through int8 link compressor for split learning.
+
+``link_compress`` is differentiable (straight-through estimator): forward
+quantize→dequantize, backward identity — so the split train step can keep
+the compressed link inside one autodiff program (Algorithm 3 with the
+compression future-work enabled).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .int8 import dequantize_int8, quantize_int8
+from .ref import dequantize_int8_ref, quantize_int8_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quant_dequant(x: jax.Array, *, use_pallas: bool = False,
+                  interpret: bool = True) -> jax.Array:
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if use_pallas:
+        q, s = quantize_int8(x2, interpret=interpret)
+        y = dequantize_int8(q, s, out_dtype=x.dtype, interpret=interpret)
+    else:
+        q, s = quantize_int8_ref(x2)
+        y = dequantize_int8_ref(q, s, out_dtype=x.dtype)
+    return y.reshape(shape)
+
+
+@jax.custom_vjp
+def link_compress(x: jax.Array) -> jax.Array:
+    return quant_dequant(x)
+
+
+def _fwd(x):
+    return link_compress(x), None
+
+
+def _bwd(_, g):
+    return (g,)   # straight-through
+
+
+link_compress.defvjp(_fwd, _bwd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the int8 quant/dequant kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8_ref(x: jax.Array):
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(codes: jax.Array, scales: jax.Array, *,
+                        out_dtype=jnp.float32) -> jax.Array:
+    return (codes.astype(jnp.float32) * scales).astype(out_dtype)
+
+
+def roundtrip_error_bound(x: jax.Array) -> jax.Array:
+    """|x - dq(q(x))| <= scale/2 per element."""
+    _, scale = quantize_int8_ref(x)
+    return scale / 2.0

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the RWKV-6 scan kernel (lax.scan over T)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """r/k/v/w (B,H,T,hd) ; u (H,hd) -> y (B,H,T,hd) f32."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    b, h, t, hd = rf.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                          # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + uf[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (rf, kf, vf, wf))
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, ys = lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3)

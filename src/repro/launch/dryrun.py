@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+For each combination this prints/records:
+  - compiled.memory_analysis()  (per-device bytes: does it fit a v5e?)
+  - compiled.cost_analysis()    (HLO FLOPs / bytes for the roofline)
+  - collective bytes parsed from the partitioned HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute), the roofline's third term.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+Results append to ``results/dryrun/<arch>__<shape>__<mesh>.json``.
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from ..configs import ARCHS, INPUT_SHAPES, SplitConfig          # noqa: E402
+from .mesh import make_production_mesh                          # noqa: E402
+from .steps import (build_step, build_body_probes,              # noqa: E402
+                    shape_supported)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,4096,320]' -> bytes. '(bf16[..], f32[..])' -> sum."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in partitioned HLO.
+
+    XLA names instructions after their op ('%all-gather.202 = f32[...]...'),
+    so we key on the lhs name; async '-done' halves are skipped to avoid
+    double counting their '-start'.
+    """
+    out = {op: {"count": 0, "bytes": 0} for op in _COLLECTIVE_OPS}
+    pat = re.compile(
+        r"^\s*%?(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start|-done)?[\w.\-]*\s*=\s*(.*)$")
+    for line in hlo_text.splitlines():
+        m = pat.match(line)
+        if not m:
+            continue
+        op, variant, rhs = m.group(1), m.group(2), m.group(3)
+        if variant == "-done":
+            continue
+        # output shape(s) = everything before the op token on the rhs
+        idx = rhs.find(op)
+        shape_str = rhs[:idx] if idx > 0 else rhs
+        b = _shape_bytes(shape_str)
+        out[op]["count"] += 1
+        out[op]["bytes"] += b
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            outdir: str = "results/dryrun", split: SplitConfig | None = None,
+            tag: str = "", opts=None) -> dict:
+    cfg = ARCHS[arch]
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "tag": tag or "baseline"}
+    if opts is not None:
+        rec["opts"] = {k: getattr(opts, k) for k in
+                       ("seq_parallel_client", "seq_parallel_server",
+                        "moe_groups", "kv_dtype", "donate", "client_expert_dp")}
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        _save(rec, outdir)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        built = build_step(cfg, shape_name, mesh, split=split, opts=opts)
+        with mesh:
+            jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                             out_shardings=built.out_shardings,
+                             donate_argnums=built.donate_argnums)
+            lowered = jitted.lower(*built.args_sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+        rec.update({
+            "status": "ok",
+            "meta": built.meta,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops": float(cost.get("flops", -1.0)) if cost else -1.0,
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+            "cost_raw": {k: float(v) for k, v in (cost or {}).items()
+                         if isinstance(v, (int, float))},
+            "collectives": coll,
+            "memory": _mem_dict(mem),
+            "hlo_bytes": len(hlo),
+        })
+
+        # scan-body correction: XLA cost analysis visits a while body once,
+        # so per-layer group bodies are probed separately and scaled by
+        # (count - 1). See build_body_probes docstring.
+        try:
+            corr_f = rec["flops"]
+            corr_b = rec["bytes_accessed"]
+            corr_c = coll["total_bytes"]
+            bodies = []
+            with mesh:
+                for probe in build_body_probes(
+                        cfg, shape_name_to_shape(shape_name), mesh,
+                        split=split, opts=opts):
+                    pj = jax.jit(probe.fn, in_shardings=probe.in_shardings)
+                    pc = pj.lower(*probe.args_sds).compile()
+                    pcost = pc.cost_analysis() or {}
+                    pcoll = collective_bytes(pc.as_text())
+                    bf = float(pcost.get("flops", 0.0))
+                    bb = float(pcost.get("bytes accessed", 0.0))
+                    bodies.append({"group": probe.group_index,
+                                   "kind": probe.kind, "count": probe.count,
+                                   "flops": bf, "bytes": bb,
+                                   "coll_bytes": pcoll["total_bytes"]})
+                    mult = max(probe.count - 1, 0)
+                    corr_f += mult * bf
+                    corr_b += mult * bb
+                    corr_c += mult * pcoll["total_bytes"]
+            rec["bodies"] = bodies
+            rec["flops_corrected"] = corr_f
+            rec["bytes_corrected"] = corr_b
+            rec["coll_bytes_corrected"] = corr_c
+        except Exception as e:
+            rec["body_probe_error"] = f"{type(e).__name__}: {e}"
+    except Exception as e:  # record failures — they are bugs to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _save(rec, outdir)
+    return rec
+
+
+def shape_name_to_shape(name: str):
+    return INPUT_SHAPES[name]
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "host_argument_size_in_bytes",
+                 "peak_memory_in_bytes"):
+        if hasattr(mem, attr):
+            try:
+                out[attr] = int(getattr(mem, attr))
+            except Exception:
+                pass
+    return out
+
+
+def _save(rec: dict, outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    slug = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if rec.get("tag") and rec["tag"] != "baseline":
+        slug += f"__{rec['tag']}"
+    path = os.path.join(outdir, slug.replace("/", "_") + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        extra = (f" flops={rec['flops']:.3e} coll={rec['collectives']['total_bytes']:.3e}B"
+                 f" compile={rec['compile_s']}s")
+    elif status == "error":
+        extra = " " + rec["error"].splitlines()[0][:120]
+    print(f"[dryrun] {slug}: {status}{extra}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--seq-parallel-client", action="store_true")
+    ap.add_argument("--seq-parallel-server", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=1)
+    ap.add_argument("--kv-dtype", default="param")
+    ap.add_argument("--donate", action="store_true")
+    args = ap.parse_args()
+
+    from .steps import PerfOptions
+    opts = None
+    if (args.seq_parallel_client or args.seq_parallel_server
+            or args.moe_groups != 1 or args.kv_dtype != "param"
+            or args.donate):
+        opts = PerfOptions(seq_parallel_client=args.seq_parallel_client,
+                           seq_parallel_server=args.seq_parallel_server,
+                           moe_groups=args.moe_groups,
+                           kv_dtype=args.kv_dtype, donate=args.donate)
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.skip_existing:
+                    slug = (f"{arch}__{shape}__"
+                            f"{'pod2x16x16' if mp else 'pod16x16'}.json")
+                    if os.path.exists(os.path.join(args.outdir, slug)):
+                        print(f"[dryrun] {slug}: cached", flush=True)
+                        n_ok += 1
+                        continue
+                rec = run_one(arch, shape, multi_pod=mp, outdir=args.outdir,
+                              tag=args.tag, opts=opts)
+                n_ok += rec["status"] == "ok"
+                n_err += rec["status"] == "error"
+                n_skip += rec["status"] == "skipped"
+    print(f"[dryrun] done ok={n_ok} err={n_err} skip={n_skip}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Serving driver: prefill a batch of prompts, then batched greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+        --batch 4 --prompt-len 32 --gen 32
+
+Exercises the same serve_step the dry-run lowers (one token vs KV cache),
+including the split-learning client/server tiers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS
+from ..data.synthetic import synthetic_tokens
+from ..models.transformer import (decode_state_init, default_cut_layer,
+                                  model_decode_step, model_init)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--client-fraction", type=float, default=0.15)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.enc_dec:
+        raise SystemExit("use examples/whisper_serve.py for enc-dec serving")
+    cut = default_cut_layer(cfg, args.client_fraction)
+    max_len = args.prompt_len + args.gen
+
+    key = jax.random.PRNGKey(0)
+    params = model_init(cfg, key, cut_layer=cut)
+    prompts = synthetic_tokens(key, args.batch, args.prompt_len, cfg.vocab)
+
+    step_fn = jax.jit(
+        lambda p, s, t, pos: model_decode_step(cfg, p, s, t, pos,
+                                               cut_layer=cut))
+
+    state = decode_state_init(cfg, args.batch, max_len, cut_layer=cut)
+    # prefill via repeated decode steps (KV-cache exactness is tested against
+    # the full forward; a fused prefill path exists in launch.steps)
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, state = step_fn(params, state, prompts[:, t:t + 1],
+                                jnp.asarray(t, jnp.int32))
+    toks = []
+    for t in range(args.prompt_len, max_len):
+        nxt = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1).astype(jnp.int32)
+        toks.append(nxt)
+        logits, state = step_fn(params, state, nxt[:, None],
+                                jnp.asarray(t, jnp.int32))
+    dt = time.time() - t0
+    gen = jnp.stack(toks, axis=1)
+    tps = args.batch * max_len / dt
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen} "
+          f"wall {dt:.2f}s ({tps:.1f} tok/s incl. prefill)")
+    print(f"[serve] sample generations (first 10 ids): {gen[:, :10].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,490 @@
+"""Step builders: (train | prefill | decode) x (arch x input-shape x mesh).
+
+Produces the jit-able step function plus ShapeDtypeStruct stand-ins and
+NamedShardings for every input/output — the dry-run lowers these without
+allocating anything; the real launchers feed live arrays with the same
+shardings.
+
+Split learning is first-class here: every step is built around the
+``SplitConfig`` cut — client groups get DP-only sharding, server groups get
+2D (fsdp x tp); the smashed activation at the cut is the UAV-link tensor
+(its bytes are what the roofline layer meters as link traffic L).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, InputShape, SplitConfig, INPUT_SHAPES
+from ..models.transformer import (build_groups, decode_state_init,
+                                  default_cut_layer, lm_loss, model_decode_step,
+                                  model_forward, model_init, vocab_padded)
+from ..optim import adamw, apply_updates
+from ..parallel.sharding import (ShardingPolicy, param_pspecs, set_policy,
+                                 FSDP_AXIS, TP_AXIS)
+
+# long-context variant for full-attention archs: block-sparse sliding window
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfOptions:
+    """Beyond-paper performance levers (EXPERIMENTS.md §Perf).
+
+    seq_parallel_client: shard the sequence over the idle 'model' axis
+        during the client-tier phase (weights stay replicated -> still
+        faithful to 'edge devices cannot do TP').
+    seq_parallel_server: same for the server tier (Megatron-SP).
+    moe_groups: GShard-style grouped MoE dispatch (1 = global).
+    kv_dtype: 'param' | 'int8' — quantized KV cache for decode.
+    """
+    seq_parallel_client: bool = False
+    seq_parallel_server: bool = False
+    moe_groups: int = 1
+    kv_dtype: str = "param"
+    donate: bool = False       # alias cache/params in place (serving must)
+    client_expert_dp: bool = False  # expert-parallel client tier over 'data'
+
+    @property
+    def tiers(self) -> tuple:
+        t = ()
+        if self.seq_parallel_client:
+            t += ("client",)
+        if self.seq_parallel_server:
+            t += ("server",)
+        return t
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltStep:
+    name: str
+    fn: Any                    # jit-able python callable
+    args_sds: tuple            # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+    donate_argnums: tuple = ()
+
+
+def _dp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _dp_size(mesh: Mesh) -> int:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return shape.get("pod", 1) * shape.get("data", 1)
+
+
+def effective_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """cfg window, or the block-sparse SWA variant for long_500k on
+    full-attention archs (DESIGN.md §Shape-applicability)."""
+    if cfg.swa_window:
+        return cfg.swa_window
+    if shape.name == "long_500k":
+        return LONG_CONTEXT_WINDOW
+    return None
+
+
+def shape_supported(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    if cfg.enc_dec and shape.name == "long_500k":
+        return False, ("whisper's decoder family tops out at ~448 tokens / "
+                       "30s windows; 524k decode is out of family range "
+                       "(DESIGN.md skip)")
+    return True, ""
+
+
+def tier_fn_for(cfg: ArchConfig, cut_layer: Optional[int], *,
+                client_name: str = "client"):
+    """Maps a param path 'groups/<i>/...' to its split tier."""
+    if cut_layer is None:
+        return lambda path: "server"
+    groups = build_groups(cfg, cut_layer=cut_layer)
+    tiers = [g.tier for g in groups]
+
+    def fn(path: str) -> str:
+        m = re.match(r"groups/(\d+)/", path)
+        if m:
+            t = tiers[int(m.group(1))]
+            return client_name if t == "client" else t
+        if path.startswith("embed"):
+            return client_name   # embedding feeds the client prefix
+        return "server"
+
+    return fn
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _tree_named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: _named(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / state specs
+# ---------------------------------------------------------------------------
+
+def batch_sds(cfg: ArchConfig, shape: InputShape, *, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    d = {}
+    if cfg.frontend == "patch_embed":
+        s_text = s - cfg.frontend_tokens
+        d["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        d["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), cfg.param_dtype)
+    else:
+        d["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.enc_dec:
+        d["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq_len, cfg.d_model), cfg.param_dtype)
+    if with_labels:
+        d["labels"] = jax.ShapeDtypeStruct(d["tokens"].shape, jnp.int32)
+    return d
+
+
+def batch_pspecs(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                 with_labels: bool):
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+    bspec = dp if shape.global_batch % dpn == 0 else None
+    d = {"tokens": P(bspec, None)}
+    if cfg.frontend == "patch_embed":
+        d["patch_embeds"] = P(bspec, None, None)
+    if cfg.enc_dec:
+        d["frames"] = P(bspec, None, None)
+    if with_labels:
+        d["labels"] = P(bspec, None)
+    return d
+
+
+_STATE_RULES = [
+    (r"(k|v)(\d+)?_scale$", "cache_scale"),   # (n,B,C,Kh):    B->data, C->model
+    (r"(^|/)(k|v|k\d+|v\d+)$", "cache"),     # (n,B,C,Kh,hd): B->data, C->model
+    (r"(^|/)(ck|cv)$", "cache"),
+    (r"(^|/)S$", "rwkv_S"),                  # (n,B,H,hd,hd): B->data, H->model
+    (r"(^|/)h\d+$", "mamba_h"),              # (n,B,di,N):   B->data, di->model
+    (r"(^|/)c\d+$", "mamba_conv"),           # (n,B,cw-1,di): B->data, di->model
+    (r"x_prev$", "vec"),                     # (n,B,D):      B->data, D->model
+]
+
+
+def state_pspecs(state_sds, mesh: Mesh):
+    shape_of = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsz, msz = shape_of.get("data", 1), shape_of.get("model", 1)
+
+    def guard(dim, size, ax):
+        return ax if (size > 1 and dim % size == 0) else None
+
+    def spec_for(path: str, shp: tuple) -> P:
+        for pat, kind in _STATE_RULES:
+            if re.search(pat, path):
+                if kind == "cache":
+                    return P(None, guard(shp[1], dsz, "data"),
+                             guard(shp[2], msz, "model"), None, None)
+                if kind == "cache_scale":
+                    return P(None, guard(shp[1], dsz, "data"),
+                             guard(shp[2], msz, "model"), None)
+                if kind == "rwkv_S":
+                    return P(None, guard(shp[1], dsz, "data"),
+                             guard(shp[2], msz, "model"), None, None)
+                if kind == "mamba_h":
+                    return P(None, guard(shp[1], dsz, "data"),
+                             guard(shp[2], msz, "model"), None)
+                if kind == "mamba_conv":
+                    return P(None, guard(shp[1], dsz, "data"), None,
+                             guard(shp[3], msz, "model"))
+                if kind == "vec":
+                    return P(None, guard(shp[1], dsz, "data"),
+                             guard(shp[2], msz, "model"))
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_sds)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append(spec_for(name, tuple(leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                     split: Optional[SplitConfig] = None,
+                     remat: bool = True, lr: float = 1e-4,
+                     opts: Optional[PerfOptions] = None) -> BuiltStep:
+    split = split or SplitConfig()
+    opts = opts or PerfOptions()
+    cut = default_cut_layer(cfg, split.client_fraction)
+    window = effective_window(cfg, shape)
+    opt = adamw(lr, weight_decay=0.01)
+    policy = ShardingPolicy(mesh)
+    tier = tier_fn_for(cfg, cut, client_name=(
+        "client_edp" if opts.client_expert_dp else "client"))
+
+    def step(params, opt_state, batch):
+        with set_policy(policy):
+            def loss_fn(p):
+                return lm_loss(cfg, p, batch, window=window,
+                               cut_layer=cut, remat=remat,
+                               seq_parallel_tiers=opts.tiers,
+                               moe_groups=opts.moe_groups)
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            updates, new_opt = opt.update(grads, opt_state, params)
+            new_params = apply_updates(params, updates)
+            metrics = dict(metrics, loss=loss)
+            return new_params, new_opt, metrics
+
+    params_sds = jax.eval_shape(partial(model_init, cfg, cut_layer=cut),
+                                jax.random.PRNGKey(0))
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    b_sds = batch_sds(cfg, shape, with_labels=True)
+
+    pspecs = param_pspecs(params_sds, mesh, tier_fn=tier)
+    # optimizer moments follow the param specs; step counter replicated
+    from ..optim.optimizers import OptState
+    ospecs = OptState(step=P(),
+                      mu=param_pspecs(params_sds, mesh, tier_fn=tier),
+                      nu=param_pspecs(params_sds, mesh, tier_fn=tier))
+    bspecs = batch_pspecs(cfg, shape, mesh, with_labels=True)
+
+    in_sh = (_tree_named(mesh, pspecs), _tree_named(mesh, ospecs),
+             _tree_named(mesh, bspecs))
+    out_sh = (_tree_named(mesh, pspecs), _tree_named(mesh, ospecs), None)
+    return BuiltStep(name="train_step", fn=step,
+                     args_sds=(params_sds, opt_sds, b_sds),
+                     in_shardings=in_sh, out_shardings=out_sh,
+                     meta={"cut_layer": cut, "window": window,
+                           "kind": "train"},
+                     donate_argnums=(0, 1) if opts.donate else ())
+
+
+def build_prefill_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                       split: Optional[SplitConfig] = None,
+                       opts: Optional[PerfOptions] = None) -> BuiltStep:
+    split = split or SplitConfig()
+    opts = opts or PerfOptions()
+    cut = default_cut_layer(cfg, split.client_fraction)
+    window = effective_window(cfg, shape)
+    policy = ShardingPolicy(mesh)
+    tier = tier_fn_for(cfg, cut, client_name=(
+        "client_edp" if opts.client_expert_dp else "client"))
+
+    def step(params, batch):
+        with set_policy(policy):
+            logits, aux = model_forward(cfg, params, batch, window=window,
+                                        cut_layer=cut,
+                                        seq_parallel_tiers=opts.tiers,
+                                        moe_groups=opts.moe_groups)
+            return logits
+
+    params_sds = jax.eval_shape(partial(model_init, cfg, cut_layer=cut),
+                                jax.random.PRNGKey(0))
+    b_sds = batch_sds(cfg, shape, with_labels=False)
+    pspecs = param_pspecs(params_sds, mesh, tier_fn=tier)
+    bspecs = batch_pspecs(cfg, shape, mesh, with_labels=False)
+    dp = _dp_axes(mesh)
+    out_spec = P(dp if shape.global_batch % _dp_size(mesh) == 0 else None,
+                 None, TP_AXIS if vocab_padded(cfg) % 16 == 0 else None)
+    return BuiltStep(name="prefill_step", fn=step,
+                     args_sds=(params_sds, b_sds),
+                     in_shardings=(_tree_named(mesh, pspecs),
+                                   _tree_named(mesh, bspecs)),
+                     out_shardings=_named(mesh, out_spec),
+                     meta={"cut_layer": cut, "window": window,
+                           "kind": "prefill"})
+
+
+def build_decode_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                      split: Optional[SplitConfig] = None,
+                      opts: Optional[PerfOptions] = None) -> BuiltStep:
+    split = split or SplitConfig()
+    opts = opts or PerfOptions()
+    cut = default_cut_layer(cfg, split.client_fraction)
+    window = effective_window(cfg, shape)
+    policy = ShardingPolicy(mesh)
+    tier = tier_fn_for(cfg, cut, client_name=(
+        "client_edp" if opts.client_expert_dp else "client"))
+    b = shape.global_batch
+
+    def step(params, state, token, pos):
+        with set_policy(policy):
+            logits, new_state = model_decode_step(
+                cfg, params, state, token, pos, window=window, cut_layer=cut)
+            return logits, new_state
+
+    params_sds = jax.eval_shape(partial(model_init, cfg, cut_layer=cut),
+                                jax.random.PRNGKey(0))
+    state_sds = jax.eval_shape(
+        partial(decode_state_init, cfg, b, shape.seq_len, window=window,
+                cut_layer=cut, kv_dtype=opts.kv_dtype))
+    token_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    pspecs = param_pspecs(params_sds, mesh, tier_fn=tier)
+    sspecs = state_pspecs(state_sds, mesh)
+    dpn = _dp_size(mesh)
+    dp = _dp_axes(mesh)
+    tok_spec = P(dp if b % dpn == 0 else ("data" if b % 16 == 0 else None), None)
+    logit_spec = P(tok_spec[0], None, TP_AXIS)
+
+    in_sh = (_tree_named(mesh, pspecs), _tree_named(mesh, sspecs),
+             _named(mesh, tok_spec), _named(mesh, P()))
+    out_sh = (_named(mesh, logit_spec), _tree_named(mesh, sspecs))
+    return BuiltStep(name="serve_step", fn=step,
+                     args_sds=(params_sds, state_sds, token_sds, pos_sds),
+                     in_shardings=in_sh, out_shardings=out_sh,
+                     meta={"cut_layer": cut, "window": window,
+                           "kind": "decode"},
+                     donate_argnums=(1,) if opts.donate else ())
+
+
+def build_step(cfg: ArchConfig, shape_name: str, mesh: Mesh, *,
+               split: Optional[SplitConfig] = None,
+               opts: Optional[PerfOptions] = None, **kw) -> BuiltStep:
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name}: {why}")
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, split=split, opts=opts, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, split=split, opts=opts)
+    return build_decode_step(cfg, shape, mesh, split=split, opts=opts)
+
+
+# ---------------------------------------------------------------------------
+# per-group body probes: exact scan-body costs
+#
+# XLA's HloCostAnalysis visits a while-loop body ONCE (trip count ignored),
+# and the partitioned HLO text prints it once — so the main lowering under-
+# counts scanned layers by ~count_g per group. Each probe lowers ONE layer
+# of one group with the production shardings; the dry-run then corrects:
+#     total = main + sum_g (count_g - 1) * body_g
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BodyProbe:
+    group_index: int
+    kind: str
+    count: int                  # multiplicity in the real model
+    fn: Any
+    args_sds: tuple
+    in_shardings: tuple
+
+
+def build_body_probes(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                      split: Optional[SplitConfig] = None,
+                      opts: Optional[PerfOptions] = None) -> list[BodyProbe]:
+    from ..models.transformer import (build_groups, group_init, group_apply,
+                                      decode_state_init, _group_decode)
+    split = split or SplitConfig()
+    opts = opts or PerfOptions()
+    cut = default_cut_layer(cfg, split.client_fraction)
+    window = effective_window(cfg, shape)
+    groups = build_groups(cfg, cut_layer=cut)
+    policy = ShardingPolicy(mesh)
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+    b = shape.global_batch
+    bspec = dp if b % dpn == 0 else None
+
+    probes = []
+    state_sds_all = None
+    if shape.kind == "decode":
+        state_sds_all = jax.eval_shape(partial(
+            decode_state_init, cfg, b, shape.seq_len, window=window,
+            cut_layer=cut, kv_dtype=opts.kv_dtype))
+
+    for gi, g in enumerate(groups):
+        g1 = dataclasses.replace(g, count=1)
+        params_sds = jax.eval_shape(
+            lambda k, g1=g1: group_init(k, cfg, g1), jax.random.PRNGKey(0))
+        probe_tier = g.tier
+        if probe_tier == "client" and opts.client_expert_dp:
+            probe_tier = "client_edp"
+        pspecs = param_pspecs(params_sds, mesh, tier=probe_tier)
+        seq = cfg.enc_seq_len if g.kind == "enc" else shape.seq_len
+        if cfg.frontend == "patch_embed" and g.kind != "enc":
+            seq = shape.seq_len  # patches included in seq budget
+
+        if shape.kind in ("train", "prefill"):
+            x_sds = jax.ShapeDtypeStruct((b, seq, cfg.d_model), cfg.param_dtype)
+            extra, extra_sh = (), ()
+            if g.kind == "xdec":
+                extra = (jax.ShapeDtypeStruct(
+                    (b, cfg.enc_seq_len, cfg.d_model), cfg.param_dtype),)
+                extra_sh = (_named(mesh, P(bspec, None, None)),)
+            pos_shape = (b, seq)
+
+            if shape.kind == "train":
+                def fn(gp, x, *enc, g1=g1, pos_shape=pos_shape):
+                    with set_policy(policy):
+                        positions = jnp.broadcast_to(
+                            jnp.arange(pos_shape[1], dtype=jnp.int32), pos_shape)
+                        act = (("dp", "tp", None)
+                               if g1.tier in opts.tiers
+                               else ("dp", None, None))
+                        def fwd(gp_, x_):
+                            y, aux = group_apply(
+                                cfg, g1, gp_, x_, jnp.zeros((), jnp.float32),
+                                positions=positions, window=window,
+                                enc_out=enc[0] if enc else None, remat=True,
+                                act_spec=act, moe_groups=opts.moe_groups)
+                            return y.astype(jnp.float32).sum() + aux
+                        g_out = jax.grad(fwd, argnums=(0, 1))(gp, x)
+                        return g_out
+            else:
+                def fn(gp, x, *enc, g1=g1, pos_shape=pos_shape):
+                    with set_policy(policy):
+                        positions = jnp.broadcast_to(
+                            jnp.arange(pos_shape[1], dtype=jnp.int32), pos_shape)
+                        act = (("dp", "tp", None)
+                               if g1.tier in opts.tiers
+                               else ("dp", None, None))
+                        y, aux = group_apply(
+                            cfg, g1, gp, x, jnp.zeros((), jnp.float32),
+                            positions=positions, window=window,
+                            enc_out=enc[0] if enc else None,
+                            act_spec=act, moe_groups=opts.moe_groups)
+                        return y
+            probes.append(BodyProbe(
+                group_index=gi, kind=g.kind, count=g.count, fn=fn,
+                args_sds=(params_sds, x_sds) + extra,
+                in_shardings=(_tree_named(mesh, pspecs),
+                              _named(mesh, P(bspec, None, None))) + extra_sh))
+        else:  # decode
+            if g.kind == "enc":
+                continue
+            st_g = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((1,) + s.shape[1:], s.dtype),
+                state_sds_all[gi])
+            sspecs = state_pspecs(st_g, mesh)
+            x_sds = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.param_dtype)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def fn(gp, st, x, pos, g1=g1):
+                with set_policy(policy):
+                    y, ns = _group_decode(cfg, g1, gp, st, x, pos,
+                                          window=window)
+                    return y, ns
+            probes.append(BodyProbe(
+                group_index=gi, kind=g.kind, count=g.count, fn=fn,
+                args_sds=(params_sds, st_g, x_sds, pos_sds),
+                in_shardings=(_tree_named(mesh, pspecs),
+                              _tree_named(mesh, sspecs),
+                              _named(mesh, P(bspec, None, None)),
+                              _named(mesh, P()))))
+    return probes

@@ -1,0 +1,203 @@
+"""Attention: GQA, sliding-window, chunked (flash-style) prefill, cached decode.
+
+All implementations are plain jnp/einsum so the GSPMD partitioner can shard
+them from the weight/activation constraints alone. The Pallas flash kernel
+(repro.kernels.attn) is a drop-in for the chunked path on real TPUs; the
+model code selects it via ``use_pallas`` (off for CPU dry-runs/tests).
+
+Memory strategy (prefill_32k and up): online-softmax over KV blocks inside a
+q-block scan — peak temp is (B, H, q_blk, kv_blk), never (B, H, S, S).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import modules as nn
+
+NEG_INF = -1e30
+
+
+def gqa_repeat(kv: jax.Array, n_rep: int) -> jax.Array:
+    """(B,S,Kh,D) -> (B,S,Kh*n_rep,D)."""
+    if n_rep == 1:
+        return kv
+    b, s, kh, d = kv.shape
+    kv = jnp.broadcast_to(kv[:, :, :, None, :], (b, s, kh, n_rep, d))
+    return kv.reshape(b, s, kh * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              *, qkv_bias: bool = False, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": nn.linear_init(kq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": nn.linear_init(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": nn.linear_init(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": nn.linear_init(ko, n_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def qkv_project(p, x: jax.Array, n_heads: int, n_kv_heads: int, head_dim: int,
+                positions: jax.Array, *, rope_theta: float = 10000.0):
+    b, s, _ = x.shape
+    q = nn.linear_apply(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = nn.linear_apply(p["wk"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = nn.linear_apply(p["wv"], x).reshape(b, s, n_kv_heads, head_dim)
+    q = nn.apply_rope(q, positions, theta=rope_theta)
+    k = nn.apply_rope(k, positions, theta=rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             window: Optional[int] = None,
+                             q_block: int = 512, kv_block: int = 1024,
+                             causal: bool = True) -> jax.Array:
+    """Online-softmax attention. q (B,S,H,D); k,v (B,S,Kh,D) already RoPE'd.
+
+    With ``window`` set, each query attends to keys in (pos-window, pos]
+    — and the kv-block scan is *clipped* to the window so the cost is
+    O(S * window), not O(S^2): this is what makes long_500k lowerable for
+    SWA variants.
+    """
+    b, s, h, d = q.shape
+    sk = k.shape[1]
+    kh = k.shape[2]
+    n_rep = h // kh
+    k = gqa_repeat(k, n_rep)
+    v = gqa_repeat(v, n_rep)
+    scale = 1.0 / math.sqrt(d)
+
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, sk)
+    while s % q_block:
+        q_block //= 2
+    while sk % kv_block:
+        kv_block //= 2
+    nq, nk = s // q_block, sk // kv_block
+
+    # (B,H,S,D) layouts for clean einsums
+    qt = q.transpose(0, 2, 1, 3) * scale
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    if window is not None:
+        # keys needed by a q block span (q_block + window - 1) positions
+        kv_span = min(nk, int(math.ceil((q_block + window - 1) / kv_block)) + 1)
+    else:
+        kv_span = nk
+
+    def q_step(_, qi):
+        qb = lax.dynamic_slice_in_dim(qt, qi * q_block, q_block, axis=2)
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        # first kv block this q block must see (lowest key of the FIRST query)
+        if window is not None:
+            lo_pos = jnp.maximum(qi * q_block - (window - 1), 0)
+            kv_lo = jnp.minimum(lo_pos // kv_block, nk - kv_span)
+            kv_lo = jnp.maximum(kv_lo, 0)
+        else:
+            kv_lo = jnp.array(0, jnp.int32)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = kv_lo + j
+            kb = lax.dynamic_slice_in_dim(kt, kj * kv_block, kv_block, axis=2)
+            vb = lax.dynamic_slice_in_dim(vt, kj * kv_block, kv_block, axis=2)
+            scores = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                                preferred_element_type=jnp.float32)
+            k_pos = kj * kv_block + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m, scores.max(-1))
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        a0 = jnp.zeros((b, h, q_block, d), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(kv_span))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, blocks = lax.scan(q_step, None, jnp.arange(nq))
+    # blocks: (nq, B, H, q_block, D) -> (B, S, H, D)
+    out = blocks.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cached decode attention (one new token vs a KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len) -> jax.Array:
+    """q (B,1,H,D); caches (B,S,Kh,D); attends to positions < cache_len.
+
+    Contracts over the cache's sequence axis — when that axis is sharded
+    (decode sharding: seq over 'model'), GSPMD turns the softmax/contraction
+    into the split-KV (flash-decoding) pattern with a small psum.
+    """
+    b, _, h, d = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kh
+    scale = 1.0 / math.sqrt(d)
+    # grouped einsum without materializing repeated KV
+    qg = q.reshape(b, 1, kh, n_rep, d) * scale
+    scores = jnp.einsum("bqgrd,bsgd->bgrqs", qg, k_cache,
+                        preferred_element_type=jnp.float32)  # (B,Kh,rep,1,S)
+    pos = jnp.arange(s)
+    mask = pos[None, None, None, None, :] < cache_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqs,bsgd->bqgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def update_kv_cache(k_cache: jax.Array, v_cache: jax.Array,
+                    k_new: jax.Array, v_new: jax.Array, pos) -> tuple:
+    """Write one token (B,1,Kh,D) at `pos` (dynamic)."""
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    return k_cache, v_cache
+
+
+def reference_attention(q, k, v, *, window=None, causal=True):
+    """O(S^2) oracle for tests."""
+    b, s, h, d = q.shape
+    k = gqa_repeat(k, h // k.shape[2])
+    v = gqa_repeat(v, h // v.shape[2])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(d)
+    qp, kp = jnp.arange(s)[:, None], jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v).astype(q.dtype)

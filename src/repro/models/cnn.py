@@ -1,0 +1,260 @@
+"""The paper's three backbones in pure JAX, expressed as split-able Stage lists.
+
+ResNet-18 (He et al. 16), GoogleNet (Szegedy et al. 15, trimmed faithful
+inception blocks), MobileNetV2 (Sandler et al. 18, inverted residuals).
+BatchNorm is replaced by GroupNorm (batch-stat-free -> correct under both
+FL's local batches and SL's split execution, and jit-friendly without
+mutable state); this is noted in DESIGN.md as an adaptation.
+
+Each builder returns ``list[Stage]`` so ``repro.core.split`` can cut at any
+fraction {15, 25, 40, 75}% exactly as the paper's SL_{a,b} variants. Each
+Stage carries a ``depth`` weight = number of paper-layers it contains so
+cut fractions track the paper's "% of layers" semantics.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.split import Stage
+from . import modules as nn
+
+
+def _gn_init(key, c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _gn(p, x, c):
+    """Spatial GroupNorm (NHWC): normalize over (H, W, C/G) per group —
+    the batch-stat-free replacement for the paper models' BatchNorm."""
+    groups = c // 8 if c % 8 == 0 else (c // 4 if c % 4 == 0 else 1)
+    b, h, w, _ = x.shape
+    xf = x.astype(jnp.float32).reshape(b, h, w, groups, c // groups)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, h, w, c)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_gn_relu_init(key, k, cin, cout):
+    kc, kn = jax.random.split(key)
+    return {"conv": nn.conv_init(kc, k, cin, cout, bias=False),
+            "gn": _gn_init(kn, cout)}
+
+
+def _conv_gn_relu(p, x, *, stride=1, cout=None, relu=True, groups=1):
+    y = nn.conv_apply(p["conv"], x, stride=stride, groups=groups)
+    y = _gn(p["gn"], y, y.shape[-1])
+    return jax.nn.relu(y) if relu else y
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18
+# ---------------------------------------------------------------------------
+
+def _basic_block_init(key, cin, cout, stride):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"c1": _conv_gn_relu_init(k1, 3, cin, cout),
+         "c2": _conv_gn_relu_init(k2, 3, cout, cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_gn_relu_init(k3, 1, cin, cout)
+    return p
+
+
+def _basic_block(p, x, *, stride):
+    y = _conv_gn_relu(p["c1"], x, stride=stride)
+    y = _conv_gn_relu(p["c2"], y, relu=False)
+    sc = _conv_gn_relu(p["proj"], x, stride=stride, relu=False) if "proj" in p else x
+    return jax.nn.relu(y + sc)
+
+
+def resnet18_stages(num_classes: int = 12, *, width: int = 64) -> list[Stage]:
+    w = width
+    plan = [(w, w, 1), (w, w, 1),              # conv2_x
+            (w, 2 * w, 2), (2 * w, 2 * w, 1),  # conv3_x
+            (2 * w, 4 * w, 2), (4 * w, 4 * w, 1),
+            (4 * w, 8 * w, 2), (8 * w, 8 * w, 1)]
+    stages: list[Stage] = [
+        Stage("stem",
+              init=lambda k: _conv_gn_relu_init(k, 7, 3, w),
+              apply=lambda p, x: jax.lax.reduce_window(
+                  _conv_gn_relu(p, x, stride=2), -jnp.inf, jax.lax.max,
+                  (1, 3, 3, 1), (1, 2, 2, 1), "SAME"),
+              depth=1)]
+    for i, (cin, cout, s) in enumerate(plan):
+        stages.append(Stage(
+            f"block{i}",
+            init=partial(_basic_block_init, cin=cin, cout=cout, stride=s),
+            apply=partial(_basic_block, stride=s),
+            depth=2))
+    stages.append(Stage(
+        "head",
+        init=lambda k: nn.linear_init(k, 8 * w, num_classes, bias=True),
+        apply=lambda p, x: nn.linear_apply(p, x.mean(axis=(1, 2))),
+        depth=1))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# GoogleNet (inception v1, GN instead of LRN/BN, aux heads omitted)
+# ---------------------------------------------------------------------------
+
+def _inception_init(key, cin, c1, c3r, c3, c5r, c5, cp):
+    ks = jax.random.split(key, 6)
+    return {"b1": _conv_gn_relu_init(ks[0], 1, cin, c1),
+            "b3r": _conv_gn_relu_init(ks[1], 1, cin, c3r),
+            "b3": _conv_gn_relu_init(ks[2], 3, c3r, c3),
+            "b5r": _conv_gn_relu_init(ks[3], 1, cin, c5r),
+            "b5": _conv_gn_relu_init(ks[4], 5, c5r, c5),
+            "bp": _conv_gn_relu_init(ks[5], 1, cin, cp)}
+
+
+def _inception(p, x):
+    b1 = _conv_gn_relu(p["b1"], x)
+    b3 = _conv_gn_relu(p["b3"], _conv_gn_relu(p["b3r"], x))
+    b5 = _conv_gn_relu(p["b5"], _conv_gn_relu(p["b5r"], x))
+    mp = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 1, 1, 1), "SAME")
+    bp = _conv_gn_relu(p["bp"], mp)
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+
+
+def googlenet_stages(num_classes: int = 12) -> list[Stage]:
+    # (cin, 1x1, 3x3r, 3x3, 5x5r, 5x5, pool) — faithful table from the paper
+    inc = {
+        "3a": (192, 64, 96, 128, 16, 32, 32),
+        "3b": (256, 128, 128, 192, 32, 96, 64),
+        "4a": (480, 192, 96, 208, 16, 48, 64),
+        "4b": (512, 160, 112, 224, 24, 64, 64),
+        "4c": (512, 128, 128, 256, 24, 64, 64),
+        "4d": (512, 112, 144, 288, 32, 64, 64),
+        "4e": (528, 256, 160, 320, 32, 128, 128),
+        "5a": (832, 256, 160, 320, 32, 128, 128),
+        "5b": (832, 384, 192, 384, 48, 128, 128),
+    }
+    stages: list[Stage] = []
+
+    def stem_init(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"c1": _conv_gn_relu_init(k1, 7, 3, 64),
+                "c2": _conv_gn_relu_init(k2, 1, 64, 64),
+                "c3": _conv_gn_relu_init(k3, 3, 64, 192)}
+
+    def stem(p, x):
+        y = _maxpool2(_conv_gn_relu(p["c1"], x, stride=2))
+        y = _conv_gn_relu(p["c3"], _conv_gn_relu(p["c2"], y))
+        return _maxpool2(y)
+
+    stages.append(Stage("stem", init=stem_init, apply=stem, depth=3))
+    for name, cfg in inc.items():
+        cin, c1, c3r, c3, c5r, c5, cp = cfg
+        pool_after = name in ("3b", "4e")
+        if pool_after:
+            stages.append(Stage(
+                f"inc{name}",
+                init=partial(_inception_init, cin=cin, c1=c1, c3r=c3r, c3=c3,
+                             c5r=c5r, c5=c5, cp=cp),
+                apply=lambda p, x: _maxpool2(_inception(p, x)),
+                depth=2))
+        else:
+            stages.append(Stage(
+                f"inc{name}",
+                init=partial(_inception_init, cin=cin, c1=c1, c3r=c3r, c3=c3,
+                             c5r=c5r, c5=c5, cp=cp),
+                apply=_inception,
+                depth=2))
+    stages.append(Stage(
+        "head",
+        init=lambda k: nn.linear_init(k, 1024, num_classes, bias=True),
+        apply=lambda p, x: nn.linear_apply(p, x.mean(axis=(1, 2))),
+        depth=1))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2
+# ---------------------------------------------------------------------------
+
+def _inv_res_init(key, cin, cout, expand):
+    hid = cin * expand
+    ks = jax.random.split(key, 3)
+    p = {}
+    if expand != 1:
+        p["pw1"] = _conv_gn_relu_init(ks[0], 1, cin, hid)
+    p["dw"] = {"conv": nn.conv_init(ks[1], 3, hid, hid, bias=False, groups=hid),
+               "gn": _gn_init(ks[1], hid)}
+    p["pw2"] = _conv_gn_relu_init(ks[2], 1, hid, cout)
+    return p
+
+
+def _relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def _inv_res(p, x, *, stride, expand):
+    y = x
+    if expand != 1:
+        y = _relu6(_conv_gn_relu(p["pw1"], y, relu=False))
+    hid = y.shape[-1]
+    y = nn.conv_apply(p["dw"]["conv"], y, stride=stride, groups=hid)
+    y = _relu6(_gn(p["dw"]["gn"], y, hid))
+    y = _conv_gn_relu(p["pw2"], y, relu=False)  # linear bottleneck
+    if stride == 1 and x.shape[-1] == y.shape[-1]:
+        y = y + x
+    return y
+
+
+def mobilenetv2_stages(num_classes: int = 12) -> list[Stage]:
+    # (expand, cout, n, stride) — the paper's Table 2
+    cfg = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+           (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    stages: list[Stage] = [Stage(
+        "stem", init=lambda k: _conv_gn_relu_init(k, 3, 3, 32),
+        apply=lambda p, x: _relu6(_conv_gn_relu(p, x, stride=2, relu=False)),
+        depth=1)]
+    cin = 32
+    for i, (t, c, n, s) in enumerate(cfg):
+        for j in range(n):
+            stride = s if j == 0 else 1
+            stages.append(Stage(
+                f"ir{i}_{j}",
+                init=partial(_inv_res_init, cin=cin, cout=c, expand=t),
+                apply=partial(_inv_res, stride=stride, expand=t),
+                depth=1))
+            cin = c
+
+    def head_init(k):
+        k1, k2 = jax.random.split(k)
+        return {"pw": _conv_gn_relu_init(k1, 1, 320, 1280),
+                "fc": nn.linear_init(k2, 1280, num_classes, bias=True)}
+
+    def head(p, x):
+        y = _relu6(_conv_gn_relu(p["pw"], x, relu=False))
+        return nn.linear_apply(p["fc"], y.mean(axis=(1, 2)))
+
+    stages.append(Stage("head", init=head_init, apply=head, depth=2))
+    return stages
+
+
+CNN_BUILDERS = {
+    "resnet18": resnet18_stages,
+    "googlenet": googlenet_stages,
+    "mobilenetv2": mobilenetv2_stages,
+}
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return (logits.argmax(-1) == labels).mean()

@@ -1,0 +1,259 @@
+"""Minimal pure-JAX module substrate.
+
+No flax/optax in this environment, so the framework carries its own module
+system: parameters are plain pytrees (nested dicts of jnp arrays), modules
+are (init, apply) pairs of pure functions, RNG is threaded explicitly.
+
+Conventions
+-----------
+- ``init(key, ...) -> params``   (pytree of arrays)
+- ``apply(params, x, ...) -> y`` (pure)
+- Parameter dtype is configurable (bf16 for big dry-run configs, f32 for
+  CPU smoke tests); compute dtype follows the input.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Any  # pytree of jnp arrays
+PRNGKey = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _fan(shape: Sequence[int], in_axis: int = -2, out_axis: int = -1):
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    receptive = 1
+    for i, s in enumerate(shape):
+        if i not in (in_axis % len(shape), out_axis % len(shape)):
+            receptive *= s
+    return shape[in_axis] * receptive, shape[out_axis] * receptive
+
+
+def normal_init(key: PRNGKey, shape, dtype=jnp.float32, stddev=0.02):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def lecun_normal(key: PRNGKey, shape, dtype=jnp.float32, in_axis=-2, out_axis=-1):
+    fan_in, _ = _fan(shape, in_axis, out_axis)
+    return (jax.random.normal(key, shape) / math.sqrt(max(fan_in, 1))).astype(dtype)
+
+
+def he_normal(key: PRNGKey, shape, dtype=jnp.float32, in_axis=-2, out_axis=-1):
+    fan_in, _ = _fan(shape, in_axis, out_axis)
+    return (jax.random.normal(key, shape) * math.sqrt(2.0 / max(fan_in, 1))).astype(dtype)
+
+
+def zeros_init(_key: PRNGKey, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key: PRNGKey, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / embedding
+# ---------------------------------------------------------------------------
+
+def linear_init(key: PRNGKey, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, init: Callable = lecun_normal) -> Params:
+    kw, _ = jax.random.split(key)
+    p = {"w": init(kw, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed_init(key: PRNGKey, vocab: int, d: int, *, dtype=jnp.float32) -> Params:
+    return {"table": normal_init(key, (vocab, d), dtype)}
+
+
+def embed_apply(p: Params, ids: jax.Array) -> jax.Array:
+    return p["table"][ids]
+
+
+def embed_logits(p: Params, x: jax.Array) -> jax.Array:
+    """Tied output head: x @ table.T"""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(_key: PRNGKey, d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(_key: PRNGKey, d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def groupnorm_apply(p: Params, x: jax.Array, groups: int, *, eps: float = 1e-5):
+    """Channel-last group norm for CNNs: x (..., C)."""
+    dt = x.dtype
+    c = x.shape[-1]
+    xf = x.astype(jnp.float32).reshape(x.shape[:-1] + (groups, c // groups))
+    mu = jnp.mean(xf, axis=(-1,), keepdims=True)
+    var = jnp.var(xf, axis=(-1,), keepdims=True)
+    y = ((xf - mu) * lax.rsqrt(var + eps)).reshape(x.shape)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# conv (NHWC) — CNN repro + whisper conv frontend stub
+# ---------------------------------------------------------------------------
+
+def conv_init(key: PRNGKey, k: int, c_in: int, c_out: int, *, bias: bool = True,
+              dtype=jnp.float32, groups: int = 1) -> Params:
+    p = {"w": he_normal(key, (k, k, c_in // groups, c_out), dtype, in_axis=2, out_axis=3)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv_apply(p: Params, x: jax.Array, *, stride: int = 1, padding="SAME",
+               groups: int = 1) -> jax.Array:
+    y = lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# activations / misc
+# ---------------------------------------------------------------------------
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu_ffn_init(key: PRNGKey, d: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d, d_ff, dtype=dtype),
+        "up": linear_init(k2, d, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu_ffn_apply(p: Params, x: jax.Array) -> jax.Array:
+    return linear_apply(p["down"], silu(linear_apply(p["gate"], x)) * linear_apply(p["up"], x))
+
+
+def gelu_ffn_init(key: PRNGKey, d: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"up": linear_init(k1, d, d_ff, bias=True, dtype=dtype),
+            "down": linear_init(k2, d_ff, d, bias=True, dtype=dtype)}
+
+
+def gelu_ffn_apply(p: Params, x: jax.Array) -> jax.Array:
+    return linear_apply(p["down"], gelu(linear_apply(p["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, *, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """x: (..., T, H, D) ; positions: (..., T) broadcastable."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta=theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    # rotate-half convention
+    out = jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin,
+    ], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pytree stacking helpers (scan-over-layers)
+# ---------------------------------------------------------------------------
+
+def stack_layers(key: PRNGKey, n: int, init_fn: Callable[[PRNGKey], Params]) -> Params:
+    """Initialize n identical layers and stack each leaf on a leading axis."""
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def scan_layers(apply_fn: Callable, stacked: Params, x, *, unroll: int = 1):
+    """Run ``x = apply_fn(layer_params, x)`` over the stacked leading axis."""
+    def body(carry, layer):
+        return apply_fn(layer, carry), None
+    y, _ = lax.scan(body, x, stacked, unroll=unroll)
+    return y
+
+
+def scan_layers_carry(apply_fn: Callable, stacked: Params, x, state, *, unroll: int = 1):
+    """Like scan_layers but threads an extra per-layer state (e.g. KV cache).
+
+    ``apply_fn(layer_params, x, layer_state) -> (x, new_layer_state)``;
+    state leaves carry a leading n_layers axis.
+    """
+    def body(carry, inp):
+        layer, st = inp
+        y, new_st = apply_fn(layer, carry, st)
+        return y, new_st
+    y, new_state = lax.scan(body, x, (stacked, state), unroll=unroll)
+    return y, new_state
+
+
+def param_count(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(p.size * p.dtype.itemsize) for p in jax.tree_util.tree_leaves(params))

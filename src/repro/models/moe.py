@@ -1,0 +1,206 @@
+"""Mixture-of-Experts: top-k router, capacity-bucketed index dispatch,
+shared experts (deepseek) and dense-residual (arctic) variants.
+
+Dispatch strategy (TPU-native, static shapes): tokens are assigned slots in
+an (E, C) table via a cumsum-over-onehot position computation (GShard-style
+capacity), then gathered into (E, C, D), processed by a batched expert FFN
+einsum — shardable on the leading expert axis (expert parallelism over the
+'model' mesh axis) — and scatter-added back with their gate weights.
+Overflow tokens are dropped (standard capacity semantics); the router
+carries the usual load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import modules as nn
+
+
+def moe_init(key, d_model: int, n_experts: int, d_ff: int, top_k: int,
+             *, n_shared: int = 0, shared_d_ff: Optional[int] = None,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": nn.linear_init(ks[0], d_model, n_experts, dtype=jnp.float32),
+        # batched expert weights: leading expert axis (shardable)
+        "w_gate": nn.lecun_normal(ks[1], (n_experts, d_model, d_ff), dtype),
+        "w_up": nn.lecun_normal(ks[2], (n_experts, d_model, d_ff), dtype),
+        "w_down": nn.lecun_normal(ks[3], (n_experts, d_ff, d_model), dtype),
+    }
+    if n_shared > 0:
+        kss = jax.random.split(jax.random.fold_in(key, 7), n_shared)
+        sdff = shared_d_ff or d_ff
+        p["shared"] = nn.stack_layers(
+            kss[0], n_shared,
+            lambda k: nn.swiglu_ffn_init(k, d_model, sdff, dtype=dtype))
+    return p
+
+
+def _router(p, x_flat: jax.Array, top_k: int):
+    """x_flat (T, D) -> probs (T, k), idx (T, k), aux_loss."""
+    logits = x_flat.astype(jnp.float32) @ p["router"]["w"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    # normalize the top-k gate weights (deepseek/mixtral convention)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    e = logits.shape[-1]
+    me = jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32).mean(0)  # fraction routed (top-1 proxy)
+    pe = probs.mean(0)
+    aux = e * jnp.sum(me * pe)
+    return top_p, top_i, aux
+
+
+def moe_apply(p, x: jax.Array, *, top_k: int, capacity_factor: float = 1.25,
+              min_capacity: int = 4, n_groups: int = 1):
+    """x (B, S, D) -> (B, S, D), aux_loss (scalar f32).
+
+    ``n_groups > 1`` switches to GShard-style grouped dispatch: tokens are
+    bucketed into G groups (aligned with the data shards by the caller's
+    sharding constraints) and each group routes into a per-group capacity
+    slice — the gather/scatter then stays shard-local and the only cross-
+    shard traffic is the expert all-to-all. Capacity semantics are
+    per-group (stricter than global; same expected occupancy).
+    """
+    if n_groups > 1:
+        return _moe_apply_grouped(p, x, top_k=top_k,
+                                  capacity_factor=capacity_factor,
+                                  min_capacity=min_capacity,
+                                  n_groups=n_groups)
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    n_experts = p["w_gate"].shape[0]
+    top_p, top_i, aux = _router(p, xf, top_k)
+
+    capacity = max(min_capacity,
+                   int(math.ceil(t * top_k * capacity_factor / n_experts)))
+
+    # slot assignment: for each (token, k) pick, its position within its expert
+    flat_e = top_i.reshape(-1)                       # (T*k,) expert ids, k-major per token
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)   # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1         # (T*k, E)
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = slot < capacity
+
+    # token table: (E, C) of source token index (T = padding/empty)
+    token_src = jnp.repeat(jnp.arange(t), top_k)
+    table = jnp.full((n_experts, capacity), t, dtype=jnp.int32)
+    safe_e = jnp.where(keep, flat_e, 0)
+    safe_s = jnp.where(keep, slot, capacity)          # out-of-range -> dropped
+    table = table.at[safe_e, safe_s].set(jnp.where(keep, token_src, t),
+                                         mode="drop")
+
+    # gather tokens: (E, C, D); padded row is zeros
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    x_e = x_pad[table]                                # (E, C, D)
+
+    # expert FFN (swiglu), batched over experts
+    g = jnp.einsum("ecd,edf->ecf", x_e, p["w_gate"].astype(x_e.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x_e, p["w_up"].astype(x_e.dtype))
+    h = nn.silu(g) * u
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x_e.dtype))
+
+    # combine: scatter-add back with gate weights
+    gate_flat = top_p.reshape(-1).astype(jnp.float32)  # (T*k,)
+    gate_tab = jnp.zeros((n_experts, capacity), jnp.float32)
+    gate_tab = gate_tab.at[safe_e, safe_s].set(jnp.where(keep, gate_flat, 0.0),
+                                               mode="drop")
+    y = jnp.zeros((t + 1, d), jnp.float32)
+    y = y.at[table.reshape(-1)].add(
+        (y_e * gate_tab[..., None]).reshape(-1, d).astype(jnp.float32),
+        mode="drop")
+    out = y[:t].reshape(b, s, d).astype(x.dtype)
+
+    if "shared" in p:
+        def shared_step(carry, layer):
+            return carry + nn.swiglu_ffn_apply(layer, x), None
+        out2, _ = jax.lax.scan(shared_step, jnp.zeros_like(x), p["shared"])
+        out = out + out2
+    return out, aux
+
+
+def _moe_apply_grouped(p, x: jax.Array, *, top_k: int, capacity_factor: float,
+                       min_capacity: int, n_groups: int):
+    b, s, d = x.shape
+    t = b * s
+    assert t % n_groups == 0, (t, n_groups)
+    tg = t // n_groups
+    xf = x.reshape(n_groups, tg, d)
+    n_experts = p["w_gate"].shape[0]
+    capacity = max(min_capacity,
+                   int(math.ceil(tg * top_k * capacity_factor / n_experts)))
+
+    top_p, top_i, aux = _router(p, x.reshape(t, d), top_k)
+    top_p = top_p.reshape(n_groups, tg, top_k)
+    top_i = top_i.reshape(n_groups, tg, top_k)
+
+    def dispatch_one(xg, pg, ig):
+        flat_e = ig.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot, axis=0) - 1
+        slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+        keep = slot < capacity
+        token_src = jnp.repeat(jnp.arange(tg), top_k)
+        table = jnp.full((n_experts, capacity), tg, dtype=jnp.int32)
+        safe_e = jnp.where(keep, flat_e, 0)
+        safe_s = jnp.where(keep, slot, capacity)
+        table = table.at[safe_e, safe_s].set(jnp.where(keep, token_src, tg),
+                                             mode="drop")
+        x_pad = jnp.concatenate([xg, jnp.zeros((1, d), xg.dtype)], axis=0)
+        x_e = x_pad[table]                          # (E, C, D)
+        gate = jnp.zeros((n_experts, capacity), jnp.float32)
+        gate = gate.at[safe_e, safe_s].set(
+            jnp.where(keep, pg.reshape(-1).astype(jnp.float32), 0.0),
+            mode="drop")
+        return x_e, table, gate
+
+    x_e, table, gate = jax.vmap(dispatch_one)(xf, top_p, top_i)  # (G,E,C,D)
+
+    g_ = jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"].astype(x_e.dtype))
+    u_ = jnp.einsum("gecd,edf->gecf", x_e, p["w_up"].astype(x_e.dtype))
+    h = nn.silu(g_) * u_
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x_e.dtype))
+
+    def combine_one(ye, table_g, gate_g):
+        y = jnp.zeros((tg + 1, d), jnp.float32)
+        y = y.at[table_g.reshape(-1)].add(
+            (ye * gate_g[..., None]).reshape(-1, d).astype(jnp.float32),
+            mode="drop")
+        return y[:tg]
+
+    y = jax.vmap(combine_one)(y_e, table, gate)     # (G, tg, D)
+    out = y.reshape(b, s, d).astype(x.dtype)
+    if "shared" in p:
+        def shared_step(carry, layer):
+            return carry + nn.swiglu_ffn_apply(layer, x), None
+        out2, _ = jax.lax.scan(shared_step, jnp.zeros_like(x), p["shared"])
+        out = out + out2
+    return out, aux
+
+
+def moe_ref(p, x: jax.Array, *, top_k: int):
+    """Dense oracle (no capacity drops): every token through its top-k experts
+    via full-expert compute. O(E) FLOPs — tests only."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    top_p, top_i, aux = _router(p, xf, top_k)
+    # all-expert outputs: (E, T, D)
+    g = jnp.einsum("td,edf->etf", xf, p["w_gate"].astype(xf.dtype))
+    u = jnp.einsum("td,edf->etf", xf, p["w_up"].astype(xf.dtype))
+    y_all = jnp.einsum("etf,efd->etd", nn.silu(g) * u, p["w_down"].astype(xf.dtype))
+    out = jnp.zeros_like(xf, dtype=jnp.float32)
+    for j in range(top_k):
+        sel = y_all[top_i[:, j], jnp.arange(xf.shape[0])]   # (T, D)
+        out = out + top_p[:, j:j + 1] * sel.astype(jnp.float32)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if "shared" in p:
+        def shared_step(carry, layer):
+            return carry + nn.swiglu_ffn_apply(layer, x), None
+        out2, _ = jax.lax.scan(shared_step, jnp.zeros_like(x), p["shared"])
+        out = out + out2
+    return out, aux

@@ -1,0 +1,225 @@
+"""State-space / linear-recurrence blocks: RWKV-6 ("Finch") and Mamba.
+
+Both expose the same interface:
+
+    params = *_init(key, cfg-ish dims, dtype=...)
+    y, state = *_apply(params, x, state)     # x (B,S,D); scan over S
+    y1, state = *_step(params, x1, state)    # x1 (B,1,D); O(1) decode step
+
+State is O(1) in sequence length — this is what makes long_500k decode
+lowerable with a tiny memory footprint for rwkv6-7b and jamba.
+
+RWKV-6 core recurrence (per head, hd = head size):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t        (S: hd x hd)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent decay w_t = exp(-exp(w0 + (x_t W_w1) W_w2)) — the
+"Finch" contribution — and token-shift lerps on the inputs.
+
+Mamba:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t   (h: d_inner x N)
+    y_t = C_t . h_t + D * x_t
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import modules as nn
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, d_model: int, *, head_size: int = 64, lora_r: int = 32,
+               dtype=jnp.float32):
+    h = d_model // head_size
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu_r": nn.normal_init(ks[0], (d_model,), dtype, 0.1),
+        "mu_k": nn.normal_init(ks[1], (d_model,), dtype, 0.1),
+        "mu_v": nn.normal_init(ks[2], (d_model,), dtype, 0.1),
+        "mu_w": nn.normal_init(ks[3], (d_model,), dtype, 0.1),
+        "wr": nn.linear_init(ks[4], d_model, d_model, dtype=dtype),
+        "wk": nn.linear_init(ks[5], d_model, d_model, dtype=dtype),
+        "wv": nn.linear_init(ks[6], d_model, d_model, dtype=dtype),
+        "wg": nn.linear_init(ks[7], d_model, d_model, dtype=dtype),
+        "wo": nn.linear_init(ks[8], d_model, d_model, dtype=dtype),
+        # data-dependent decay LoRA (the Finch mechanism)
+        "w0": nn.normal_init(ks[9], (d_model,), dtype, 0.5),
+        "w_lora_a": nn.lecun_normal(ks[10], (d_model, lora_r), dtype),
+        "w_lora_b": nn.zeros_init(ks[10], (lora_r, d_model), dtype),
+        "u": nn.normal_init(ks[11], (h, head_size), dtype, 0.3),
+        "ln_x": {"scale": jnp.ones((d_model,), dtype),
+                 "bias": jnp.zeros((d_model,), dtype)},
+    }
+    return p
+
+
+def rwkv6_empty_state(batch: int, d_model: int, *, head_size: int = 64,
+                      dtype=jnp.float32):
+    h = d_model // head_size
+    return {
+        "S": jnp.zeros((batch, h, head_size, head_size), jnp.float32),
+        "x_prev": jnp.zeros((batch, d_model), dtype),
+    }
+
+
+def _rwkv6_inner(p, x, state, head_size: int):
+    """x (B,S,D). Returns (y (B,S,D), new_state). Scan over S."""
+    b, s, d = x.shape
+    h = d // head_size
+    x_prev0 = state["x_prev"].astype(x.dtype)            # (B,D)
+    # token shift: x_{t-1} per position
+    x_sh = jnp.concatenate([x_prev0[:, None, :], x[:, :-1, :]], axis=1)
+
+    def lerp(mu):
+        return x + (x_sh - x) * mu.astype(x.dtype)
+
+    r = nn.linear_apply(p["wr"], lerp(p["mu_r"])).reshape(b, s, h, head_size)
+    k = nn.linear_apply(p["wk"], lerp(p["mu_k"])).reshape(b, s, h, head_size)
+    v = nn.linear_apply(p["wv"], lerp(p["mu_v"])).reshape(b, s, h, head_size)
+    g = nn.linear_apply(p["wg"], x)
+    # data-dependent decay
+    xw = lerp(p["mu_w"])
+    dd = (xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)
+          ) @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) + dd)))   # (B,S,D) in (0,1)
+    w = w.reshape(b, s, h, head_size)
+    u = p["u"].astype(jnp.float32)                        # (H, hd)
+
+    rf = r.astype(jnp.float32); kf = k.astype(jnp.float32); vf = v.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                          # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    S_new, ys = lax.scan(step, state["S"], xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)         # (B,S,D) f32
+    # per-head groupnorm then gate
+    y = nn.groupnorm_apply(p["ln_x"], y, h).astype(x.dtype)
+    y = y * nn.silu(g)
+    out = nn.linear_apply(p["wo"], y)
+    return out, {"S": S_new, "x_prev": x[:, -1, :]}
+
+
+def rwkv6_apply(p, x, state=None, *, head_size: int = 64):
+    if state is None:
+        state = rwkv6_empty_state(x.shape[0], x.shape[-1], head_size=head_size,
+                                  dtype=x.dtype)
+    return _rwkv6_inner(p, x, state, head_size)
+
+
+def rwkv6_step(p, x1, state, *, head_size: int = 64):
+    return _rwkv6_inner(p, x1, state, head_size)
+
+
+def rwkv6_ffn_init(key, d_model: int, d_ff: int, *, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"mu_k": nn.normal_init(k1, (d_model,), dtype, 0.1),
+            "wk": nn.linear_init(k2, d_model, d_ff, dtype=dtype),
+            "wv": nn.linear_init(k3, d_ff, d_model, dtype=dtype),
+            "wr": nn.linear_init(k4, d_model, d_model, dtype=dtype)}
+
+
+def rwkv6_ffn_apply(p, x, x_prev):
+    """RWKV channel-mix: relu(k)^2 value kernel, receptance gate.
+    x (B,S,D); x_prev (B,D) last token of previous chunk."""
+    x_sh = jnp.concatenate([x_prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+    xk = x + (x_sh - x) * p["mu_k"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(nn.linear_apply(p["wk"], xk)))
+    r = jax.nn.sigmoid(nn.linear_apply(p["wr"], xk))
+    return r * nn.linear_apply(p["wv"], k)
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, d_model: int, *, expand: int = 2, state_dim: int = 16,
+               conv_width: int = 4, dt_rank: Optional[int] = None,
+               dtype=jnp.float32):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": nn.linear_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": nn.normal_init(ks[1], (conv_width, d_inner), dtype, 0.2),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_dt_a": nn.lecun_normal(ks[2], (d_inner, dt_rank), dtype),
+        "w_dt_b": nn.lecun_normal(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": nn.normal_init(ks[4], (d_inner,), dtype, 0.1),
+        "w_B": nn.linear_init(ks[5], d_inner, state_dim, dtype=dtype),
+        "w_C": nn.linear_init(ks[6], d_inner, state_dim, dtype=dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, state_dim + 1, dtype=jnp.float32), (d_inner, state_dim))).astype(dtype),
+        "D": jnp.ones((d_inner,), dtype),
+        "out_proj": nn.linear_init(ks[7], d_inner, d_model, dtype=dtype),
+    }
+
+
+def mamba_empty_state(batch: int, d_model: int, *, expand: int = 2,
+                      state_dim: int = 16, conv_width: int = 4,
+                      dtype=jnp.float32):
+    d_inner = expand * d_model
+    return {"h": jnp.zeros((batch, d_inner, state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype)}
+
+
+def _mamba_inner(p, x, state):
+    b, s, d = x.shape
+    d_inner = p["conv_w"].shape[1]
+    xz = nn.linear_apply(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B,S,d_inner)
+    # depthwise causal conv1d with carried context
+    cw = p["conv_w"].shape[0]
+    ctx = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)  # (B, S+cw-1, di)
+    conv = sum(ctx[:, i:i + s, :] * p["conv_w"][i].astype(xi.dtype) for i in range(cw))
+    xi = nn.silu(conv + p["conv_b"].astype(xi.dtype))
+
+    dt = jax.nn.softplus(
+        (xi @ p["w_dt_a"].astype(xi.dtype)) @ p["w_dt_b"].astype(xi.dtype)
+        + p["dt_bias"].astype(xi.dtype)).astype(jnp.float32)      # (B,S,di)
+    Bm = nn.linear_apply(p["w_B"], xi).astype(jnp.float32)        # (B,S,N)
+    Cm = nn.linear_apply(p["w_C"], xi).astype(jnp.float32)        # (B,S,N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (di,N)
+    xf = xi.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                                 # (B,di),(B,di),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * A[None])                   # (B,di,N)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]  # (B,di,N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (xf.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h_new, ys = lax.scan(step, state["h"], xs)
+    y = ys.transpose(1, 0, 2) + xf * p["D"].astype(jnp.float32)[None, None]
+    y = y.astype(x.dtype) * nn.silu(z)
+    out = nn.linear_apply(p["out_proj"], y)
+    new_conv = ctx[:, -(cw - 1):, :] if cw > 1 else state["conv"]
+    return out, {"h": h_new, "conv": new_conv.astype(state["conv"].dtype)}
+
+
+def mamba_apply(p, x, state=None, *, expand: int = 2, state_dim: int = 16,
+                conv_width: int = 4):
+    if state is None:
+        state = mamba_empty_state(x.shape[0], x.shape[-1], expand=expand,
+                                  state_dim=state_dim, conv_width=conv_width,
+                                  dtype=x.dtype)
+    return _mamba_inner(p, x, state)
+
+
+def mamba_step(p, x1, state):
+    return _mamba_inner(p, x1, state)

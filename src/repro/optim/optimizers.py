@@ -1,0 +1,131 @@
+"""Optimizers built from scratch (no optax in the container).
+
+API mirrors the (init, update) pair convention:
+
+    opt = adamw(lr=3e-4, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[..., tuple[Params, OptState]]
+
+
+def _as_schedule(lr: Union[float, Schedule]) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def constant_schedule(v: float) -> Schedule:
+    return lambda step: jnp.asarray(v, jnp.float32)
+
+
+def cosine_schedule(peak: float, total_steps: int, *, floor: float = 0.0) -> Schedule:
+    def sched(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return sched
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  *, floor: float = 0.0) -> Schedule:
+    def sched(step):
+        warm = peak * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> tuple[Params, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw(lr: Union[float, Schedule] = 1e-3, *, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          moment_dtype=jnp.float32) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params: Params) -> OptState:
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree_util.tree_map(z, params),
+                        nu=jax.tree_util.tree_map(z, params))
+
+    def update(grads: Params, state: OptState, params: Params) -> tuple[Params, OptState]:
+        step = state.step + 1
+        lr_t = sched(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(moment_dtype)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(moment_dtype)
+            return (-lr_t * delta).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Union[float, Schedule] = 1e-2, *, momentum: float = 0.9,
+        nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params: Params) -> OptState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree_util.tree_map(z, params), nu=None)
+
+    def update(grads: Params, state: OptState, params: Params):
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            m = momentum * m + g
+            d = g + momentum * m if nesterov else m
+            return (-lr_t * d).astype(p.dtype), m
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, OptState(step=step, mu=mu, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,5 @@
+from .sharding import (ShardingPolicy, set_policy, get_policy, shard_act,
+                       param_pspecs, DP_AXES, TP_AXIS, FSDP_AXIS)
+
+__all__ = ["ShardingPolicy", "set_policy", "get_policy", "shard_act",
+           "param_pspecs", "DP_AXES", "TP_AXIS", "FSDP_AXIS"]

@@ -1,0 +1,200 @@
+"""Sharding policy: logical→physical mapping + name-rule param specs.
+
+Mesh axes: ('data','model') single-pod, ('pod','data','model') multi-pod.
+Logical axes used by the models and the spec rules:
+
+  dp    batch axis — ('pod','data') product when present
+  tp    'model' — tensor/expert parallel
+  fsdp  'data'  — weight sharding across the data axis (ZeRO-style)
+
+The split-learning tier rule (DESIGN.md §3): client-tier parameters use
+**no tensor parallelism** ('tp'→replicated) — the architectural signature
+of split learning is that edge devices cannot shard a model; they remain
+'fsdp'-sharded across the client-fleet axis in the SPMD program (the SPMD
+dual of each client holding its own copy + FedAvg). Server-tier parameters
+are fully 2D-sharded (fsdp × tp).
+
+Every spec is divisibility-guarded against the actual leaf shape: a dim
+that doesn't divide by its mesh axis size falls back to replicated — no
+silent padding; the roofline/hillclimb log records where this costs us.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP_AXIS = "model"
+FSDP_AXIS = "data"
+DP_AXES = ("pod", "data")
+
+_ACTIVE: list["ShardingPolicy"] = []
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+
+    def resolve(self, logical: Sequence) -> P:
+        out = []
+        for ax in logical:
+            if ax is None:
+                out.append(None)
+            elif ax == "dp":
+                axes = tuple(a for a in DP_AXES if a in self.mesh.axis_names)
+                out.append(axes if len(axes) > 1 else axes[0])
+            elif ax == "tp":
+                out.append(TP_AXIS)
+            elif ax == "fsdp":
+                out.append(FSDP_AXIS)
+            else:
+                out.append(ax)
+        return P(*out)
+
+    def constrain(self, x: jax.Array, logical: Sequence) -> jax.Array:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.resolve(logical)))
+
+
+@contextlib.contextmanager
+def set_policy(policy: Optional[ShardingPolicy]):
+    if policy is None:
+        yield
+        return
+    _ACTIVE.append(policy)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def get_policy() -> Optional[ShardingPolicy]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def shard_act(x: jax.Array, logical: Sequence) -> jax.Array:
+    pol = get_policy()
+    if pol is None:
+        return x
+    return pol.constrain(x, logical)
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs by path rules (2D: fsdp x tp)
+# ---------------------------------------------------------------------------
+
+# (regex on the /-joined path, logical spec for the *trailing* dims).
+# Leading dims beyond the rule's length (layer-stack axes) get None.
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table$", ("tp", "fsdp")),
+    (r"head/w$", ("fsdp", "tp")),
+    # column-parallel projections (output-feature sharded)
+    (r"(wq|wk|wv|wg|gate|up|in_proj)/w$", ("fsdp", "tp")),
+    (r"(wq|wk|wv|wg|gate|up|in_proj)/b$", ("tp",)),
+    # row-parallel projections (input-feature sharded)
+    (r"(wo|down|out_proj)/w$", ("tp", "fsdp")),
+    (r"(wo|down|out_proj)/b$", (None,)),
+    # MoE: expert-parallel on the leading expert axis, fsdp on d_model/d_ff
+    (r"w_gate$|w_up$", ("tp", "fsdp", None)),
+    (r"w_down$", ("tp", "fsdp", None)),
+    (r"router/w$", (None, None)),
+    # mamba
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    (r"w_dt_a$", ("tp", None)),
+    (r"w_dt_b$", (None, "tp")),
+    (r"dt_bias$", ("tp",)),
+    (r"(w_B|w_C)/w$", ("tp", None)),
+    (r"A_log$", ("tp", None)),
+    (r"/D$", ("tp",)),
+    # rwkv
+    (r"/u$", ("tp", None)),
+    (r"w_lora_a$", ("fsdp", None)),
+    (r"w_lora_b$", (None, None)),
+    (r"mix/(wr|wk|wv|wg)/w$", ("fsdp", "tp")),
+    (r"mix/wo/w$", ("tp", "fsdp")),
+    (r"ffn/wk/w$", ("fsdp", "tp")),
+    (r"ffn/wv/w$", ("tp", "fsdp")),
+    (r"ffn/wr/w$", ("fsdp", "tp")),
+]
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    return str(entry)
+
+
+def _axis_size(mesh_shape: dict, logical: str) -> int:
+    if logical == "tp":
+        return mesh_shape.get(TP_AXIS, 1)
+    if logical == "fsdp":
+        return mesh_shape.get(FSDP_AXIS, 1)
+    return 1
+
+
+_EXPERT_PAT = re.compile(r"w_gate$|w_up$|w_down$")
+
+
+def _spec_for(path: str, shape: tuple, mesh_shape: dict, tier: str) -> P:
+    for pat, rule in _RULES:
+        if re.search(pat, path):
+            # client_edp: expert-parallel client tier — experts sharded over
+            # the client-fleet ('data') axis, one expert group per edge
+            # cluster; tokens all-to-all instead of 77GB weight gathers
+            # (beyond-paper §Perf lever).
+            if tier == "client_edp" and _EXPERT_PAT.search(path):
+                e = shape[0] if len(shape) == 3 else None
+                size = mesh_shape.get(FSDP_AXIS, 1)
+                if e and size > 1 and e % size == 0:
+                    return P(FSDP_AXIS, None, None)
+            pad = (None,) * (len(shape) - len(rule))
+            full = pad + tuple(rule)
+            out = []
+            for dim, ax in zip(shape, full):
+                if ax is None:
+                    out.append(None)
+                    continue
+                if tier in ("client", "client_edp") and ax == "tp":
+                    out.append(None)        # client tier: no tensor parallelism
+                    continue
+                size = _axis_size(mesh_shape, ax)
+                if size > 1 and dim % size == 0:
+                    out.append(TP_AXIS if ax == "tp" else FSDP_AXIS)
+                else:
+                    out.append(None)        # divisibility guard
+            return P(*out)
+    return P()
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    """axis_name -> size; works for Mesh and AbstractMesh."""
+    if hasattr(mesh, "shape"):
+        try:
+            return dict(mesh.shape)
+        except Exception:
+            pass
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def param_pspecs(params: Any, mesh, *, tier: str = "server",
+                 tier_fn=None, prefix: str = "") -> Any:
+    """PartitionSpec pytree for a param tree via name rules.
+
+    ``tier_fn(path:str)->str`` overrides the uniform tier (used by the split
+    model where groups/<i> have different tiers).
+    """
+    mesh_shape = mesh_axis_sizes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = prefix + "/".join(_path_str(p) for p in path)
+        t = tier_fn(name) if tier_fn is not None else tier
+        specs.append(_spec_for(name, tuple(leaf.shape), mesh_shape, t))
+    return jax.tree_util.tree_unflatten(treedef, specs)

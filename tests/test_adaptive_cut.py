@@ -1,0 +1,70 @@
+"""Adaptive split-point selection (paper future-work feature)."""
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.adaptive_cut import (profile_cuts_cnn,
+                                     profile_cuts_transformer, select_cut)
+from repro.core.link import LinkConfig
+from repro.core.split import init_stages
+from repro.models.cnn import CNN_BUILDERS
+
+
+def test_cnn_cut_profile_monotone_flops():
+    stages = CNN_BUILDERS["mobilenetv2"](12)
+    key = jax.random.PRNGKey(0)
+    params = init_stages(key, stages)
+    x = jax.random.uniform(key, (4, 32, 32, 3))
+    prof = profile_cuts_cnn(stages, params, x)
+    assert len(prof) == len(stages) - 1
+    flops = [c.client_flops for c in prof]
+    assert all(b >= a for a, b in zip(flops, flops[1:]))  # deeper = more
+
+
+def test_cnn_min_energy_cut_is_shallow():
+    """With MobileNetV2's cheap early layers, the energy-optimal cut is
+    client-light — the paper's SL_15,85 finding, now *derived*."""
+    stages = CNN_BUILDERS["mobilenetv2"](12)
+    key = jax.random.PRNGKey(0)
+    params = init_stages(key, stages)
+    x = jax.random.uniform(key, (4, 32, 32, 3))
+    prof = profile_cuts_cnn(stages, params, x)
+    best = select_cut(prof)
+    assert best.client_fraction <= 0.5
+
+
+def test_link_deadline_constraint():
+    stages = CNN_BUILDERS["resnet18"](12)
+    key = jax.random.PRNGKey(0)
+    params = init_stages(key, stages)
+    x = jax.random.uniform(key, (4, 32, 32, 3))
+    slow = LinkConfig(rate_bps=1e6)        # 1 Mb/s: link dominates
+    prof = profile_cuts_cnn(stages, params, x, link=slow)
+    tight = select_cut(prof, max_link_s=min(c.t_link_s for c in prof) * 1.01)
+    free = select_cut(prof)
+    # the deadline forces the smallest-smashed-tensor cut
+    assert tight.smashed_bytes <= free.smashed_bytes
+
+
+def test_int8_link_shifts_optimum_clientward_or_equal():
+    """Compressing the link lowers link cost, so the optimum can only move
+    toward shallower (cheaper-client) cuts or stay."""
+    stages = CNN_BUILDERS["googlenet"](12)
+    key = jax.random.PRNGKey(0)
+    params = init_stages(key, stages)
+    x = jax.random.uniform(key, (4, 32, 32, 3))
+    plain = select_cut(profile_cuts_cnn(stages, params, x,
+                                        link=LinkConfig(rate_bps=20e6)))
+    comp = select_cut(profile_cuts_cnn(
+        stages, params, x, link=LinkConfig(rate_bps=20e6, compress="int8")))
+    assert comp.energy_j <= plain.energy_j + 1e-9
+
+
+def test_transformer_profile():
+    prof = profile_cuts_transformer(ARCHS["smollm-135m"], batch=4, seq=128)
+    assert len(prof) == ARCHS["smollm-135m"].n_layers - 1
+    best = select_cut(prof)
+    # transformer layers are homogeneous: smashed bytes constant, so the
+    # minimum-energy cut is the shallowest — exactly the paper's "first
+    # few layers" prescription
+    assert best.cut_index == 1

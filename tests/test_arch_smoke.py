@@ -1,0 +1,128 @@
+"""Deliverable (f): per-architecture smoke tests.
+
+For each assigned architecture, instantiate the REDUCED variant of the same
+family (<=2 layers/super-blocks, d_model<=256, <=4 experts) and run one
+forward and one train step on CPU, asserting output shapes and no NaNs.
+Decode smoke for the decode-capable archs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.transformer import (decode_state_init, default_cut_layer,
+                                      lm_loss, model_decode_step,
+                                      model_forward, model_init, vocab_padded)
+from repro.optim import adamw, apply_updates
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def make_batch(cfg, key, b=2, s=16, labels=True):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.frontend == "patch_embed":
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            key, (b, cfg.frontend_tokens, cfg.d_model))
+    if cfg.enc_dec:
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (b, cfg.enc_seq_len, cfg.d_model))
+    if labels:
+        batch["labels"] = batch["tokens"]
+    return batch
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    fams = {c.family for c in ARCHS.values()}
+    assert fams == {"dense", "vlm", "audio", "moe", "hybrid", "ssm"}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_limits(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 2 * max(r.attn_period, 1)
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = model_init(cfg, key)
+    b, s = 2, 16
+    batch = make_batch(cfg, key, b, s)
+    logits, aux = model_forward(cfg, params, batch)
+    s_out = s + (cfg.frontend_tokens if cfg.frontend == "patch_embed" else 0)
+    assert logits.shape == (b, s_out, vocab_padded(cfg))
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    cut = default_cut_layer(cfg, 0.15)
+    params = model_init(cfg, key, cut_layer=cut)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    batch = make_batch(cfg, key)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm_loss(cfg, p, batch, cut_layer=cut), has_aux=True)(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    new_params = apply_updates(params, updates)
+
+    assert bool(jnp.isfinite(loss))
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(new_params),
+        jax.tree_util.tree_leaves(params)))
+    assert delta > 0
+    # no grad is NaN
+    for g in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(g).all())
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
+                                  if not ARCHS[a].enc_dec])
+def test_decode_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = model_init(cfg, key)
+    b, max_len = 2, 8
+    state = decode_state_init(cfg, b, max_len)
+    tok = jax.random.randint(key, (b, 1), 0, cfg.vocab)
+    logits, state2 = model_decode_step(cfg, params, state, tok,
+                                       jnp.asarray(0, jnp.int32))
+    assert logits.shape == (b, 1, vocab_padded(cfg))
+    assert bool(jnp.isfinite(logits).all())
+    # state changed (cache write happened)
+    changed = any(
+        float(jnp.abs(a.astype(jnp.float32) - b_.astype(jnp.float32)).sum()) > 0
+        for a, b_ in zip(jax.tree_util.tree_leaves(state2),
+                         jax.tree_util.tree_leaves(state)))
+    assert changed
+
+
+def test_whisper_decode_with_cross_cache():
+    cfg = get_config("whisper-tiny").reduced()
+    key = jax.random.PRNGKey(3)
+    params = model_init(cfg, key)
+    b = 2
+    state = decode_state_init(cfg, b, 8)
+    tok = jax.random.randint(key, (b, 1), 0, cfg.vocab)
+    logits, _ = model_decode_step(cfg, params, state, tok,
+                                  jnp.asarray(0, jnp.int32))
+    assert logits.shape == (b, 1, vocab_padded(cfg))
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_swa_config_respected():
+    cfg = get_config("h2o-danube-1.8b")
+    assert cfg.swa_window == 4096
+    r = cfg.reduced()
+    assert r.swa_window and r.swa_window <= 32

@@ -1,0 +1,76 @@
+"""Algorithm 1 (edge deployment) — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deployment import (build_csr_adjacency, coverage_ok,
+                                   deploy_edge_devices, deploy_gasbac,
+                                   deploy_kmeans, field_side_meters,
+                                   random_sensors, uniform_grid_sensors)
+
+
+def test_field_side():
+    # 100 acres ~ 636m square
+    assert abs(field_side_meters(100) - 636.2) < 1.0
+
+
+def test_csr_adjacency_symmetric():
+    pts = uniform_grid_sensors(100, 25)
+    csr = build_csr_adjacency(pts, 200.0)
+    for i in range(len(pts)):
+        for j in csr.neighbors(i):
+            assert i in csr.neighbors(int(j))
+    # self-coverage
+    for i in range(len(pts)):
+        assert i in csr.neighbors(i)
+
+
+def test_paper_configuration_coverage():
+    """The paper's Fig-2a config: 25 sensors / 100 acres / CR=200m."""
+    pts = uniform_grid_sensors(100, 25)
+    dep = deploy_edge_devices(pts, 200.0)
+    assert coverage_ok(dep)
+    # minimal-ish deployment: far fewer edge devices than sensors
+    assert len(dep.edge_indices) < 25 / 2
+
+
+def test_greedy_beats_or_ties_baselines_device_count():
+    for acres, n in ((100, 25), (140, 36), (200, 49)):
+        pts = uniform_grid_sensors(acres, n)
+        ours = deploy_edge_devices(pts, 200.0)
+        km = deploy_kmeans(pts, 200.0)
+        assert len(ours.edge_indices) <= len(km.edge_indices) + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 30), st.floats(100.0, 400.0), st.integers(0, 10**6))
+def test_coverage_property(n, cr, seed):
+    """Every sensor ends up within CR of its edge device, always."""
+    pts = random_sensors(60, n, seed=seed)
+    dep = deploy_edge_devices(pts, cr)
+    assert coverage_ok(dep)
+    # edge devices are sensors
+    assert set(dep.edge_indices).issubset(set(range(n)))
+    # every sensor assigned
+    assert (dep.assignment >= 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(9, 25), st.integers(0, 10**6))
+def test_load_balance_reasonable(n, seed):
+    pts = random_sensors(80, n, seed=seed)
+    dep = deploy_edge_devices(pts, 250.0)
+    loads = dep.loads
+    assert loads.sum() == n
+    # balanced assignment: no edge device starves while others overflow by
+    # more than the CR-feasibility forces
+    assert loads.max() <= n
+
+
+def test_kmeans_and_gasbac_run():
+    pts = random_sensors(100, 25, seed=3)
+    km = deploy_kmeans(pts, 250.0)
+    gb = deploy_gasbac(pts, 250.0)
+    assert len(km.edge_indices) >= 1
+    assert len(gb.edge_indices) >= 1
+    assert coverage_ok(km)

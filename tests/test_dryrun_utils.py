@@ -1,0 +1,55 @@
+"""Dry-run utilities: HLO collective parser + shape-byte accounting."""
+from repro.launch.dryrun import _shape_bytes, collective_bytes
+
+HLO_SAMPLE = """
+HloModule jit_step
+%all-gather.202 = f32[1536,576]{0,1} all-gather(%convert), channel_id=14
+  %all-reduce.204 = f32[16,4096,576]{2,1,0} all-reduce(%fusion), channel_id=22
+%fusion.9 = f32[16,4096,576]{2,1,0} fusion(%all-reduce.204, %copy.647)
+%collective-permute.136 = bf16[1536,36]{0,1} collective-permute(%bitcast)
+%all-gather-start.5 = (f32[8,2]{1,0}, f32[16,2]{1,0}) all-gather-start(%p0)
+%all-gather-done.5 = f32[16,2]{1,0} all-gather-done(%all-gather-start.5)
+%reduce-scatter.1 = bf16[64,64]{1,0} reduce-scatter(%x), dimensions={0}
+%all-to-all.3 = s8[128]{0} all-to-all(%y)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[1536,576]") == 1536 * 576 * 4
+    assert _shape_bytes("bf16[2,3]{1,0}") == 12
+    assert _shape_bytes("(f32[8,2]{1,0}, f32[16,2]{1,0})") == (16 + 32) * 4
+    assert _shape_bytes("pred[]") == 1          # scalar
+    assert _shape_bytes("token[]") == 0         # unknown type ignored
+
+
+def test_collective_parser_counts_and_bytes():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"]["count"] == 2      # plain + -start (not -done)
+    assert out["all-gather"]["bytes"] == 1536 * 576 * 4 + (16 + 32) * 4
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-reduce"]["bytes"] == 16 * 4096 * 576 * 4
+    assert out["collective-permute"]["count"] == 1
+    assert out["reduce-scatter"]["count"] == 1
+    assert out["all-to-all"]["count"] == 1
+    assert out["all-to-all"]["bytes"] == 128
+    # the fusion line referencing %all-reduce.204 must NOT be counted
+    assert out["total_bytes"] == sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict))
+
+
+def test_roofline_param_count_sanity():
+    import os, sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    from roofline import param_count
+    from repro.configs import ARCHS
+    n, na = param_count(ARCHS["smollm-135m"])
+    assert 100e6 < n < 200e6          # "135M"
+    n, na = param_count(ARCHS["yi-9b"])
+    assert 7e9 < n < 11e9
+    n, na = param_count(ARCHS["arctic-480b"])
+    assert 350e9 < n < 600e9
+    assert na < n / 10                # top-2 of 128 experts: sparse
+    n, na = param_count(ARCHS["jamba-1.5-large-398b"])
+    assert 250e9 < n < 500e9
+    assert na < n / 2

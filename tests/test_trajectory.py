@@ -1,0 +1,88 @@
+"""Algorithm 2 (UAV tour planning) — exactness + energy accounting."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trajectory import (greedy_tour_plan, held_karp,
+                                   nearest_neighbor_tour, plan_tour,
+                                   solve_tsp, two_opt)
+from repro.core.uav_energy import DEFAULT_UAV, UAVParams
+
+
+def brute_force_tsp(points):
+    m = len(points)
+    d = np.linalg.norm(points[:, None] - points[None], axis=-1)
+    best = None
+    for perm in itertools.permutations(range(1, m)):
+        order = (0,) + perm
+        length = sum(d[order[i], order[(i + 1) % m]] for i in range(m))
+        if best is None or length < best:
+            best = length
+    return best
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 7), st.integers(0, 10**6))
+def test_held_karp_is_exact(m, seed):
+    rng = np.random.RandomState(seed)
+    pts = rng.uniform(0, 1000, size=(m, 2))
+    _, hk = held_karp(pts)
+    bf = brute_force_tsp(pts)
+    assert abs(hk - bf) < 1e-6 * max(bf, 1.0)
+
+
+def test_exact_beats_greedy():
+    rng = np.random.RandomState(0)
+    worse = 0
+    for seed in range(20):
+        pts = np.random.RandomState(seed).uniform(0, 1000, size=(8, 2))
+        _, hk = held_karp(pts)
+        _, nn = nearest_neighbor_tour(pts)
+        assert hk <= nn + 1e-9
+        worse += nn > hk + 1e-6
+    assert worse > 0  # greedy is strictly worse somewhere
+
+
+def test_tour_visits_all_once():
+    pts = np.random.RandomState(1).uniform(0, 500, size=(9, 2))
+    order, _ = solve_tsp(pts)
+    assert sorted(order) == list(range(9))
+
+
+def test_plan_tour_rounds_budget():
+    """gamma maximal subject to Eq. (5)-(6) with the delayed-return check."""
+    pts = np.random.RandomState(2).uniform(0, 600, size=(5, 2))
+    base = np.zeros(2)
+    plan = plan_tour(pts, base)
+    assert plan.rounds >= 1
+    # consumed energy within budget
+    assert plan.total_energy <= DEFAULT_UAV.beta + 1e-6
+    # one more round would bust the budget
+    overspend = plan.total_energy + plan.e_per_round
+    assert overspend > DEFAULT_UAV.beta
+
+
+def test_zero_rounds_when_budget_too_small():
+    pts = np.random.RandomState(3).uniform(0, 5000, size=(6, 2))
+    tiny = UAVParams(beta=1e3)
+    plan = plan_tour(pts, np.zeros(2), params=tiny)
+    assert plan.rounds == 0
+
+
+def test_exact_plan_beats_greedy_plan():
+    pts = np.random.RandomState(4).uniform(0, 2000, size=(9, 2))
+    base = np.zeros(2)
+    exact = plan_tour(pts, base)
+    greedy = greedy_tour_plan(pts, base)
+    assert exact.tour_length <= greedy.tour_length + 1e-9
+    assert exact.rounds >= greedy.rounds
+
+
+def test_two_opt_no_worse():
+    pts = np.random.RandomState(5).uniform(0, 1000, size=(20, 2))
+    order, nn_len = nearest_neighbor_tour(pts)
+    _, opt_len = two_opt(pts, order)
+    assert opt_len <= nn_len + 1e-9

@@ -1,0 +1,45 @@
+"""UAV energy model — Eqs. (1)-(2) with Table-I constants."""
+import math
+
+import pytest
+
+from repro.core.uav_energy import DEFAULT_UAV, UAVParams, tour_energy
+
+
+def test_hover_power_components():
+    u = DEFAULT_UAV
+    # P0 = delta/8 * rho * r * a * Omega^3 * R^3
+    p0 = 0.011 / 8 * 1.225 * 0.08 * 0.7 * 320 ** 3 * 0.45 ** 3
+    assert abs(u.P0 - p0) < 1e-6
+    # Pi = (1+k) W^1.5 / sqrt(2 rho a)
+    pi = 1.15 * 63.4 ** 1.5 / math.sqrt(2 * 1.225 * 0.7)
+    assert abs(u.Pi - pi) < 1e-6
+    assert abs(u.xi_h - (p0 + pi)) < 1e-6
+
+
+def test_propulsion_power_at_speed():
+    u = DEFAULT_UAV
+    # Eq. (1) at V=10 has all three terms positive & finite
+    xm = u.xi_m(10.0)
+    assert xm > 0 and math.isfinite(xm)
+    # blade-profile term grows with V^2, parasite with V^3: high speed costs
+    assert u.xi_m(30.0) > u.xi_m(10.0)
+
+
+def test_hover_more_expensive_than_slow_flight():
+    """Classic rotary-wing curve: induced power drops with forward speed, so
+    moderate V is cheaper than hovering."""
+    u = DEFAULT_UAV
+    assert u.xi_m(10.0) < u.xi_h
+
+
+def test_reception_range():
+    u = UAVParams(altitude=30.0)
+    assert abs(u.reception_range(50.0) - math.sqrt(50**2 - 30**2)) < 1e-9
+    assert u.reception_range(10.0) == 0.0  # CR < h
+
+
+def test_tour_energy_budget_decomposition():
+    e = tour_energy(1000.0, 4)
+    assert abs(e["E_total"] - (e["E_move"] + e["E_hover"] + e["E_comm"])) < 1e-6
+    assert e["T_move"] == pytest.approx(100.0)  # 1000m at 10 m/s
