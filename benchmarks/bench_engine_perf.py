@@ -1,0 +1,158 @@
+"""Engine perf: scanned device-resident rounds vs the host-loop reference.
+
+Measures steps/sec of one SL global round (Algorithm 3) executed two ways
+on the same model, data and optimizer state:
+
+  before : the seed's host loop — one jitted split step per
+           (client, local step) with per-step Python dispatch and per-step
+           energy bookkeeping on the host.
+  after  : ``make_multi_client_round`` — the whole round is one compiled
+           program (nested lax.scan over steps x clients, FedAvg inside)
+           with donated state buffers and batches pre-gathered per round.
+
+Both paths are warmed up (compile excluded) and timed over the same number
+of rounds. Results append to results/engine_perf.json and print as the
+usual ``bench,case,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.runtime_flags import enable_fast_cpu_runtime
+
+enable_fast_cpu_runtime()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.split import (SplitStep, apply_stages, init_stages,
+                              make_multi_client_round, partition_stages)
+from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss
+from repro.optim import adamw, apply_updates, init_stacked
+
+CACHE = "results/engine_perf.json"
+
+
+def _setup(model: str, clients: int, steps: int, batch: int, image: int):
+    stages = CNN_BUILDERS[model](12)
+    key = jax.random.PRNGKey(0)
+    params = init_stages(key, stages)
+    cs, cp0, ss, sp, _ = partition_stages(stages, params, 0.25)
+    step = SplitStep(
+        client_fwd=lambda pc, xx: apply_stages(cs, pc, xx),
+        server_loss=lambda ps, sm, yy: (
+            cross_entropy_loss(apply_stages(ss, ps, sm), yy), {}),
+    )
+    bx = jax.random.uniform(jax.random.fold_in(key, 1),
+                            (clients, steps, batch, image, image, 3))
+    by = jax.random.randint(jax.random.fold_in(key, 2),
+                            (clients, steps, batch), 0, 12)
+    return cs, cp0, ss, sp, step, bx, by
+
+
+def bench_host_loop(model: str, *, clients: int, steps: int, batch: int,
+                    image: int, rounds: int) -> float:
+    """Seed-style per-step dispatch; returns steps/sec (post-warmup)."""
+    _, cp0, _, sp, step, bx, by = _setup(model, clients, steps, batch, image)
+    opt_c, opt_s = adamw(1e-3), adamw(1e-3)
+
+    @jax.jit
+    def split_step(cp, cop, spar, sop, xx, yy):
+        loss, _, gc, gs = step.grads(cp, spar, {"inputs": xx, "targets": yy})
+        upc, cop = opt_c.update(gc, cop, cp)
+        ups, sop = opt_s.update(gs, sop, spar)
+        return apply_updates(cp, upc), cop, apply_updates(spar, ups), sop, loss
+
+    cps = [jax.tree_util.tree_map(jnp.copy, cp0) for _ in range(clients)]
+    cops = [opt_c.init(cp0) for _ in range(clients)]
+    spar, sop = sp, opt_s.init(sp)
+    # warmup / compile
+    split_step(cps[0], cops[0], spar, sop, bx[0, 0], by[0, 0])
+
+    t0 = time.time()
+    loss = None
+    for _ in range(rounds):
+        for si in range(steps):
+            for ci in range(clients):
+                cps[ci], cops[ci], spar, sop, loss = split_step(
+                    cps[ci], cops[ci], spar, sop, bx[ci, si], by[ci, si])
+    jax.block_until_ready(loss)
+    return rounds * steps * clients / (time.time() - t0)
+
+
+def bench_scanned(model: str, *, clients: int, steps: int, batch: int,
+                  image: int, rounds: int) -> float:
+    """Device-resident scanned rounds; returns steps/sec (post-warmup)."""
+    _, cp0, _, sp, step, bx, by = _setup(model, clients, steps, batch, image)
+    opt_c, opt_s = adamw(1e-3), adamw(1e-3)
+    engine = jax.jit(make_multi_client_round(step, opt_c, opt_s,
+                                             local_rounds=steps),
+                     donate_argnums=(0, 1, 2, 3))
+    client_stack = jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (clients,) + v.shape), cp0)
+    oc_stack = init_stacked(opt_c, cp0, clients)
+    state = (client_stack, sp, oc_stack, opt_s.init(sp))
+    batches = {"inputs": bx, "targets": by}
+    # warmup / compile
+    *state, losses = engine(*state, batches)
+    jax.block_until_ready(losses)
+
+    t0 = time.time()
+    for _ in range(rounds):
+        *state, losses = engine(*state, batches)
+    jax.block_until_ready(losses)
+    return rounds * steps * clients / (time.time() - t0)
+
+
+def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
+        batch: int = 16, image: int = 32, rounds: int = 10,
+        print_csv: bool = True) -> list[dict]:
+    kw = dict(clients=clients, steps=steps, batch=batch, image=image,
+              rounds=rounds)
+    before = bench_host_loop(model, **kw)
+    after = bench_scanned(model, **kw)
+    rows = [{
+        "bench": "engine_perf",
+        "case": f"{model}/c{clients}s{steps}b{batch}",
+        "steps_per_s_host_loop": round(before, 2),
+        "steps_per_s_scanned": round(after, 2),
+        "speedup": round(after / before, 2),
+    }]
+    os.makedirs("results", exist_ok=True)
+    log = []
+    if os.path.exists(CACHE):
+        try:
+            log = json.load(open(CACHE))
+        except ValueError:
+            log = []
+    json.dump(log + rows, open(CACHE, "w"), indent=1)
+    if print_csv:
+        for r in rows:
+            print(f"{r['bench']},{r['case']},0,"
+                  f"host_loop={r['steps_per_s_host_loop']}steps/s;"
+                  f"scanned={r['steps_per_s_scanned']}steps/s;"
+                  f"speedup={r['speedup']}x")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="tinycnn", choices=sorted(CNN_BUILDERS))
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--image", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=10)
+    args = ap.parse_args()
+    run(model=args.model, clients=args.clients, steps=args.steps,
+        batch=args.batch, image=args.image, rounds=args.rounds)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,11 @@ FLOPs are counted from the XLA-compiled step (per split fraction), turned
 into A5000 roofline times, the client side scaled to Jetson AGX Orin via
 Eq. (9), then converted to energy (board power) and CO2.
 
+FLOP accounting is *symmetric* across FL and SL (repro.core.paper_train's
+counters): FL counts the full fwd+bwd step, SL counts the client prefix's
+fwd + VJP and the server suffix's fwd+bwd (incl. the returned cut
+gradient) — no asymmetric "3x forward" approximations on either side.
+
 Reproduces the paper's headline *qualitative* finding: SL slashes client
 TIME for every backbone, but the ENERGY saving is model-dependent —
 lightweight MobileNetV2 wins on both, while for deeper nets the shallow
@@ -13,14 +18,13 @@ high-resolution client layers + link overhead erode the gain.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.energy import (CO2_G_PER_J, JETSON_AGX_ORIN, RTX_A5000,
                                scale_time)
 from repro.core.link import LinkConfig
-from repro.core.split import apply_stages, init_stages, partition_stages
-from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss
+from repro.core.paper_train import count_fl_step_flops, count_sl_step_flops
+from repro.core.split import init_stages, partition_stages
+from repro.models.cnn import CNN_BUILDERS
 
 SPLITS = {"FL": None, "SL_75_25": 0.75, "SL_40_60": 0.40,
           "SL_25_75": 0.25, "SL_15_85": 0.15}
@@ -28,11 +32,6 @@ BATCH = 16
 IMG = 64
 STEPS_PER_EPOCH = 60     # paper reports per-training-run totals; we report
                          # per-epoch-equivalent (60 minibatches)
-
-
-def _flops(fn, *args) -> float:
-    c = jax.jit(fn).lower(*args).compile().cost_analysis()
-    return float(c.get("flops", 0.0)) if c else 0.0
 
 
 def run(models=("resnet18", "googlenet", "mobilenetv2"),
@@ -47,25 +46,18 @@ def run(models=("resnet18", "googlenet", "mobilenetv2"),
         stages = CNN_BUILDERS[model](12)
         params = init_stages(key, stages)
 
-        full_bwd = _flops(
-            lambda p: jax.grad(lambda q: cross_entropy_loss(
-                apply_stages(stages, q, x), y))(p), params)
+        full_bwd = count_fl_step_flops(stages, params, x, y)
 
         for setting, frac in SPLITS.items():
             if frac is None:
                 client_fl, server_fl, link_bytes = full_bwd, 0.0, 0.0
             else:
                 cs, cp, ss, sp, k = partition_stages(stages, params, frac)
-                smashed = jax.eval_shape(
-                    lambda p, xx: apply_stages(cs, p, xx), cp, x)
-                # client: prefix fwd + its share of bwd ~ 3x prefix fwd
-                client_fl = 3.0 * _flops(
-                    lambda p: apply_stages(cs, p, x), cp)
-                server_fl = _flops(
-                    lambda p, sm: jax.grad(lambda q: cross_entropy_loss(
-                        apply_stages(ss, q, sm), y))(p),
-                    sp, jnp.zeros(smashed.shape, smashed.dtype))
-                link_bytes = 2 * smashed.size * 4  # fwd smashed + grad back
+                client_fl, server_fl, smashed = count_sl_step_flops(
+                    cs, cp, ss, sp, x, y)
+                link_bytes = link.roundtrip_bytes(
+                    smashed.size * smashed.dtype.itemsize,
+                    smashed.dtype.itemsize)
 
             t_src_c = client_fl * STEPS_PER_EPOCH / (RTX_A5000.fp32_tflops * 1e12)
             t_client = scale_time(t_src_c, RTX_A5000, JETSON_AGX_ORIN)

@@ -74,6 +74,7 @@ def run(models=("mobilenetv2",), settings=("FL", "SL_25_75", "SL_15_85"),
                 "bench": "sl_accuracy(fig3)",
                 "case": case,
                 "seconds": round(time.time() - t0, 1),
+                "steps_per_s": round(res["steps_per_s"], 2),
                 "accuracy": round(m["accuracy"], 4),
                 "f1": round(m["f1"], 4),
                 "mcc": round(m["mcc"], 4),

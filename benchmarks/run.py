@@ -7,7 +7,15 @@ Prints ``name,case,us_per_call,derived`` CSV lines per bench.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.runtime_flags import enable_fast_cpu_runtime
+
+enable_fast_cpu_runtime()
 
 
 def main() -> None:
@@ -34,6 +42,10 @@ def main() -> None:
     print("# bench_resource (paper Table III)")
     from . import bench_resource
     bench_resource.run()
+
+    print("# bench_engine_perf (scanned rounds vs host-loop reference)")
+    from . import bench_engine_perf
+    bench_engine_perf.run()
 
     if not args.fast:
         print("# bench_sl_accuracy (paper Fig. 3) — trains CNNs, takes minutes")

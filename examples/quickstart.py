@@ -12,8 +12,12 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import numpy as np
+from repro.runtime_flags import enable_fast_cpu_runtime
+
+enable_fast_cpu_runtime()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.core.deployment import deploy_edge_devices, uniform_grid_sensors
 from repro.core.trajectory import plan_tour
@@ -46,5 +50,6 @@ print(f"[3] SL_25,75 after {cfg.global_rounds} UAV rounds: "
       f"acc={m['accuracy']:.3f} f1={m['f1']:.3f} "
       f"client={res['client_energy'].energy_j/1e3:.3f}kJ "
       f"server={res['server_energy'].energy_j/1e3:.4f}kJ "
-      f"link={res['link_bytes']/1e6:.1f}MB")
+      f"link={res['link_bytes']/1e6:.1f}MB "
+      f"({res['steps_per_s']:.1f} steps/s, scanned rounds)")
 print("done — see benchmarks/ for the full paper tables.")

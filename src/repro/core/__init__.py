@@ -3,7 +3,8 @@ from .deployment import (deploy_edge_devices, deploy_kmeans, deploy_gasbac,
                          uniform_grid_sensors, random_sensors, coverage_ok,
                          Deployment, build_csr_adjacency, field_side_meters)
 from .trajectory import (plan_tour, greedy_tour_plan, solve_tsp, held_karp,
-                         nearest_neighbor_tour, two_opt, TourPlan)
+                         nearest_neighbor_tour, two_opt, TourPlan,
+                         budget_rounds)
 from .uav_energy import UAVParams, DEFAULT_UAV, tour_energy
 from .energy import (EnergyTracker, HardwareProfile, RTX_A5000,
                      JETSON_AGX_ORIN, TPU_V5E, scale_time, roofline_time,
@@ -12,8 +13,9 @@ from .link import LinkConfig, smashed_bytes
 from .split import (Stage, SplitStep, init_stages, apply_stages,
                     partition_stages, cut_index_for_fraction, split_stack,
                     merge_stack, stack_cut_index, make_split_train_step,
-                    make_multi_client_round)
-from .fedavg import fedavg, fedavg_stack, fedavg_pmean
+                    make_multi_client_round, make_fl_round)
+from .fedavg import fedavg, fedavg_stack, fedavg_mean, fedavg_pmean
+from .flops import flops_of, jaxpr_flops, xla_flops, compiled_cost
 from .adaptive_cut import (profile_cuts_cnn, profile_cuts_transformer,
                            select_cut, CutChoice)
 

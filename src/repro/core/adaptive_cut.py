@@ -17,12 +17,11 @@ import dataclasses
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from ..models.transformer import build_groups  # noqa: F401 (API surface)
 from .energy import (HardwareProfile, JETSON_AGX_ORIN, RTX_A5000, scale_time)
 from .link import LinkConfig
-from .split import Stage, apply_stages, partition_stages
+from .split import Stage
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,29 +35,38 @@ class CutChoice:
     energy_j: float
 
 
-def _flops(fn, *args) -> float:
-    try:
-        c = jax.jit(fn).lower(*args).compile().cost_analysis()
-        return float(c.get("flops", 0.0)) if c else 0.0
-    except Exception:
-        return 0.0
-
-
 def profile_cuts_cnn(stages: Sequence[Stage], params, x,
                      *, edge: HardwareProfile = JETSON_AGX_ORIN,
                      link: Optional[LinkConfig] = None,
                      min_client_layers: int = 1,
                      bwd_factor: float = 3.0) -> list[CutChoice]:
-    """Energy profile for every admissible cut of a CNN stage list."""
+    """Energy profile for every admissible cut of a CNN stage list.
+
+    One chained pass: per-stage FLOPs are counted analytically from each
+    stage's jaxpr (``repro.core.flops.jaxpr_flops`` — exact on the convs
+    that dominate) on the activation shape flowing out of the previous
+    stage, and prefix FLOPs are the running sum. This never silently
+    degenerates to 0 (the old XLA-only counter did on backends without
+    ``cost_analysis``) and profiles all cuts without compiling
+    ``len(stages)`` growing prefixes.
+    """
+    from .flops import jaxpr_flops
+
     link = link or LinkConfig()
     total_depth = sum(s.depth for s in stages)
+    # chain activations through the stages once, accumulating fwd FLOPs
+    act = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    cum_flops, smashed_after = [], []
+    running = 0.0
+    for s, p in zip(stages, params):
+        running += jaxpr_flops(s.apply, p, act)
+        act = jax.eval_shape(s.apply, p, act)
+        cum_flops.append(running)
+        smashed_after.append(act)
     out = []
     for k in range(min_client_layers, len(stages)):
-        cs, cp, _, _, _ = (list(stages[:k]), list(params[:k]),
-                           None, None, k)
-        fwd = _flops(lambda p, xx, cs=cs: apply_stages(cs, p, xx), cp, x)
-        smashed = jax.eval_shape(lambda p, xx, cs=cs: apply_stages(cs, p, xx),
-                                 cp, x)
+        fwd = cum_flops[k - 1]
+        smashed = smashed_after[k - 1]
         sm_bytes = int(smashed.size) * smashed.dtype.itemsize
         # edge time: fwd + bwd of the prefix, scaled per Eq. 9 methodology
         t_src = bwd_factor * fwd / (RTX_A5000.fp32_tflops * 1e12)

@@ -89,7 +89,11 @@ class EnergyTracker:
         t = roofline_time(flops, bytes_moved, self.hw, use_tensor=self.use_tensor)
         return self.track_time(label, t)
 
-    def track_time(self, label: str, t: float) -> EnergyRecord:
+    def track_time(self, label: str, t: float, *, count: int = 1) -> EnergyRecord:
+        """Record ``count`` repetitions of a ``t``-second phase as one entry
+        (the scanned trainers account a whole round of identical steps at
+        once instead of per-step host round-trips)."""
+        t = t * count
         e = t * self.hw.power_w
         rec = EnergyRecord(label=label, time_s=t, energy_j=e, co2_g=e * CO2_G_PER_J)
         self.records.append(rec)

@@ -31,6 +31,17 @@ def fedavg(client_params: Sequence, weights: Optional[Sequence[float]] = None):
     return jax.tree_util.tree_map(mean_leaf, *client_params)
 
 
+def fedavg_mean(stacked_params):
+    """Mean over a leading client axis, dropping the axis (one global model).
+
+    The counterpart of ``fedavg`` for the stacked representation the scanned
+    multi-client engine uses; ``fedavg_stack`` keeps/rebroadcasts the axis.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
+        stacked_params)
+
+
 def fedavg_stack(stacked_params):
     """Mean over a leading client axis, rebroadcast to every client."""
     def agg(x):

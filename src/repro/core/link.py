@@ -28,6 +28,10 @@ class LinkConfig:
             return activation_bytes / dtype_bytes * 1.0 * (1.0 + 4.0 / 256.0)
         return activation_bytes
 
+    def roundtrip_bytes(self, activation_bytes: float, dtype_bytes: int = 4) -> float:
+        """Wire bytes of one split step: smashed fwd + cut-gradient return."""
+        return 2.0 * self.wire_bytes(activation_bytes, dtype_bytes)
+
     def transfer_time_s(self, activation_bytes: float, dtype_bytes: int = 4) -> float:
         """Eq. (8): T_SL = L/R (R in bits/s)."""
         return 8.0 * self.wire_bytes(activation_bytes, dtype_bytes) / self.rate_bps

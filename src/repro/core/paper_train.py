@@ -11,27 +11,55 @@ classes as in §IV-C):
             update per client-batch (sequential, as the UAV visits clients
             one at a time); client prefixes FedAvg every global round.
 
-Both loops meter FLOPs-based client/server energy through EnergyTracker
-(Table III) and the UAV link through LinkConfig (Eq. 8).
+Device-resident engine (stacked-client layout)
+----------------------------------------------
+Every per-client quantity — model params, Adam moments, and the round's
+minibatches — carries a leading ``num_clients`` axis. One global round is
+ONE jitted XLA program built by ``repro.core.split``:
+
+  * FL: ``make_fl_round`` — outer ``lax.scan`` over clients, inner scan over
+    local steps, FedAvg folded into the same program.
+  * SL: ``make_multi_client_round`` — outer scan over the ``local_steps``
+    UAV visits, inner scan over clients (server updates stay sequential per
+    client batch, exactly Alg. 3's inner loop), client-prefix FedAvg at the
+    end of the compiled round.
+
+State buffers are donated round-over-round and batches are gathered once
+per round on the host ((clients, steps, batch, ...) arrays), so the hot
+loop performs `global_rounds` dispatches total instead of
+`rounds x clients x local_steps`.
+
+Energy / link accounting
+------------------------
+Nothing is metered inside the hot loop. Per-step FLOPs are counted ONCE
+from the compiled step programs (XLA ``cost_analysis`` with an analytic
+jaxpr-walk fallback — ``repro.core.flops``), symmetrically for both
+pipelines and both tiers: full fwd+bwd for FL, client-prefix fwd+bwd
+(``jax.vjp``) and server-suffix fwd+bwd (grad w.r.t. params *and* smashed
+input) for SL. The smashed-tensor shape comes from ``jax.eval_shape``.
+Those counts become per-step analytic constants (A5000 roofline, client
+side scaled to Jetson via Eq. 9, link bytes via Eq. 8) multiplied by the
+step counts and recorded per (round, client) through EnergyTracker
+(Table III) / LinkConfig.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..data.partition import partition_non_iid
-from ..models.cnn import CNN_BUILDERS, accuracy, cross_entropy_loss
-from ..optim import adamw, apply_updates
+from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
+from ..optim import adamw, init_stacked
 from .energy import (EnergyTracker, HardwareProfile, JETSON_AGX_ORIN,
                      RTX_A5000, scale_time)
-from .fedavg import fedavg
+from .flops import flops_of
 from .link import LinkConfig
-from .split import apply_stages, init_stages, partition_stages
+from .split import (SplitStep, apply_stages, init_stages, make_fl_round,
+                    make_multi_client_round, partition_stages)
 
 
 @dataclasses.dataclass
@@ -50,23 +78,69 @@ class PaperTrainConfig:
     seed: int = 0
 
 
-def _flops_of(fn, *args) -> float:
-    """XLA-counted FLOPs of a jitted callable (per invocation)."""
-    try:
-        c = jax.jit(fn).lower(*args).compile().cost_analysis()
-        return float(c.get("flops", 0.0)) if c else 0.0
-    except Exception:
-        return 0.0
+def _round_batches(x, y, parts, batch_size, steps, rng):
+    """One global round of minibatches, pre-gathered and stacked on a
+    leading client axis: ((clients, steps, b, ...), (clients, steps, b))."""
+    bs = min(batch_size, min(len(idx) for idx in parts))
+    sel = np.stack([rng.choice(idx, size=(steps, bs), replace=True)
+                    for idx in parts])
+    return jnp.asarray(x[sel]), jnp.asarray(y[sel])
 
 
-def _client_batches(x, y, parts, batch_size, steps, rng):
-    """per-client list of `steps` minibatches."""
-    out = []
-    for idx in parts:
-        sel = rng.choice(idx, size=(steps, min(batch_size, len(idx))),
-                         replace=True)
-        out.append([(x[s], y[s]) for s in sel])
-    return out
+def _stack_replicas(tree, n: int):
+    """Broadcast one pytree to n identical replicas on a leading axis."""
+    return jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), tree)
+
+
+def _roofline_s(flops: float, hw: HardwareProfile) -> float:
+    return flops / (hw.fp32_tflops * 1e12)
+
+
+def _client_step_time_s(flops: float) -> float:
+    """Edge-device seconds per step: A5000 roofline scaled via Eq. 9."""
+    return scale_time(_roofline_s(flops, RTX_A5000), RTX_A5000,
+                      JETSON_AGX_ORIN)
+
+
+# ---------------------------------------------------------------------------
+# symmetric per-step FLOP counting (shared with benchmarks/bench_resource)
+# ---------------------------------------------------------------------------
+
+def count_fl_step_flops(stages, params, bx, by) -> float:
+    """XLA-counted (analytic fallback) fwd+bwd FLOPs of one full-model
+    training step on one minibatch."""
+    return flops_of(
+        lambda p, xx, yy: jax.grad(
+            lambda q: cross_entropy_loss(apply_stages(stages, q, xx), yy))(p),
+        params, bx, by)
+
+
+def count_sl_step_flops(cs, cp, ss, sp, bx, by):
+    """Per-tier fwd+bwd FLOPs of one split step, counted symmetrically with
+    ``count_fl_step_flops``.
+
+    client: prefix forward + the VJP that turns the returned cut gradient
+    into client-param gradients (the full client-side backward).
+    server: suffix forward + backward w.r.t. server params AND the smashed
+    input (the cut gradient it sends back).
+    Returns (client_flops, server_flops, smashed_shape_dtype_struct).
+    """
+    smashed_sd = jax.eval_shape(lambda p, xx: apply_stages(cs, p, xx), cp, bx)
+    cut_grad = jnp.zeros(smashed_sd.shape, smashed_sd.dtype)
+
+    def client_step(p, xx, ct):
+        smashed, vjp = jax.vjp(lambda q: apply_stages(cs, q, xx), p)
+        return smashed, vjp(ct)
+
+    def server_step(p, sm, yy):
+        return jax.grad(
+            lambda q, s: cross_entropy_loss(apply_stages(ss, q, s), yy),
+            argnums=(0, 1))(p, sm)
+
+    client_fl = flops_of(client_step, cp, bx, cut_grad)
+    server_fl = flops_of(server_step, sp, cut_grad, by)
+    return client_fl, server_fl, smashed_sd
 
 
 # ---------------------------------------------------------------------------
@@ -78,50 +152,52 @@ def train_fl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
     key = jax.random.PRNGKey(cfg.seed)
     global_params = init_stages(key, stages)
     opt = adamw(cfg.lr)
-    parts = partition_non_iid(np.asarray(y_train), cfg.num_clients,
+    x_train = np.asarray(x_train)
+    y_train = np.asarray(y_train)
+    parts = partition_non_iid(y_train, cfg.num_clients,
                               cfg.classes_per_client,
                               num_classes=cfg.num_classes, seed=cfg.seed)
     rng = np.random.RandomState(cfg.seed)
     tracker_c = EnergyTracker(JETSON_AGX_ORIN)
     tracker_s = EnergyTracker(RTX_A5000)
 
-    @jax.jit
-    def local_step(params, opt_state, bx, by):
-        def loss_fn(p):
-            return cross_entropy_loss(apply_stages(stages, p, bx), by)
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        return apply_updates(params, updates), opt_state, loss
+    def grad_fn(params, batch):
+        bx, by = batch
+        return jax.value_and_grad(
+            lambda p: cross_entropy_loss(apply_stages(stages, p, bx), by))(params)
 
-    sample = (x_train[:cfg.batch_size], y_train[:cfg.batch_size])
-    step_flops = _flops_of(
-        lambda p, bx, by: jax.grad(
-            lambda q: cross_entropy_loss(apply_stages(stages, q, bx), by))(p),
-        global_params, *sample)
+    # one compiled program per global round; global params donated through
+    fl_round = jax.jit(make_fl_round(grad_fn, opt), donate_argnums=(0,))
 
+    # hoisted energy constants: full fwd+bwd on the edge device, per step
+    sample = (jnp.asarray(x_train[:cfg.batch_size]),
+              jnp.asarray(y_train[:cfg.batch_size]))
+    step_flops = count_fl_step_flops(stages, global_params, *sample)
+    t_client_step = _client_step_time_s(step_flops)
+
+    x_test_j = jnp.asarray(x_test)
+    eval_logits = jax.jit(lambda p: apply_stages(stages, p, x_test_j))
+
+    t0 = time.time()
     history = []
     for rnd in range(cfg.global_rounds):
-        batches = _client_batches(x_train, y_train, parts, cfg.batch_size,
-                                  cfg.local_steps, rng)
-        client_models = []
+        batches = _round_batches(x_train, y_train, parts, cfg.batch_size,
+                                 cfg.local_steps, rng)
+        global_params, _losses = fl_round(global_params, batches)
         for ci in range(cfg.num_clients):
-            params = jax.tree_util.tree_map(jnp.copy, global_params)
-            opt_state = opt.init(params)
-            for bx, by in batches[ci]:
-                params, opt_state, loss = local_step(params, opt_state, bx, by)
-                # full fwd+bwd on the edge device (Jetson-scaled via Eq. 9)
-                t_src = _roofline_s(step_flops, RTX_A5000)
-                tracker_c.track_time(f"r{rnd}/c{ci}",
-                                     scale_time(t_src, RTX_A5000,
-                                                JETSON_AGX_ORIN))
-            client_models.append(params)
-        global_params = fedavg(client_models)
+            # full fwd+bwd on the edge device (Jetson-scaled via Eq. 9)
+            tracker_c.track_time(f"r{rnd}/c{ci}", t_client_step,
+                                 count=cfg.local_steps)
         # server cost: aggregation only (negligible flops, small time)
         tracker_s.track_time(f"r{rnd}/agg", 1e-3)
-        history.append(_evaluate(stages, global_params, x_test, y_test))
+        history.append(classification_metrics(eval_logits(global_params),
+                                              y_test, cfg.num_classes))
+    wall_s = time.time() - t0
+    n_steps = cfg.global_rounds * cfg.num_clients * cfg.local_steps
     return {"params": global_params, "history": history,
             "client_energy": tracker_c.total(), "server_energy": tracker_s.total(),
-            "metrics": history[-1], "step_flops": step_flops}
+            "metrics": history[-1], "step_flops": step_flops,
+            "wall_s": wall_s, "steps_per_s": n_steps / max(wall_s, 1e-9)}
 
 
 # ---------------------------------------------------------------------------
@@ -134,90 +210,85 @@ def train_sl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
     params = init_stages(key, stages)
     cs, cp0, ss, sp, k = partition_stages(stages, params, cfg.client_fraction)
     opt_c, opt_s = adamw(cfg.lr), adamw(cfg.lr)
-    parts = partition_non_iid(np.asarray(y_train), cfg.num_clients,
+    x_train = np.asarray(x_train)
+    y_train = np.asarray(y_train)
+    parts = partition_non_iid(y_train, cfg.num_clients,
                               cfg.classes_per_client,
                               num_classes=cfg.num_classes, seed=cfg.seed)
     rng = np.random.RandomState(cfg.seed)
     tracker_c = EnergyTracker(JETSON_AGX_ORIN)
     tracker_s = EnergyTracker(RTX_A5000)
     link = LinkConfig(compress="int8" if cfg.compress_link else "none")
-    link_bytes_total = 0.0
-
-    client_params = [jax.tree_util.tree_map(jnp.copy, cp0)
-                     for _ in range(cfg.num_clients)]
-    client_opts = [opt_c.init(cp0) for _ in range(cfg.num_clients)]
-    server_params = sp
-    server_opt = opt_s.init(sp)
 
     maybe_compress = None
     if cfg.compress_link:
         from ..kernels.quant.ops import link_compress as maybe_compress
 
-    @jax.jit
-    def split_step(cp, cop, spar, sop, bx, by):
-        def loss_fn(cp_, sp_):
-            smashed = apply_stages(cs, cp_, bx)
-            if maybe_compress is not None:
-                smashed = maybe_compress(smashed)
-            logits = apply_stages(ss, sp_, smashed)
-            return cross_entropy_loss(logits, by), smashed
-        (loss, smashed), (gc, gs) = jax.value_and_grad(
-            loss_fn, argnums=(0, 1), has_aux=True)(cp, spar)
-        upc, cop = opt_c.update(gc, cop, cp)
-        ups, sop = opt_s.update(gs, sop, spar)
-        return (apply_updates(cp, upc), cop, apply_updates(spar, ups), sop,
-                loss, smashed)
+    step = SplitStep(
+        client_fwd=lambda pc, xx: apply_stages(cs, pc, xx),
+        server_loss=lambda ps, sm, yy: (
+            cross_entropy_loss(apply_stages(ss, ps, sm), yy), {}),
+        link_constraint=maybe_compress,
+    )
+    sl_round = jax.jit(
+        make_multi_client_round(step, opt_c, opt_s,
+                                local_rounds=cfg.local_steps),
+        donate_argnums=(0, 1, 2, 3))
 
-    # FLOP accounting split by tier
-    sample = (x_train[:cfg.batch_size], y_train[:cfg.batch_size])
-    fl_client = _flops_of(
-        lambda p, bx: apply_stages(cs, p, bx), cp0, sample[0])
-    smashed_shape = jax.eval_shape(lambda p, bx: apply_stages(cs, p, bx),
-                                   cp0, sample[0])
-    fl_server = _flops_of(
-        lambda p, sm, by: jax.grad(
-            lambda q: cross_entropy_loss(apply_stages(ss, q, sm), by))(p),
-        sp, jnp.zeros(smashed_shape.shape, smashed_shape.dtype), sample[1])
+    # stacked-client state: leading num_clients axis everywhere
+    client_stack = _stack_replicas(cp0, cfg.num_clients)
+    oc_stack = init_stacked(opt_c, cp0, cfg.num_clients)
+    server_params = sp
+    server_opt = opt_s.init(sp)
 
+    # hoisted per-step constants: symmetric FLOP accounting + link bytes
+    sample = (jnp.asarray(x_train[:cfg.batch_size]),
+              jnp.asarray(y_train[:cfg.batch_size]))
+    fl_client, fl_server, smashed_sd = count_sl_step_flops(
+        cs, cp0, ss, sp, *sample)
+    t_client_step = _client_step_time_s(fl_client)
+    t_server_step = _roofline_s(fl_server, RTX_A5000)
+    sm_bytes = smashed_sd.size * smashed_sd.dtype.itemsize
+    step_link_bytes = link.roundtrip_bytes(sm_bytes,
+                                           smashed_sd.dtype.itemsize)
+
+    x_test_j = jnp.asarray(x_test)
+    eval_logits = jax.jit(
+        lambda cp, sp_: apply_stages(ss, sp_, apply_stages(cs, cp, x_test_j)))
+
+    t0 = time.time()
     history = []
+    link_bytes_total = 0.0
     for rnd in range(cfg.global_rounds):
-        batches = _client_batches(x_train, y_train, parts, cfg.batch_size,
-                                  cfg.local_steps, rng)
-        for step in range(cfg.local_steps):
-            for ci in range(cfg.num_clients):
-                bx, by = batches[ci][step]
-                (client_params[ci], client_opts[ci], server_params,
-                 server_opt, loss, smashed) = split_step(
-                    client_params[ci], client_opts[ci], server_params,
-                    server_opt, bx, by)
-                # client: fwd + bwd of the prefix ~ 3x prefix fwd flops
-                t_src = _roofline_s(3 * fl_client, RTX_A5000)
-                tracker_c.track_time(
-                    f"r{rnd}/c{ci}", scale_time(t_src, RTX_A5000,
-                                                JETSON_AGX_ORIN))
-                tracker_s.track_time(f"r{rnd}/c{ci}",
-                                     _roofline_s(fl_server, RTX_A5000))
-                sm_bytes = smashed.size * smashed.dtype.itemsize
-                link_bytes_total += 2 * link.wire_bytes(
-                    sm_bytes, smashed.dtype.itemsize)  # fwd + grad return
-        # FedAvg of client prefixes (Alg. 3 line 19)
-        avg = fedavg(client_params)
-        client_params = [jax.tree_util.tree_map(jnp.copy, avg)
-                         for _ in range(cfg.num_clients)]
-        history.append(_evaluate_split(cs, avg, ss, server_params,
-                                       x_test, y_test))
-    return {"client_params": client_params[0], "server_params": server_params,
+        bx, by = _round_batches(x_train, y_train, parts, cfg.batch_size,
+                                cfg.local_steps, rng)
+        (client_stack, server_params, oc_stack, server_opt,
+         _losses) = sl_round(client_stack, server_params, oc_stack,
+                             server_opt, {"inputs": bx, "targets": by})
+        for ci in range(cfg.num_clients):
+            tracker_c.track_time(f"r{rnd}/c{ci}", t_client_step,
+                                 count=cfg.local_steps)
+            tracker_s.track_time(f"r{rnd}/c{ci}", t_server_step,
+                                 count=cfg.local_steps)
+        link_bytes_total += (cfg.num_clients * cfg.local_steps
+                             * step_link_bytes)
+        avg_prefix = jax.tree_util.tree_map(lambda v: v[0], client_stack)
+        history.append(classification_metrics(
+            eval_logits(avg_prefix, server_params), y_test, cfg.num_classes))
+    wall_s = time.time() - t0
+    n_steps = cfg.global_rounds * cfg.num_clients * cfg.local_steps
+    client_params = jax.tree_util.tree_map(lambda v: v[0], client_stack)
+    return {"client_params": client_params, "server_params": server_params,
             "history": history, "metrics": history[-1],
             "client_energy": tracker_c.total(),
             "server_energy": tracker_s.total(),
             "link_bytes": link_bytes_total,
-            "link_time_s": link.transfer_time_s(link_bytes_total, 1),
+            # link_bytes_total is already wire bytes (compression applied);
+            # Eq. (8) directly, not transfer_time_s (would re-compress)
+            "link_time_s": 8.0 * link_bytes_total / link.rate_bps,
             "cut_index": k,
-            "client_flops": fl_client, "server_flops": fl_server}
-
-
-def _roofline_s(flops: float, hw: HardwareProfile) -> float:
-    return flops / (hw.fp32_tflops * 1e12)
+            "client_flops": fl_client, "server_flops": fl_server,
+            "wall_s": wall_s, "steps_per_s": n_steps / max(wall_s, 1e-9)}
 
 
 # ---------------------------------------------------------------------------
@@ -252,13 +323,3 @@ def classification_metrics(logits: jax.Array, labels: jax.Array,
     return {"accuracy": acc, "precision": float(np.mean(precs)),
             "recall": float(np.mean(recs)), "f1": float(np.mean(f1s)),
             "mcc": float(mcc)}
-
-
-def _evaluate(stages, params, x_test, y_test) -> dict:
-    logits = apply_stages(stages, params, x_test)
-    return classification_metrics(logits, y_test, int(logits.shape[-1]))
-
-
-def _evaluate_split(cs, cp, ss, sp, x_test, y_test) -> dict:
-    logits = apply_stages(ss, sp, apply_stages(cs, cp, x_test))
-    return classification_metrics(logits, y_test, int(logits.shape[-1]))

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -66,16 +66,6 @@ def cut_index_for_fraction(stages: Sequence[Stage], client_fraction: float) -> i
         if acc / total >= client_fraction - 1e-9:
             return min(max(i + 1, 1), len(stages) - 1)
     return len(stages) - 1
-
-
-class SplitStages(NamedTuple):
-    client: list  # [(Stage, params)]
-    server: list
-
-    def client_apply(self, params_c, x):
-        for s, _ in self.client:
-            pass
-        raise NotImplementedError  # use functions below
 
 
 def partition_stages(stages: Sequence[Stage], params: Sequence[Params],
@@ -175,17 +165,27 @@ def make_split_train_step(step: SplitStep, opt_c, opt_s):
 
 
 # ---------------------------------------------------------------------------
-# multi-client (faithful Algorithm 3: r local split rounds, then FedAvg)
+# multi-client engine (faithful Algorithm 3 + the FL baseline), device-resident
 # ---------------------------------------------------------------------------
+#
+# Both round builders below compile one *global* round into a single XLA
+# program: per-client params/opt-states/minibatches carry a leading client
+# axis, the round is nested ``lax.scan``s over (local steps x clients), and
+# FedAvg (Alg. 3 line 19) happens inside the compiled program — no host
+# round-trips between steps. Callers jit them with donated state buffers.
 
 def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int):
-    """One *global* round of Algorithm 3 over an explicit client axis.
+    """One global round of Algorithm 3 over an explicit client axis.
 
-    params_c carries a leading client axis (vmap); the single server model is
-    shared — its gradient is summed over clients sequentially (the UAV visits
-    clients one at a time, so server updates are sequential per client batch,
-    matching Alg. 3's inner loop). After r local rounds per client, client
-    params are FedAvg'd (leading-axis mean) and re-broadcast.
+    params_c carries a leading client axis; the single server model is
+    shared — the UAV visits clients one at a time, so server updates are
+    sequential per client batch (inner scan over clients), matching Alg. 3's
+    inner loop; the outer scan runs the ``local_rounds`` visits. After the
+    visits, client params are FedAvg'd (leading-axis mean) and re-broadcast,
+    all inside the one compiled round.
+
+    ``batches`` is a pytree with leading (clients, local_rounds) axes;
+    returned losses have shape (local_rounds, clients).
     """
     from ..optim.optimizers import apply_updates
     from .fedavg import fedavg_stack
@@ -201,19 +201,57 @@ def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int)
         return (params_s, os_), (params_c, oc, loss)
 
     def global_round(params_c_stack, params_s, oc_stack, os_, batches):
-        # batches: pytree with leading (clients, local_rounds) axes
-        losses = []
-        for r in range(local_rounds):
-            def scan_body(carry, xs):
-                pc, oc_i, batch = xs
-                return one_client_update(carry, (pc, oc_i, batch))
-            batch_r = jax.tree_util.tree_map(lambda x: x[:, r], batches)
+        # (clients, local_rounds) -> scan over rounds, inner scan over clients
+        batches_rm = jax.tree_util.tree_map(
+            lambda x: jnp.swapaxes(x, 0, 1), batches)
+
+        def round_body(carry, batch_r):
+            params_c_stack, oc_stack, params_s, os_ = carry
             (params_s, os_), (params_c_stack, oc_stack, loss_c) = jax.lax.scan(
-                scan_body, (params_s, os_),
+                one_client_update, (params_s, os_),
                 (params_c_stack, oc_stack, batch_r))
-            losses.append(loss_c)
+            return (params_c_stack, oc_stack, params_s, os_), loss_c
+
+        carry = (params_c_stack, oc_stack, params_s, os_)
+        carry, losses = jax.lax.scan(round_body, carry, batches_rm)
+        params_c_stack, oc_stack, params_s, os_ = carry
         # FedAvg of client sub-models (Alg. 3 line 19)
         params_c_stack = fedavg_stack(params_c_stack)
-        return params_c_stack, params_s, oc_stack, os_, jnp.stack(losses)
+        return params_c_stack, params_s, oc_stack, os_, losses
+
+    return global_round
+
+
+def make_fl_round(grad_fn: Callable, opt):
+    """One global round of the FL baseline over an explicit client axis.
+
+    ``grad_fn(params, batch) -> (loss, grads)`` on the full model. Each
+    client starts the round from the shared global params with a fresh
+    optimizer state (the paper's per-round local training), runs its local
+    minibatches via the inner scan, and the round ends with FedAvg of the
+    client models — all one compiled program.
+
+    ``batches`` is a pytree with leading (clients, local_steps) axes;
+    returns (new_global_params, losses[clients, local_steps]).
+    """
+    from ..optim.optimizers import apply_updates
+    from .fedavg import fedavg_mean
+
+    def global_round(global_params, batches):
+        opt_state0 = opt.init(global_params)
+
+        def local_step(carry, batch):
+            params, opt_state = carry
+            loss, grads = grad_fn(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return (apply_updates(params, updates), opt_state), loss
+
+        def per_client(_, batch_c):
+            (params, _), losses = jax.lax.scan(
+                local_step, (global_params, opt_state0), batch_c)
+            return None, (params, losses)
+
+        _, (client_stack, losses) = jax.lax.scan(per_client, None, batches)
+        return fedavg_mean(client_stack), losses
 
     return global_round

@@ -11,7 +11,6 @@ Also provides the greedy (nearest-neighbour) tour the baselines use.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 
 import numpy as np
@@ -129,12 +128,27 @@ class TourPlan:
     total_energy: float       # J actually consumed for `rounds` rounds + return
 
 
-def plan_tour(edge_coords: np.ndarray, base: np.ndarray, *,
-              params: UAVParams = DEFAULT_UAV,
-              hover_s_per_stop: float = 30.0, comm_s_per_stop: float = 10.0,
-              exact_limit: int = 16) -> TourPlan:
-    """Algorithm 2, including the delayed-return strategy."""
-    order, d_pi = solve_tsp(edge_coords, exact_limit=exact_limit)
+def budget_rounds(beta: float, e_first: float, e_pi: float,
+                  e_return: float) -> tuple[int, float]:
+    """Closed form of Algorithm 2's budget loop (delayed-return strategy).
+
+    The UAV flies base -> first device + one full round (``e_first``), then
+    keeps adding ``e_pi``-cost rounds while it can still afford the return
+    leg: ``gamma = 1 + floor((beta - e_first - e_return) / e_pi)``.
+    Returns (rounds, total_energy_consumed); (0, 0.0) when even one round
+    plus the return leg busts the budget.
+    """
+    if e_first + e_return > beta:
+        return 0, 0.0
+    extra = int(math.floor((beta - e_first - e_return) / e_pi)) if e_pi > 0 else 0
+    rounds = 1 + max(extra, 0)
+    return rounds, e_first + (rounds - 1) * e_pi + e_return
+
+
+def _plan_from_order(order: list[int], d_pi: float, edge_coords: np.ndarray,
+                     base: np.ndarray, params: UAVParams,
+                     hover_s_per_stop: float, comm_s_per_stop: float) -> TourPlan:
+    """Energy bookkeeping shared by the exact and greedy planners."""
     m = len(edge_coords)
     # per-round energy: movement + per-stop hover & comm (Alg. 2 line 6)
     e_pi = (d_pi / params.V) * params.xi_m() \
@@ -143,19 +157,19 @@ def plan_tour(edge_coords: np.ndarray, base: np.ndarray, *,
     last_dev = edge_coords[order[-1]]
     e_first = (np.linalg.norm(base - first_dev) / params.V) * params.xi_m() + e_pi
     e_return = (np.linalg.norm(last_dev - base) / params.V) * params.xi_m()
-
-    budget = params.beta
-    if e_first + e_return > budget:
-        return TourPlan(order=order, tour_length=d_pi, rounds=0, e_per_round=e_pi,
-                        e_first=e_first, e_return=e_return, total_energy=0.0)
-    budget -= e_first
-    rounds = 1
-    while budget >= e_pi + e_return:
-        budget -= e_pi
-        rounds += 1
-    total = params.beta - budget + e_return
+    rounds, total = budget_rounds(params.beta, e_first, e_pi, e_return)
     return TourPlan(order=order, tour_length=d_pi, rounds=rounds, e_per_round=e_pi,
                     e_first=e_first, e_return=e_return, total_energy=total)
+
+
+def plan_tour(edge_coords: np.ndarray, base: np.ndarray, *,
+              params: UAVParams = DEFAULT_UAV,
+              hover_s_per_stop: float = 30.0, comm_s_per_stop: float = 10.0,
+              exact_limit: int = 16) -> TourPlan:
+    """Algorithm 2, including the delayed-return strategy."""
+    order, d_pi = solve_tsp(edge_coords, exact_limit=exact_limit)
+    return _plan_from_order(order, d_pi, edge_coords, base, params,
+                            hover_s_per_stop, comm_s_per_stop)
 
 
 def greedy_tour_plan(edge_coords: np.ndarray, base: np.ndarray, *,
@@ -167,20 +181,5 @@ def greedy_tour_plan(edge_coords: np.ndarray, base: np.ndarray, *,
     # start from device nearest to base
     start = int(np.linalg.norm(edge_coords - base, axis=-1).argmin())
     order, d_pi = nearest_neighbor_tour(edge_coords, start=start)
-    m = len(edge_coords)
-    e_pi = (d_pi / params.V) * params.xi_m() \
-        + m * (hover_s_per_stop * params.xi_h + comm_s_per_stop * params.xi_c)
-    e_first = (np.linalg.norm(base - edge_coords[order[0]]) / params.V) * params.xi_m() + e_pi
-    e_return = (np.linalg.norm(edge_coords[order[-1]] - base) / params.V) * params.xi_m()
-    budget = params.beta
-    if e_first + e_return > budget:
-        return TourPlan(order=order, tour_length=d_pi, rounds=0, e_per_round=e_pi,
-                        e_first=e_first, e_return=e_return, total_energy=0.0)
-    budget -= e_first
-    rounds = 1
-    while budget >= e_pi + e_return:
-        budget -= e_pi
-        rounds += 1
-    total = params.beta - budget + e_return
-    return TourPlan(order=order, tour_length=d_pi, rounds=rounds, e_per_round=e_pi,
-                    e_first=e_first, e_return=e_return, total_energy=total)
+    return _plan_from_order(order, d_pi, edge_coords, base, params,
+                            hover_s_per_stop, comm_s_per_stop)

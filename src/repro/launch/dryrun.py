@@ -24,6 +24,7 @@ import traceback  # noqa: E402
 import jax        # noqa: E402
 
 from ..configs import ARCHS, INPUT_SHAPES, SplitConfig          # noqa: E402
+from ..core.flops import compiled_cost                          # noqa: E402
 from .mesh import make_production_mesh                          # noqa: E402
 from .steps import (build_step, build_body_probes,              # noqa: E402
                     shape_supported)
@@ -115,7 +116,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compiled_cost(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
 
@@ -147,7 +148,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                         split=split, opts=opts):
                     pj = jax.jit(probe.fn, in_shardings=probe.in_shardings)
                     pc = pj.lower(*probe.args_sds).compile()
-                    pcost = pc.cost_analysis() or {}
+                    pcost = compiled_cost(pc)
                     pcoll = collective_bytes(pc.as_text())
                     bf = float(pcost.get("flops", 0.0))
                     bb = float(pcost.get("bytes accessed", 0.0))

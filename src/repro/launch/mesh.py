@@ -7,18 +7,40 @@ smoke tests and benches see the 1 real CPU device.
 """
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
+
+
+def _mesh_from(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Version-portable concrete Mesh: explicit (devices-array, axis-names)
+    construction — ``jax.sharding.Mesh`` wants an ndarray of devices whose
+    shape IS the mesh shape, not bare ints."""
+    n = math.prod(shape)
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return _mesh_from(shape, axes)
 
 
 def make_host_mesh(*, data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (CPU tests)."""
     n = len(jax.devices())
     assert data * model <= n, f"need {data*model} devices, have {n}"
-    return jax.make_mesh((data, model), ("data", "model"))
+    return _mesh_from((data, model), ("data", "model"))
+
+
+def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Device-free AbstractMesh across jax versions: newer jax takes
+    ``(sizes, names)``; 0.4.3x takes one tuple of (name, size) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))

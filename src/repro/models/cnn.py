@@ -244,10 +244,35 @@ def mobilenetv2_stages(num_classes: int = 12) -> list[Stage]:
     return stages
 
 
+# ---------------------------------------------------------------------------
+# tiny CNN (not a paper backbone — fast-compiling stand-in for engine tests
+# and steps/sec benchmarks)
+# ---------------------------------------------------------------------------
+
+def tiny_cnn_stages(num_classes: int = 12, *, width: int = 8) -> list[Stage]:
+    w = width
+    stages: list[Stage] = [
+        Stage("stem",
+              init=lambda k: _conv_gn_relu_init(k, 3, 3, w),
+              apply=lambda p, x: _conv_gn_relu(p, x, stride=2),
+              depth=1),
+        Stage("block",
+              init=lambda k: _conv_gn_relu_init(k, 3, w, 2 * w),
+              apply=lambda p, x: _conv_gn_relu(p, x, stride=2),
+              depth=1),
+        Stage("head",
+              init=lambda k: nn.linear_init(k, 2 * w, num_classes, bias=True),
+              apply=lambda p, x: nn.linear_apply(p, x.mean(axis=(1, 2))),
+              depth=1),
+    ]
+    return stages
+
+
 CNN_BUILDERS = {
     "resnet18": resnet18_stages,
     "googlenet": googlenet_stages,
     "mobilenetv2": mobilenetv2_stages,
+    "tinycnn": tiny_cnn_stages,
 }
 
 

@@ -1,7 +1,7 @@
 from .optimizers import (adamw, sgd, OptState, Optimizer, apply_updates,
                          clip_by_global_norm, cosine_schedule, warmup_cosine,
-                         constant_schedule)
+                         constant_schedule, init_stacked)
 
 __all__ = ["adamw", "sgd", "OptState", "Optimizer", "apply_updates",
            "clip_by_global_norm", "cosine_schedule", "warmup_cosine",
-           "constant_schedule"]
+           "constant_schedule", "init_stacked"]

@@ -129,3 +129,13 @@ def sgd(lr: Union[float, Schedule] = 1e-2, *, momentum: float = 0.9,
 
 def apply_updates(params: Params, updates: Params) -> Params:
     return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def init_stacked(opt: Optimizer, params: Params, n: int) -> OptState:
+    """Optimizer state for ``n`` model replicas sharing ``params``' shape,
+    stacked on a leading client axis (every leaf, including the step
+    counter, gains a leading ``n`` dim so ``lax.scan`` over clients slices
+    one replica's state per iteration)."""
+    state = opt.init(params)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), state)

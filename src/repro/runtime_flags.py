@@ -1,0 +1,31 @@
+"""Process-level XLA runtime knobs (set BEFORE jax initializes a backend).
+
+jax 0.4.3x defaults XLA:CPU to the new thunk runtime, whose fused
+gradient kernels (depthwise convs in particular) run single-threaded
+inside ``while``/``scan`` bodies — a 10-50x slowdown for the scanned
+multi-client engine on CPU containers. The legacy runtime parallelizes
+those bodies; on accelerators these flags are no-ops.
+
+Entry points that train on CPU (tests via conftest, benchmarks, examples)
+call ``enable_fast_cpu_runtime()`` first thing. Existing user-provided
+``XLA_FLAGS`` are preserved; the flag is only appended when absent so it
+stays overridable.
+"""
+from __future__ import annotations
+
+import os
+
+
+def enable_fast_cpu_runtime() -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" in flags:
+        return  # user already chose; don't override
+    try:
+        import jax  # importing is safe pre-backend-init
+        major, minor = (int(v) for v in jax.__version__.split(".")[:2])
+    except Exception:
+        return
+    if (major, minor) >= (0, 5):
+        return  # legacy runtime (and its flag) removed upstream
+    os.environ["XLA_FLAGS"] = \
+        (flags + " --xla_cpu_use_thunk_runtime=false").strip()

@@ -1,0 +1,45 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+The container image does not ship hypothesis; property-based tests must
+*skip* instead of killing collection of their whole module (the plain
+unit tests in the same files still run). Modules do::
+
+    from _hypothesis_compat import given, settings, st
+
+With hypothesis installed (the CI dev extra: ``pip install -e .[dev]``),
+these are the real objects. Without it, ``given`` replaces the test with
+a zero-argument stub carrying the same skip that ``pytest.importorskip``
+would produce, and ``st``'s strategy constructors return inert
+placeholders that are only ever passed to that stub.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            @pytest.mark.skip(reason="could not import 'hypothesis'")
+            def stub():  # zero-arg: strategy params must not look like fixtures
+                pass
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+        return decorate
+
+    class _InertStrategies:
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+            strategy.__name__ = name
+            return strategy
+
+    st = _InertStrategies()

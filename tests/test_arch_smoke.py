@@ -20,6 +20,14 @@ from repro.optim import adamw, apply_updates
 ALL_ARCHS = sorted(ARCHS)
 
 
+# the slowest CPU compiles (hybrid scan blocks, encoder-decoder, 480b MoE)
+# keep their smokes for the slow job; every family still has default-run
+# coverage through the remaining archs
+def _mark_heavy(archs, heavy):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in heavy else a
+            for a in archs]
+
+
 def make_batch(cfg, key, b=2, s=16, labels=True):
     batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
     if cfg.frontend == "patch_embed":
@@ -47,7 +55,8 @@ def test_reduced_limits(arch):
     assert r.n_experts <= 4
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("arch", _mark_heavy(ALL_ARCHS,
+                                             {"jamba-1.5-large-398b"}))
 def test_forward_smoke(arch):
     cfg = get_config(arch).reduced()
     key = jax.random.PRNGKey(0)
@@ -61,7 +70,11 @@ def test_forward_smoke(arch):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
+_TRAIN_SMOKE_ARCHS = _mark_heavy(
+    ALL_ARCHS, {"jamba-1.5-large-398b", "whisper-tiny", "arctic-480b"})
+
+
+@pytest.mark.parametrize("arch", _TRAIN_SMOKE_ARCHS)
 def test_train_step_smoke(arch):
     cfg = get_config(arch).reduced()
     key = jax.random.PRNGKey(1)
@@ -87,8 +100,9 @@ def test_train_step_smoke(arch):
         assert bool(jnp.isfinite(g).all())
 
 
-@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
-                                  if not ARCHS[a].enc_dec])
+@pytest.mark.parametrize("arch", _mark_heavy(
+    [a for a in ALL_ARCHS if not ARCHS[a].enc_dec],
+    {"jamba-1.5-large-398b"}))
 def test_decode_step_smoke(arch):
     cfg = get_config(arch).reduced()
     key = jax.random.PRNGKey(2)

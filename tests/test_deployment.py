@@ -1,7 +1,7 @@
 """Algorithm 1 (edge deployment) — unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.deployment import (build_csr_adjacency, coverage_ok,
                                    deploy_edge_devices, deploy_gasbac,

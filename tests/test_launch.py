@@ -16,17 +16,13 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, INPUT_SHAPES
+from repro.launch.mesh import abstract_mesh as _abstract_mesh
 from repro.launch.steps import (batch_sds, effective_window, shape_supported,
                                 tier_fn_for)
 from repro.models.transformer import default_cut_layer, model_init
 from repro.parallel.sharding import param_pspecs
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _abstract_mesh(shape, names):
-    from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, names)
 
 
 def test_param_pspecs_rules():
@@ -131,8 +127,8 @@ def test_mini_dryrun_subprocess(tmp_path):
             comp = jax.jit(built.fn, in_shardings=built.in_shardings,
                            out_shardings=built.out_shardings
                            ).lower(*built.args_sds).compile()
-        cost = comp.cost_analysis()
-        print(json.dumps({"flops": float(cost.get("flops", -1))}))
+        from repro.core.flops import compiled_cost
+        print(json.dumps({"flops": float(compiled_cost(comp).get("flops", -1))}))
     """)
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", script], env=env,

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ARCHS
 from repro.core.split import apply_stages, init_stages
@@ -142,7 +142,9 @@ def test_mamba_step_equals_scan():
 # CNNs (paper backbones)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", sorted(CNN_BUILDERS))
+@pytest.mark.parametrize("name", [
+    pytest.param(n, marks=pytest.mark.slow) if n == "googlenet" else n
+    for n in sorted(CNN_BUILDERS)])  # googlenet: slowest eager forward
 def test_cnn_forward_shapes(name):
     stages = CNN_BUILDERS[name](12)
     key = jax.random.PRNGKey(0)

@@ -33,6 +33,7 @@ def test_grouped_moe_tight_capacity_finite():
     assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(aux))
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_close_to_f32():
     cfg = ARCHS["yi-9b"].reduced()
     key = jax.random.PRNGKey(0)
@@ -58,6 +59,7 @@ def test_int8_kv_cache_decode_close_to_f32():
     assert b8 < 0.5 * bf
 
 
+@pytest.mark.slow
 def test_int8_kv_jamba_hybrid():
     cfg = dataclasses.replace(ARCHS["jamba-1.5-large-398b"].reduced(),
                               capacity_factor=16.0)

@@ -53,6 +53,7 @@ def test_cut_fraction_monotone(cnn_setup):
     assert ks[0] >= 1 and ks[-1] <= len(stages) - 1
 
 
+@pytest.mark.slow
 def test_split_backward_equals_joint(cnn_setup):
     """Invariant 2: Algorithm 3's distributed backward == joint autodiff."""
     stages, params, x, y = cnn_setup
@@ -127,8 +128,10 @@ def test_stack_cut_index_moe_clamp():
     assert stack_cut_index(28, 0.15) == 5
 
 
-@pytest.mark.parametrize("arch", ["smollm-135m", "jamba-1.5-large-398b",
-                                  "rwkv6-7b", "whisper-tiny"])
+@pytest.mark.parametrize("arch", [
+    "smollm-135m",
+    pytest.param("jamba-1.5-large-398b", marks=pytest.mark.slow),
+    "rwkv6-7b", "whisper-tiny"])
 def test_transformer_cut_preserves_function(arch):
     """Cutting a transformer into client/server groups must not change the
     function: evaluating the cut model == evaluating the same weights with

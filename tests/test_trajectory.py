@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.trajectory import (greedy_tour_plan, held_karp,
                                    nearest_neighbor_tour, plan_tour,
