@@ -1,24 +1,34 @@
-"""Engine perf: scanned device-resident rounds vs the host-loop reference.
+"""Engine perf: tracked steps/sec log across engine variants and PRs.
 
-Measures steps/sec of one SL global round (Algorithm 3) executed two ways
-on the same model, data and optimizer state:
+Measures steps/sec of one SL global round (Algorithm 3) and one FL round on
+the same model, data and optimizer state across the engine generations:
 
-  before : the seed's host loop — one jitted split step per
-           (client, local step) with per-step Python dispatch and per-step
-           energy bookkeeping on the host.
-  after  : ``make_multi_client_round`` — the whole round is one compiled
-           program (nested lax.scan over steps x clients, FedAvg inside)
-           with donated state buffers and batches pre-gathered per round.
+  sl_host_loop : the seed's host loop — one jitted split step per
+                 (client, local step), per-step Python dispatch.
+  sl_scanned   : ``make_multi_client_round`` — whole round one compiled
+                 program (nested scan, FedAvg inside, donated state).
+  sl_fleet     : ``fleet.engine.make_fleet_sl_round`` — parallel split
+                 learning, client axis vmapped (shardable over `data`).
+  fl_scan      : ``make_fl_round(client_axis='scan')``.
+  fl_vmap      : ``make_fl_round(client_axis='vmap')`` — the ROADMAP
+                 follow-up; the fl_vmap/fl_scan ratio is the measured
+                 steps/s delta bought by the loosened FLEET_EQUIV_ATOL
+                 equivalence bound.
 
-Both paths are warmed up (compile excluded) and timed over the same number
-of rounds. Results append to results/engine_perf.json and print as the
-usual ``bench,case,us_per_call,derived`` CSV.
+Results append to ``results/engine_perf.json`` as a per-PR log — one row
+per (commit, model, case, variant):
+
+    {"commit": "...", "bench": "engine_perf", "model": "tinycnn",
+     "case": "c4s4b16", "variant": "sl_fleet", "steps_per_s": 301.2}
+
+and print as the usual ``bench,case,us_per_call,derived`` CSV.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -31,12 +41,23 @@ enable_fast_cpu_runtime()
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core.split import (SplitStep, apply_stages, init_stages,
-                              make_multi_client_round, partition_stages)
-from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss
-from repro.optim import adamw, apply_updates, init_stacked
+from repro.core.split import (SplitStep, apply_stages, init_stages,  # noqa: E402
+                              make_fl_round, make_multi_client_round,
+                              partition_stages)
+from repro.fleet.engine import make_fleet_sl_round  # noqa: E402
+from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss  # noqa: E402
+from repro.optim import adamw, apply_updates, init_stacked  # noqa: E402
 
 CACHE = "results/engine_perf.json"
+
+
+def _commit() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def _setup(model: str, clients: int, steps: int, batch: int, image: int):
@@ -53,13 +74,14 @@ def _setup(model: str, clients: int, steps: int, batch: int, image: int):
                             (clients, steps, batch, image, image, 3))
     by = jax.random.randint(jax.random.fold_in(key, 2),
                             (clients, steps, batch), 0, 12)
-    return cs, cp0, ss, sp, step, bx, by
+    return stages, params, cs, cp0, ss, sp, step, bx, by
 
 
-def bench_host_loop(model: str, *, clients: int, steps: int, batch: int,
-                    image: int, rounds: int) -> float:
+def bench_sl_host_loop(model: str, *, clients: int, steps: int, batch: int,
+                       image: int, rounds: int) -> float:
     """Seed-style per-step dispatch; returns steps/sec (post-warmup)."""
-    _, cp0, _, sp, step, bx, by = _setup(model, clients, steps, batch, image)
+    _, _, _, cp0, _, sp, step, bx, by = _setup(model, clients, steps, batch,
+                                               image)
     opt_c, opt_s = adamw(1e-3), adamw(1e-3)
 
     @jax.jit
@@ -86,13 +108,13 @@ def bench_host_loop(model: str, *, clients: int, steps: int, batch: int,
     return rounds * steps * clients / (time.time() - t0)
 
 
-def bench_scanned(model: str, *, clients: int, steps: int, batch: int,
-                  image: int, rounds: int) -> float:
-    """Device-resident scanned rounds; returns steps/sec (post-warmup)."""
-    _, cp0, _, sp, step, bx, by = _setup(model, clients, steps, batch, image)
+def _bench_sl_engine(engine_builder, model: str, *, clients: int, steps: int,
+                     batch: int, image: int, rounds: int) -> float:
+    """Shared driver for the compiled SL rounds (scanned / fleet)."""
+    _, _, _, cp0, _, sp, step, bx, by = _setup(model, clients, steps, batch,
+                                               image)
     opt_c, opt_s = adamw(1e-3), adamw(1e-3)
-    engine = jax.jit(make_multi_client_round(step, opt_c, opt_s,
-                                             local_rounds=steps),
+    engine = jax.jit(engine_builder(step, opt_c, opt_s, local_rounds=steps),
                      donate_argnums=(0, 1, 2, 3))
     client_stack = jax.tree_util.tree_map(
         lambda v: jnp.broadcast_to(v[None], (clients,) + v.shape), cp0)
@@ -110,20 +132,56 @@ def bench_scanned(model: str, *, clients: int, steps: int, batch: int,
     return rounds * steps * clients / (time.time() - t0)
 
 
+def bench_sl_scanned(model: str, **kw) -> float:
+    return _bench_sl_engine(make_multi_client_round, model, **kw)
+
+
+def bench_sl_fleet(model: str, **kw) -> float:
+    return _bench_sl_engine(
+        lambda step, oc, os_, local_rounds: make_fleet_sl_round(
+            step, oc, os_, local_rounds=local_rounds), model, **kw)
+
+
+def bench_fl(model: str, *, client_axis: str, clients: int, steps: int,
+             batch: int, image: int, rounds: int) -> float:
+    """FL baseline round, client axis scanned or vmapped."""
+    stages, params, *_, bx, by = _setup(model, clients, steps, batch, image)
+    opt = adamw(1e-3)
+
+    def grad_fn(p, batch_):
+        xx, yy = batch_
+        return jax.value_and_grad(
+            lambda q: cross_entropy_loss(apply_stages(stages, q, xx), yy))(p)
+
+    engine = jax.jit(make_fl_round(grad_fn, opt, client_axis=client_axis),
+                     donate_argnums=(0,))
+    params, losses = engine(params, (bx, by))
+    jax.block_until_ready(losses)
+
+    t0 = time.time()
+    for _ in range(rounds):
+        params, losses = engine(params, (bx, by))
+    jax.block_until_ready(losses)
+    return rounds * steps * clients / (time.time() - t0)
+
+
 def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         batch: int = 16, image: int = 32, rounds: int = 10,
         print_csv: bool = True) -> list[dict]:
     kw = dict(clients=clients, steps=steps, batch=batch, image=image,
               rounds=rounds)
-    before = bench_host_loop(model, **kw)
-    after = bench_scanned(model, **kw)
-    rows = [{
-        "bench": "engine_perf",
-        "case": f"{model}/c{clients}s{steps}b{batch}",
-        "steps_per_s_host_loop": round(before, 2),
-        "steps_per_s_scanned": round(after, 2),
-        "speedup": round(after / before, 2),
-    }]
+    variants = {
+        "sl_host_loop": bench_sl_host_loop(model, **kw),
+        "sl_scanned": bench_sl_scanned(model, **kw),
+        "sl_fleet": bench_sl_fleet(model, **kw),
+        "fl_scan": bench_fl(model, client_axis="scan", **kw),
+        "fl_vmap": bench_fl(model, client_axis="vmap", **kw),
+    }
+    commit = _commit()
+    case = f"c{clients}s{steps}b{batch}"
+    rows = [{"commit": commit, "bench": "engine_perf", "model": model,
+             "case": case, "variant": v, "steps_per_s": round(sps, 2)}
+            for v, sps in variants.items()]
     os.makedirs("results", exist_ok=True)
     log = []
     if os.path.exists(CACHE):
@@ -133,11 +191,14 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
             log = []
     json.dump(log + rows, open(CACHE, "w"), indent=1)
     if print_csv:
+        sl_speed = variants["sl_scanned"] / max(variants["sl_host_loop"], 1e-9)
+        fl_delta = variants["fl_vmap"] / max(variants["fl_scan"], 1e-9)
         for r in rows:
-            print(f"{r['bench']},{r['case']},0,"
-                  f"host_loop={r['steps_per_s_host_loop']}steps/s;"
-                  f"scanned={r['steps_per_s_scanned']}steps/s;"
-                  f"speedup={r['speedup']}x")
+            print(f"{r['bench']},{r['model']}/{case}/{r['variant']},0,"
+                  f"{r['steps_per_s']}steps/s")
+        print(f"engine_perf,{model}/{case}/summary,0,"
+              f"scanned_vs_host={sl_speed:.2f}x;"
+              f"fl_vmap_vs_scan={fl_delta:.2f}x")
     return rows
 
 

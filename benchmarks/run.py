@@ -43,7 +43,8 @@ def main() -> None:
     from . import bench_resource
     bench_resource.run()
 
-    print("# bench_engine_perf (scanned rounds vs host-loop reference)")
+    print("# bench_engine_perf (host-loop vs scanned vs fleet engines; "
+          "appends results/engine_perf.json)")
     from . import bench_engine_perf
     bench_engine_perf.run()
 

@@ -1,6 +1,7 @@
-"""UAV mission simulation: sweep farm sizes and compare deployment +
-trajectory strategies end-to-end (devices, tour, energy, rounds, and the
-SL communication payload per round for each backbone/split).
+"""UAV mission simulation, fleet edition: deployment/trajectory sweep plus a
+full fleet *campaign* — the sharded parallel-SL engine training an 8-client
+fleet under the UAV's energy budget, with fp32 vs int8 link modes compared
+per round (energy / accuracy / wire bytes).
 
     PYTHONPATH=src python examples/uav_mission_sim.py
 """
@@ -9,13 +10,19 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
+from repro.runtime_flags import enable_fast_cpu_runtime
 
-from repro.core.deployment import (deploy_edge_devices, deploy_gasbac,
+enable_fast_cpu_runtime()
+
+import numpy as np  # noqa: E402
+
+from repro.core.deployment import (deploy_edge_devices, deploy_gasbac,  # noqa: E402
                                    deploy_kmeans, uniform_grid_sensors)
-from repro.core.link import LinkConfig
-from repro.core.trajectory import greedy_tour_plan, plan_tour
+from repro.core.link import LinkConfig  # noqa: E402
+from repro.core.trajectory import greedy_tour_plan, plan_tour  # noqa: E402
+from repro.fleet import CampaignConfig, run_link_sweep  # noqa: E402
 
+# ---- deployment + trajectory sweep (paper Fig. 2 / Table II) --------------
 print(f"{'farm':>6} {'method':>14} {'devices':>8} {'tour_m':>8} "
       f"{'kJ/round':>9} {'rounds':>7}")
 for acres, n in ((100, 25), (140, 36), (200, 49), (250, 64)):
@@ -31,12 +38,26 @@ for acres, n in ((100, 25), (140, 36), (200, 49), (250, 64)):
               f"{plan.tour_length:>8.0f} {plan.e_per_round/1e3:>9.1f} "
               f"{plan.rounds:>7}")
 
-# SL link payload per round: smashed bytes for a ResNet18 SL_15,85 batch
-link = LinkConfig(rate_bps=100e6)
-smashed = 16 * 16 * 16 * 64 * 4          # B x H x W x C f32 after stem
-t_plain = link.transfer_time_s(smashed)
-link8 = LinkConfig(rate_bps=100e6, compress="int8")
-t_int8 = link8.transfer_time_s(smashed)
-print(f"\nSL link per batch: {smashed/1e6:.2f} MB -> "
-      f"{t_plain:.2f}s plain / {t_int8:.2f}s int8 "
-      f"({t_plain/t_int8:.1f}x faster with the Pallas quant kernel)")
+# ---- fleet campaign: 8 clients, fp32 vs int8 link -------------------------
+cfg = CampaignConfig(model="tinycnn", num_clients=8, global_rounds=3,
+                     local_steps=2, batch_size=8, image_size=16,
+                     link=LinkConfig(rate_bps=100e6))
+print(f"\nfleet campaign: {cfg.num_clients} clients, {cfg.model}, "
+      f"{cfg.farm_acres:.0f} acres")
+results = run_link_sweep(cfg)
+tour = results["none"].tour
+print(f"tour {tour.tour_length:.0f} m, budget affords {tour.rounds} rounds "
+      f"({tour.e_per_round/1e3:.0f} kJ/round)")
+print(f"{'link':>5} {'rnd':>4} {'loss':>7} {'acc':>6} {'wire_MB':>8} "
+      f"{'link_s':>7} {'link_J':>7} {'client_J':>9} {'uav_kJ':>8}")
+for mode, res in results.items():
+    for r in res.records:
+        print(f"{mode:>5} {r.round:>4} {r.loss:>7.3f} {r.accuracy:>6.3f} "
+              f"{r.link_bytes/1e6:>8.3f} {r.link_time_s:>7.3f} "
+              f"{r.link_energy_j:>7.3f} "
+              f"{r.client_energy_j:>9.4f} {r.uav_energy_j/1e3:>8.1f}")
+tot_none, tot_int8 = (results[m].totals() for m in ("none", "int8"))
+print(f"\nint8 link moves {tot_none['link_bytes']/tot_int8['link_bytes']:.2f}x "
+      f"fewer wire bytes than fp32 on the same campaign "
+      f"({tot_none['link_bytes']/1e6:.2f} MB -> "
+      f"{tot_int8['link_bytes']/1e6:.2f} MB)")

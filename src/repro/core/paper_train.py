@@ -250,7 +250,8 @@ def train_sl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
     t_server_step = _roofline_s(fl_server, RTX_A5000)
     sm_bytes = smashed_sd.size * smashed_sd.dtype.itemsize
     step_link_bytes = link.roundtrip_bytes(sm_bytes,
-                                           smashed_sd.dtype.itemsize)
+                                           smashed_sd.dtype.itemsize,
+                                           scale_block=smashed_sd.shape[-1])
 
     x_test_j = jnp.asarray(x_test)
     eval_logits = jax.jit(

@@ -222,7 +222,7 @@ def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int)
     return global_round
 
 
-def make_fl_round(grad_fn: Callable, opt):
+def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan"):
     """One global round of the FL baseline over an explicit client axis.
 
     ``grad_fn(params, batch) -> (loss, grads)`` on the full model. Each
@@ -230,6 +230,19 @@ def make_fl_round(grad_fn: Callable, opt):
     optimizer state (the paper's per-round local training), runs its local
     minibatches via the inner scan, and the round ends with FedAvg of the
     client models — all one compiled program.
+
+    ``client_axis`` picks how the independent clients are laid out:
+
+      "scan" — sequential ``lax.scan`` over clients. Bit-compatible with the
+               per-client host loop it replaced (1e-4 equivalence bound).
+      "vmap" — clients batched into one SPMD program. Faster (the client
+               axis becomes a data-parallel batch dim XLA can fuse and the
+               fleet layer can shard over the ``data`` mesh axis), but
+               batched convs/reductions reassociate fp32 arithmetic, so
+               equivalence to the scan/host reference holds only to the
+               loosened ``repro.fleet.engine.FLEET_EQUIV_ATOL`` tolerance.
+               The measured steps/s delta is recorded by
+               ``benchmarks/bench_engine_perf.py``.
 
     ``batches`` is a pytree with leading (clients, local_steps) axes;
     returns (new_global_params, losses[clients, local_steps]).
@@ -246,12 +259,19 @@ def make_fl_round(grad_fn: Callable, opt):
             updates, opt_state = opt.update(grads, opt_state, params)
             return (apply_updates(params, updates), opt_state), loss
 
-        def per_client(_, batch_c):
+        def per_client(batch_c):
             (params, _), losses = jax.lax.scan(
                 local_step, (global_params, opt_state0), batch_c)
-            return None, (params, losses)
+            return params, losses
 
-        _, (client_stack, losses) = jax.lax.scan(per_client, None, batches)
+        if client_axis == "vmap":
+            client_stack, losses = jax.vmap(per_client)(batches)
+        elif client_axis == "scan":
+            _, (client_stack, losses) = jax.lax.scan(
+                lambda _, b: (None, per_client(b)), None, batches)
+        else:
+            raise ValueError(f"client_axis must be 'scan' or 'vmap', "
+                             f"got {client_axis!r}")
         return fedavg_mean(client_stack), losses
 
     return global_round

@@ -1,0 +1,47 @@
+"""Fleet subsystem — many heterogeneous split-learning clients as one system.
+
+PR 1's scanned-round engine (``repro.core.split``) made a single round one
+compiled XLA program; this package scales that engine along the *client*
+axis so a whole edge fleet trains as one SPMD program, and wraps it in the
+mission-level simulator the paper's energy claims need at scale.
+
+Layout
+------
+``engine.py``   sharded fleet rounds: the stacked client axis of the FL and
+                SL round builders is vmapped (independent clients — Efficient
+                Parallel Split Learning, Lin et al., arXiv:2303.15991) and
+                optionally sharding-constrained over the ``data`` mesh axis
+                (``launch.mesh`` builds the mesh), so N clients run as one
+                SPMD program. Defines ``FLEET_EQUIV_ATOL``, the documented
+                loosened equivalence tolerance vs the sequential reference.
+``hetero.py``   per-client cut personalization (P3SL, arXiv:2507.17228):
+                clients are assigned cut indices via
+                ``core.adaptive_cut.select_cut`` on their own hardware/link
+                profile, bucketed by cut, and each cut-group runs its own
+                compiled fleet round. Works for both CNN ``Stage`` lists and
+                transformer ``split_stack`` models.
+``link.py``     the compressed link boundary: wires the
+                ``kernels/quant`` int8 straight-through compressor into
+                ``SplitStep`` (opt-in) and turns smashed-tensor shapes into
+                per-step wire-bytes/time/energy constants via
+                ``core.link.LinkConfig`` (int8 payload = 1 byte/elem + f32
+                scale overhead).
+``campaign.py`` multi-round fleet campaign simulator: composes deployment
+                coordinates, the TSP tour (``core.trajectory``), the UAV
+                energy budget (``core.uav_energy``) and the sharded engine
+                into one scenario runner producing per-round
+                energy/accuracy/link-bytes records — the paper's
+                rounds-vs-energy tradeoff across fleet sizes, cuts and link
+                modes.
+"""
+from .engine import (FLEET_EQUIV_ATOL, fleet_sharding, make_fleet_fl_round,
+                     make_fleet_sl_round, shard_client_stack,
+                     validate_fleet_mesh)
+from .hetero import (CutBucket, HeteroFleet, SplitProgram, assign_cuts_cnn,
+                     assign_cuts_transformer, bucket_by_cut,
+                     cnn_split_program, stack_split_program)
+from .link import FleetLink
+from .campaign import (CampaignConfig, CampaignResult, RoundRecord,
+                       run_campaign, run_link_sweep)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

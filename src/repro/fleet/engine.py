@@ -1,0 +1,154 @@
+"""Sharded SPMD fleet rounds: the stacked client axis over the `data` mesh axis.
+
+PR 1's round builders carry every per-client quantity (params, Adam moments,
+minibatches) on a leading client axis but walk that axis with ``lax.scan`` —
+sequential by construction. Here the client axis becomes a *batch* axis:
+
+  * FL — ``make_fleet_fl_round``: ``jax.vmap`` over clients of the local-step
+    scan (clients are fully independent until FedAvg), i.e.
+    ``make_fl_round(..., client_axis='vmap')`` plus sharding constraints.
+  * SL — ``make_fleet_sl_round``: Efficient *Parallel* Split Learning (Lin et
+    al., arXiv:2303.15991): every client's prefix fwd/bwd runs batched via
+    vmap against the shared server suffix, and the server applies ONE update
+    per local step on the client-mean gradient, instead of Algorithm 3's
+    sequential per-client server updates. This is a deliberate semantic
+    variant (the UAV relays all clients' smashed data per hover window); it
+    is NOT numerically equivalent to ``make_multi_client_round`` — its
+    reference is the parallel host loop in ``tests/test_fleet.py``.
+
+With a ``('data','model')`` mesh the leading client axis is
+sharding-constrained to ``data``, so XLA partitions the fleet across
+devices and FedAvg / the server's client-mean gradient lower to all-reduces
+over ``data`` — N clients, one SPMD program, zero host round-trips.
+
+Equivalence tolerance
+---------------------
+``FLEET_EQUIV_ATOL`` is the documented loosened bound for fleet-vs-scan
+comparisons. The scanned engine matches the per-client host loop to 1e-4;
+vmapping the client axis batches the convolutions and reassociates their
+fp32 reductions (and sharding re-tiles them again), which drifts losses by
+up to ~1e-3 after a few Adam steps on the tiny test models. Independent
+clients make this pure arithmetic reassociation, not a semantic change.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.fedavg import fedavg_stack
+from ..core.split import SplitStep, make_fl_round
+from ..optim.optimizers import apply_updates
+
+# Documented loosened tolerance for vmapped/sharded vs sequential rounds
+# (see module docstring; tests and benches assert against this bound).
+FLEET_EQUIV_ATOL = 1e-3
+
+
+def fleet_sharding(mesh) -> NamedSharding:
+    """Sharding of a client-stacked leaf: leading axis over ``data``."""
+    return NamedSharding(mesh, P("data"))
+
+
+def validate_fleet_mesh(mesh, num_clients: int) -> None:
+    """The client axis must divide evenly over ``data`` — no silent padding."""
+    if mesh is None:
+        return
+    data = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+    if num_clients % data:
+        raise ValueError(
+            f"{num_clients} clients do not divide over data={data}; pick a "
+            f"fleet size divisible by the mesh's data axis (launch.mesh."
+            f"make_fleet_mesh chooses one automatically)")
+
+
+def shard_client_stack(tree, mesh):
+    """Host-side placement of a client-stacked pytree onto the fleet mesh."""
+    if mesh is None:
+        return tree
+    s = fleet_sharding(mesh)
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, s), tree)
+
+
+def _constrain(tree, mesh):
+    if mesh is None:
+        return tree
+    s = fleet_sharding(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.with_sharding_constraint(x, s), tree)
+
+
+def make_fleet_fl_round(grad_fn: Callable, opt, *, mesh=None):
+    """FL baseline round with the client axis vmapped and (optionally)
+    sharded over ``data``. Same signature/returns as ``make_fl_round``:
+    ``f(global_params, batches) -> (new_global_params, losses[C, S])``."""
+    vmapped = make_fl_round(grad_fn, opt, client_axis="vmap")
+
+    def global_round(global_params, batches):
+        batches = _constrain(batches, mesh)
+        new_params, losses = vmapped(global_params, batches)
+        # FedAvg already reduced the client axis (all-reduce over `data`
+        # when sharded); losses keep the client-sharded layout.
+        return new_params, _constrain(losses, mesh)
+
+    return global_round
+
+
+def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
+                        mesh=None, server_reduce: str = "mean"):
+    """One global round of *parallel* split learning over a sharded fleet.
+
+    Per local step: every client's prefix runs fwd/bwd batched (vmap over
+    the stacked client params/opt-states/batches) against the shared server
+    suffix; client updates are per-client, the server takes one update on
+    the ``server_reduce`` ('mean' | 'sum') of the per-client server
+    gradients. After ``local_rounds`` steps the client prefixes are
+    FedAvg'd, all inside the one compiled program.
+
+    Signature matches ``make_multi_client_round``:
+    ``f(params_c_stack, params_s, oc_stack, os_, batches)`` with ``batches``
+    leading (clients, local_rounds) axes; losses return as
+    ``(local_rounds, clients)``.
+    """
+    if server_reduce not in ("mean", "sum"):
+        raise ValueError(server_reduce)
+
+    def global_round(params_c_stack, params_s, oc_stack, os_, batches):
+        params_c_stack = _constrain(params_c_stack, mesh)
+        oc_stack = _constrain(oc_stack, mesh)
+        batches = _constrain(batches, mesh)
+        # (clients, local_rounds, ...) -> (local_rounds, clients, ...)
+        batches_rm = jax.tree_util.tree_map(
+            lambda x: jnp.swapaxes(x, 0, 1), batches)
+
+        def per_client_grads(pc, batch, ps):
+            loss, _aux, g_c, g_s = step.grads(pc, ps, batch)
+            return loss, g_c, g_s
+
+        def round_body(carry, batch_r):
+            params_c_stack, oc_stack, params_s, os_ = carry
+            losses, g_c_stack, g_s_stack = jax.vmap(
+                per_client_grads, in_axes=(0, 0, None))(
+                    params_c_stack, batch_r, params_s)
+            up_c, oc_stack = jax.vmap(opt_c.update)(
+                g_c_stack, oc_stack, params_c_stack)
+            params_c_stack = apply_updates(params_c_stack, up_c)
+            # server: ONE update on the fleet-reduced gradient (all-reduce
+            # over `data` when the client axis is sharded)
+            def reduce_g(g):
+                r = jnp.mean if server_reduce == "mean" else jnp.sum
+                return r(g.astype(jnp.float32), axis=0).astype(g.dtype)
+            g_s = jax.tree_util.tree_map(reduce_g, g_s_stack)
+            up_s, os_ = opt_s.update(g_s, os_, params_s)
+            params_s = apply_updates(params_s, up_s)
+            return (params_c_stack, oc_stack, params_s, os_), losses
+
+        carry = (params_c_stack, oc_stack, params_s, os_)
+        carry, losses = jax.lax.scan(round_body, carry, batches_rm)
+        params_c_stack, oc_stack, params_s, os_ = carry
+        params_c_stack = _constrain(fedavg_stack(params_c_stack), mesh)
+        return params_c_stack, params_s, oc_stack, os_, losses
+
+    return global_round

@@ -1,0 +1,240 @@
+"""Per-client cut personalization with bucketed dispatch.
+
+Heterogeneous edge fleets (P3SL, arXiv:2507.17228) don't share one best cut:
+a Jetson-class client wants a deeper prefix than a microcontroller-class
+one, and a starved link moves the optimum toward smaller smashed tensors.
+Here every client gets its own cut from ``core.adaptive_cut.select_cut`` on
+its own (hardware, link) profile, clients are grouped into *cut buckets*,
+and each bucket runs its own compiled fleet round (``engine``): XLA programs
+are shape-specialized per cut, so the bucket — not the client — is the
+compilation unit. Every client belongs to exactly one bucket.
+
+Both model families split the same way through ``SplitProgram``:
+
+  * CNN ``Stage`` lists — slice the stage/param lists at k
+    (``cnn_split_program``).
+  * transformer ``split_stack`` models — slice the stacked layer axis at k
+    and scan blocks on each side (``stack_split_program``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.adaptive_cut import (profile_cuts_cnn, profile_cuts_transformer,
+                                 select_cut)
+from ..core.energy import HardwareProfile
+from ..core.link import LinkConfig
+from ..core.split import SplitStep, Stage, apply_stages, split_stack
+from ..optim.optimizers import init_stacked
+from .engine import make_fleet_sl_round, validate_fleet_mesh
+
+
+# ---------------------------------------------------------------------------
+# cut assignment + bucketing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CutBucket:
+    cut_index: int
+    client_ids: tuple[int, ...]   # global client indices, ascending
+
+
+def bucket_by_cut(cut_indices: Sequence[int]) -> list[CutBucket]:
+    """Group clients by cut index. Deterministic (ascending cut, ascending
+    client id); the buckets partition the fleet — every client exactly once."""
+    by_cut: dict[int, list[int]] = {}
+    for cid, k in enumerate(cut_indices):
+        by_cut.setdefault(int(k), []).append(cid)
+    return [CutBucket(k, tuple(ids)) for k, ids in sorted(by_cut.items())]
+
+
+def _assign_cuts(profile_fn: Callable, edges: Sequence[HardwareProfile],
+                 links: Optional[Sequence[LinkConfig]],
+                 max_link_s: Optional[float]) -> list[int]:
+    """Shared per-client selection loop: identical (hardware, link) profiles
+    share one cut-curve evaluation. ``profile_fn(edge, link)`` returns the
+    cut choices for one profile."""
+    links = list(links) if links is not None else [LinkConfig()] * len(edges)
+    if len(links) != len(edges):
+        raise ValueError("edges and links must be per-client (same length)")
+    cache: dict[tuple, int] = {}
+    cuts = []
+    for edge, link in zip(edges, links):
+        key = (edge, link)
+        if key not in cache:
+            cache[key] = select_cut(profile_fn(edge, link),
+                                    max_link_s=max_link_s).cut_index
+        cuts.append(cache[key])
+    return cuts
+
+
+def assign_cuts_cnn(stages: Sequence[Stage], params, sample_x, *,
+                    edges: Sequence[HardwareProfile],
+                    links: Optional[Sequence[LinkConfig]] = None,
+                    min_client_layers: int = 1,
+                    max_link_s: Optional[float] = None) -> list[int]:
+    """Per-client minimum-energy cut for a CNN stage list. ``edges`` (and
+    optionally ``links``) give each client its own profile."""
+    return _assign_cuts(
+        lambda edge, link: profile_cuts_cnn(
+            stages, params, sample_x, edge=edge, link=link,
+            min_client_layers=min_client_layers),
+        edges, links, max_link_s)
+
+
+def assign_cuts_transformer(cfg, *, batch: int, seq: int,
+                            edges: Sequence[HardwareProfile],
+                            links: Optional[Sequence[LinkConfig]] = None,
+                            max_link_s: Optional[float] = None) -> list[int]:
+    """Per-client minimum-energy cut for a transformer ArchConfig stack."""
+    return _assign_cuts(
+        lambda edge, link: profile_cuts_transformer(
+            cfg, batch=batch, seq=seq, edge=edge, link=link),
+        edges, links, max_link_s)
+
+
+# ---------------------------------------------------------------------------
+# split programs: one cut of one model family, as a SplitStep + params
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SplitProgram:
+    """A model split at one cut: the differentiable step + per-tier inits
+    (every client in a bucket starts from the same prefix init)."""
+    step: SplitStep
+    params_c0: object
+    params_s0: object
+    cut_index: int
+
+
+def cnn_split_program(stages: Sequence[Stage], params, k: int, *,
+                      loss_fn: Callable,
+                      link_boundary: Optional[Callable] = None) -> SplitProgram:
+    """Split a CNN stage list at stage index ``k``. ``loss_fn(logits,
+    targets) -> scalar`` closes the server side."""
+    if not 1 <= k <= len(stages) - 1:
+        raise ValueError(f"cut {k} outside (0, {len(stages)})")
+    cs, cp = list(stages[:k]), list(params[:k])
+    ss, sp = list(stages[k:]), list(params[k:])
+    step = SplitStep(
+        client_fwd=lambda pc, xx: apply_stages(cs, pc, xx),
+        server_loss=lambda ps, sm, yy: (loss_fn(apply_stages(ss, ps, sm), yy),
+                                        {}),
+        link_constraint=link_boundary,
+    )
+    return SplitProgram(step=step, params_c0=cp, params_s0=sp, cut_index=k)
+
+
+def stack_split_program(stacked_params, k: int, *, block_apply: Callable,
+                        loss_fn: Callable,
+                        link_boundary: Optional[Callable] = None) -> SplitProgram:
+    """Split a stacked-block (scan-over-layers) model at layer ``k``.
+
+    ``block_apply(block_params, h) -> h`` applies ONE block (params without
+    the stacked layer axis); ``loss_fn(h, targets) -> scalar`` closes the
+    server side on the last hidden state. Each tier scans its slice of the
+    stack, so the same program serves any transformer ``split_stack`` model.
+    """
+    params_c, params_s = split_stack(stacked_params, k)
+
+    def run_blocks(stack, h):
+        def body(h, blk):
+            return block_apply(blk, h), None
+        h, _ = jax.lax.scan(body, h, stack)
+        return h
+
+    step = SplitStep(
+        client_fwd=run_blocks,
+        server_loss=lambda ps, sm, yy: (loss_fn(run_blocks(ps, sm), yy), {}),
+        link_constraint=link_boundary,
+    )
+    return SplitProgram(step=step, params_c0=params_c, params_s0=params_s,
+                        cut_index=k)
+
+
+# ---------------------------------------------------------------------------
+# bucketed dispatch
+# ---------------------------------------------------------------------------
+
+def _stack_replicas(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), tree)
+
+
+class HeteroFleet:
+    """Per-cut-bucket fleet engines over one shared client population.
+
+    ``build_program(k) -> SplitProgram`` specializes the model to a cut;
+    each bucket owns a compiled ``make_fleet_sl_round`` (its own server
+    suffix — a cut-group is also a server-model group) and the stacked state
+    of its clients. ``run_round(batches)`` slices the global
+    (clients, local_steps, ...) batch stack per bucket, runs every bucket's
+    compiled round, and reassembles losses into (local_steps, clients).
+    """
+
+    def __init__(self, build_program: Callable[[int], SplitProgram],
+                 cut_indices: Sequence[int], opt_c, opt_s, *,
+                 local_rounds: int, mesh=None):
+        self.buckets = bucket_by_cut(cut_indices)
+        self.local_rounds = local_rounds
+        self.num_clients = len(cut_indices)
+        self._ids: list[np.ndarray] = []
+        self._engines = []
+        self._states = []
+        self.programs: dict[int, SplitProgram] = {}
+        for bucket in self.buckets:
+            prog = build_program(bucket.cut_index)
+            if prog.cut_index != bucket.cut_index:
+                raise ValueError("build_program returned a different cut")
+            n = len(bucket.client_ids)
+            # shard a bucket only when its size divides the data axis
+            b_mesh = mesh
+            try:
+                validate_fleet_mesh(b_mesh, n)
+            except ValueError:
+                b_mesh = None
+            # donate the bucket's stacked state round-over-round (batches,
+            # argnum 4, are fresh each round and not donated)
+            engine = jax.jit(make_fleet_sl_round(
+                prog.step, opt_c, opt_s, local_rounds=local_rounds,
+                mesh=b_mesh), donate_argnums=(0, 1, 2, 3))
+            state = (_stack_replicas(prog.params_c0, n), prog.params_s0,
+                     init_stacked(opt_c, prog.params_c0, n),
+                     opt_s.init(prog.params_s0))
+            # the engine donates its state buffers; the initial tiers alias
+            # the caller's (shared) model params, so copy before donating
+            state = jax.tree_util.tree_map(jnp.copy, state)
+            self.programs[bucket.cut_index] = prog
+            self._ids.append(np.asarray(bucket.client_ids))
+            self._engines.append(engine)
+            self._states.append(state)
+
+    @property
+    def cut_of_client(self) -> list[int]:
+        cuts = [0] * self.num_clients
+        for bucket in self.buckets:
+            for cid in bucket.client_ids:
+                cuts[cid] = bucket.cut_index
+        return cuts
+
+    def bucket_state(self, i: int):
+        """(params_c_stack, params_s, oc_stack, os) of bucket ``i``."""
+        return self._states[i]
+
+    def run_round(self, batches) -> np.ndarray:
+        """One global round. ``batches`` is a pytree with leading
+        (num_clients, local_rounds) axes; returns losses
+        (local_rounds, num_clients) with every client filled exactly once."""
+        losses = np.zeros((self.local_rounds, self.num_clients), np.float32)
+        for i, ids in enumerate(self._ids):
+            sub = jax.tree_util.tree_map(
+                lambda x: jnp.take(x, jnp.asarray(ids), axis=0), batches)
+            *state, bucket_losses = self._engines[i](*self._states[i], sub)
+            self._states[i] = tuple(state)
+            losses[:, ids] = np.asarray(bucket_losses)
+        return losses

@@ -30,17 +30,28 @@ def quant_dequant(x: jax.Array, *, use_pallas: bool = False,
     return y.reshape(shape)
 
 
-@jax.custom_vjp
-def link_compress(x: jax.Array) -> jax.Array:
-    return quant_dequant(x)
+def make_link_compress(*, use_pallas: bool = False, interpret: bool = True):
+    """Build a straight-through int8 link compressor bound to one kernel path.
+
+    The fleet link layer (``repro.fleet.link``) uses this to wire the Pallas
+    kernel (or its jnp oracle on CPU containers) into ``SplitStep`` as an
+    opt-in compressed boundary; the returned callable is vmap-able, so the
+    sharded fleet engine can batch it over the client axis.
+    """
+
+    @jax.custom_vjp
+    def compress(x: jax.Array) -> jax.Array:
+        return quant_dequant(x, use_pallas=use_pallas, interpret=interpret)
+
+    def _fwd(x):
+        return compress(x), None
+
+    def _bwd(_, g):
+        return (g,)   # straight-through
+
+    compress.defvjp(_fwd, _bwd)
+    return compress
 
 
-def _fwd(x):
-    return link_compress(x), None
-
-
-def _bwd(_, g):
-    return (g,)   # straight-through
-
-
-link_compress.defvjp(_fwd, _bwd)
+# default compressor: jnp oracle path (runs everywhere, incl. CPU containers)
+link_compress = make_link_compress()

@@ -36,6 +36,24 @@ def make_host_mesh(*, data: int = 1, model: int = 1):
     return _mesh_from((data, model), ("data", "model"))
 
 
+def make_fleet_mesh(num_clients: int, *, max_data: int | None = None):
+    """('data', 'model') mesh for the fleet engine: the largest ``data`` size
+    that divides ``num_clients`` and fits the available devices (model=1 —
+    the client tier never tensor-parallelizes, DESIGN.md §3). Returns None
+    when only one device is usable, so callers can fall back to the
+    unsharded path."""
+    limit = len(jax.devices())
+    if max_data is not None:
+        limit = min(limit, max_data)
+    data = 1
+    for d in range(1, min(limit, num_clients) + 1):
+        if num_clients % d == 0:
+            data = d
+    if data <= 1:
+        return None
+    return _mesh_from((data, 1), ("data", "model"))
+
+
 def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Device-free AbstractMesh across jax versions: newer jax takes
     ``(sizes, names)``; 0.4.3x takes one tuple of (name, size) pairs."""
