@@ -1,19 +1,21 @@
 """Engine perf: tracked steps/sec log across engine variants and PRs.
 
 Measures steps/sec of one SL global round (Algorithm 3) and one FL round on
-the same model, data and optimizer state across the engine generations:
+the same model, data and optimizer state across the engine generations.
+Every compiled variant is now built from the SAME ``ExperimentSpec`` —
+only the ``EngineSpec`` field changes; the seed's host loop stays
+hand-wired as the historical baseline:
 
   sl_host_loop : the seed's host loop — one jitted split step per
                  (client, local step), per-step Python dispatch.
-  sl_scanned   : ``make_multi_client_round`` — whole round one compiled
-                 program (nested scan, FedAvg inside, donated state).
-  sl_fleet     : ``fleet.engine.make_fleet_sl_round`` — parallel split
-                 learning, client axis vmapped (shardable over `data`).
-  fl_scan      : ``make_fl_round(client_axis='scan')``.
-  fl_vmap      : ``make_fl_round(client_axis='vmap')`` — the ROADMAP
-                 follow-up; the fl_vmap/fl_scan ratio is the measured
-                 steps/s delta bought by the loosened FLEET_EQUIV_ATOL
-                 equivalence bound.
+  sl_scanned   : spec ``sl/scan`` — ``make_multi_client_round``; whole
+                 round one compiled program (nested scan, FedAvg inside).
+  sl_fleet     : spec ``sl/vmap`` — parallel split learning, client axis
+                 vmapped (shardable over `data`).
+  fl_scan      : spec ``fl/scan`` — ``make_fl_round(client_axis='scan')``.
+  fl_vmap      : spec ``fl/vmap`` — the fl_vmap/fl_scan ratio is the
+                 measured steps/s delta bought by the loosened
+                 FLEET_EQUIV_ATOL equivalence bound.
 
 Results append to ``results/engine_perf.json`` as a per-PR log — one row
 per (commit, model, case, variant):
@@ -22,10 +24,13 @@ per (commit, model, case, variant):
      "case": "c4s4b16", "variant": "sl_fleet", "steps_per_s": 301.2}
 
 and print as the usual ``bench,case,us_per_call,derived`` CSV.
+``benchmarks/report.py --check`` reads the log and flags >10% steps/s
+regressions between the last two logged commits.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import subprocess
@@ -41,12 +46,11 @@ enable_fast_cpu_runtime()
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core.split import (SplitStep, apply_stages, init_stages,  # noqa: E402
-                              make_fl_round, make_multi_client_round,
-                              partition_stages)
-from repro.fleet.engine import make_fleet_sl_round  # noqa: E402
+from repro.api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,  # noqa: E402
+                       ExperimentSpec, ModelSpec, compile_experiment)
+from repro.core.split import SplitStep, apply_stages  # noqa: E402
 from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss  # noqa: E402
-from repro.optim import adamw, apply_updates, init_stacked  # noqa: E402
+from repro.optim import adamw, apply_updates  # noqa: E402
 
 CACHE = "results/engine_perf.json"
 
@@ -60,29 +64,55 @@ def _commit() -> str:
         return "unknown"
 
 
-def _setup(model: str, clients: int, steps: int, batch: int, image: int):
-    stages = CNN_BUILDERS[model](12)
-    key = jax.random.PRNGKey(0)
-    params = init_stages(key, stages)
-    cs, cp0, ss, sp, _ = partition_stages(stages, params, 0.25)
+def _base_spec(model: str, clients: int, steps: int, batch: int,
+               image: int) -> ExperimentSpec:
+    return ExperimentSpec(
+        model=ModelSpec(name=model, num_classes=12),
+        data=DataSpec(kind="synthetic", image_size=image,
+                      classes_per_client=3),
+        clients=ClientSpec(num_clients=clients),
+        cut_policy=CutPolicy(mode="fraction", fraction=0.25),
+        engine=EngineSpec(kind="sl", client_axis="scan"),
+        local_steps=steps, batch_size=batch)
+
+
+def bench_spec_variant(spec: ExperimentSpec, *, rounds: int) -> float:
+    """steps/sec of one compiled plan variant (post-warmup). The same
+    fixed batch stack drives every round via ``Plan.raw_round`` — rounds
+    queue back-to-back with one block at the end, like the legacy bench
+    (``run_round``'s per-round record assembly would serialize dispatch)."""
+    plan = compile_experiment(spec)
+    state = plan.init()
+    batches = plan.round_batches(state)
+    es = state.engine_state
+    # warmup / compile
+    es, losses = plan.raw_round(es, batches)
+    jax.block_until_ready(losses)
+
+    t0 = time.time()
+    for _ in range(rounds):
+        es, losses = plan.raw_round(es, batches)
+    jax.block_until_ready(losses)
+    n = spec.clients.num_clients * spec.local_steps
+    return rounds * n / (time.time() - t0)
+
+
+def bench_sl_host_loop(spec: ExperimentSpec, *, rounds: int) -> float:
+    """Seed-style per-step dispatch; returns steps/sec (post-warmup)."""
+    plan = compile_experiment(spec)
+    clients, steps = spec.clients.num_clients, spec.local_steps
+    k = plan.cut_of_client[0]
+    stages, params = plan.stages, plan.params0
+    cs, cp0 = list(stages[:k]), list(params[:k])
+    ss, sp = list(stages[k:]), list(params[k:])
     step = SplitStep(
         client_fwd=lambda pc, xx: apply_stages(cs, pc, xx),
         server_loss=lambda ps, sm, yy: (
             cross_entropy_loss(apply_stages(ss, ps, sm), yy), {}),
     )
-    bx = jax.random.uniform(jax.random.fold_in(key, 1),
-                            (clients, steps, batch, image, image, 3))
-    by = jax.random.randint(jax.random.fold_in(key, 2),
-                            (clients, steps, batch), 0, 12)
-    return stages, params, cs, cp0, ss, sp, step, bx, by
-
-
-def bench_sl_host_loop(model: str, *, clients: int, steps: int, batch: int,
-                       image: int, rounds: int) -> float:
-    """Seed-style per-step dispatch; returns steps/sec (post-warmup)."""
-    _, _, _, cp0, _, sp, step, bx, by = _setup(model, clients, steps, batch,
-                                               image)
-    opt_c, opt_s = adamw(1e-3), adamw(1e-3)
+    batches = plan.round_batches(plan.init())
+    bx, by = batches["inputs"], batches["targets"]
+    opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
 
     @jax.jit
     def split_step(cp, cop, spar, sop, xx, yy):
@@ -108,74 +138,22 @@ def bench_sl_host_loop(model: str, *, clients: int, steps: int, batch: int,
     return rounds * steps * clients / (time.time() - t0)
 
 
-def _bench_sl_engine(engine_builder, model: str, *, clients: int, steps: int,
-                     batch: int, image: int, rounds: int) -> float:
-    """Shared driver for the compiled SL rounds (scanned / fleet)."""
-    _, _, _, cp0, _, sp, step, bx, by = _setup(model, clients, steps, batch,
-                                               image)
-    opt_c, opt_s = adamw(1e-3), adamw(1e-3)
-    engine = jax.jit(engine_builder(step, opt_c, opt_s, local_rounds=steps),
-                     donate_argnums=(0, 1, 2, 3))
-    client_stack = jax.tree_util.tree_map(
-        lambda v: jnp.broadcast_to(v[None], (clients,) + v.shape), cp0)
-    oc_stack = init_stacked(opt_c, cp0, clients)
-    state = (client_stack, sp, oc_stack, opt_s.init(sp))
-    batches = {"inputs": bx, "targets": by}
-    # warmup / compile
-    *state, losses = engine(*state, batches)
-    jax.block_until_ready(losses)
-
-    t0 = time.time()
-    for _ in range(rounds):
-        *state, losses = engine(*state, batches)
-    jax.block_until_ready(losses)
-    return rounds * steps * clients / (time.time() - t0)
-
-
-def bench_sl_scanned(model: str, **kw) -> float:
-    return _bench_sl_engine(make_multi_client_round, model, **kw)
-
-
-def bench_sl_fleet(model: str, **kw) -> float:
-    return _bench_sl_engine(
-        lambda step, oc, os_, local_rounds: make_fleet_sl_round(
-            step, oc, os_, local_rounds=local_rounds), model, **kw)
-
-
-def bench_fl(model: str, *, client_axis: str, clients: int, steps: int,
-             batch: int, image: int, rounds: int) -> float:
-    """FL baseline round, client axis scanned or vmapped."""
-    stages, params, *_, bx, by = _setup(model, clients, steps, batch, image)
-    opt = adamw(1e-3)
-
-    def grad_fn(p, batch_):
-        xx, yy = batch_
-        return jax.value_and_grad(
-            lambda q: cross_entropy_loss(apply_stages(stages, q, xx), yy))(p)
-
-    engine = jax.jit(make_fl_round(grad_fn, opt, client_axis=client_axis),
-                     donate_argnums=(0,))
-    params, losses = engine(params, (bx, by))
-    jax.block_until_ready(losses)
-
-    t0 = time.time()
-    for _ in range(rounds):
-        params, losses = engine(params, (bx, by))
-    jax.block_until_ready(losses)
-    return rounds * steps * clients / (time.time() - t0)
-
-
 def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         batch: int = 16, image: int = 32, rounds: int = 10,
         print_csv: bool = True) -> list[dict]:
-    kw = dict(clients=clients, steps=steps, batch=batch, image=image,
-              rounds=rounds)
+    base = _base_spec(model, clients, steps, batch, image)
     variants = {
-        "sl_host_loop": bench_sl_host_loop(model, **kw),
-        "sl_scanned": bench_sl_scanned(model, **kw),
-        "sl_fleet": bench_sl_fleet(model, **kw),
-        "fl_scan": bench_fl(model, client_axis="scan", **kw),
-        "fl_vmap": bench_fl(model, client_axis="vmap", **kw),
+        "sl_host_loop": bench_sl_host_loop(base, rounds=rounds),
+        "sl_scanned": bench_spec_variant(base, rounds=rounds),
+        "sl_fleet": bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("sl", "vmap")),
+            rounds=rounds),
+        "fl_scan": bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("fl", "scan")),
+            rounds=rounds),
+        "fl_vmap": bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("fl", "vmap")),
+            rounds=rounds),
     }
     commit = _commit()
     case = f"c{clients}s{steps}b{batch}"

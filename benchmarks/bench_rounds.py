@@ -1,12 +1,24 @@
 """Paper Eq. (6) / Algorithm 2: communication rounds gamma vs energy budget,
-and the delayed-return strategy's advantage over return-every-round."""
+and the delayed-return strategy's advantage over return-every-round.
+
+The mission is declared as an ``repro.api.MissionSpec`` (the same object an
+``ExperimentSpec`` embeds to budget a training campaign); the sweep edits
+only its UAV battery field. Also reports the per-step link deadline the
+hover window implies (``mission_max_link_s``) — the bound a campaign's
+adaptive cut selection runs under.
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
+from repro.api import MissionSpec, mission_max_link_s
 from repro.core.deployment import deploy_edge_devices, uniform_grid_sensors
 from repro.core.trajectory import plan_tour
 from repro.core.uav_energy import UAVParams
+
+LOCAL_STEPS = 2   # steps per stop when deriving the link deadline
 
 
 def run(print_csv: bool = True) -> list[dict]:
@@ -14,12 +26,15 @@ def run(print_csv: bool = True) -> list[dict]:
     pts = uniform_grid_sensors(100, 25)
     dep = deploy_edge_devices(pts, 200.0)
     base = np.zeros(2)
+    mission = MissionSpec(farm_acres=100.0)
     for frac in (0.25, 0.5, 1.0, 2.0):
-        params = UAVParams(beta=1.9e6 * frac)
-        plan = plan_tour(dep.edge_coords, base, params=params)
+        m = dataclasses.replace(mission, uav=UAVParams(beta=1.9e6 * frac))
+        plan = plan_tour(dep.edge_coords, base, params=m.uav,
+                         hover_s_per_stop=m.hover_s_per_stop,
+                         comm_s_per_stop=m.comm_s_per_stop)
         # return-to-base-every-round baseline
         per_round_with_return = plan.e_first + plan.e_return
-        naive = int(params.beta // per_round_with_return) \
+        naive = int(m.uav.beta // per_round_with_return) \
             if per_round_with_return > 0 else 0
         rows.append({
             "bench": "rounds(eq6)",
@@ -28,13 +43,16 @@ def run(print_csv: bool = True) -> list[dict]:
             "gamma_naive_return": naive,
             "kj_per_round": round(plan.e_per_round / 1e3, 2),
             "gain_rounds": plan.rounds - naive,
+            "max_link_s": round(mission_max_link_s(
+                m.hover_s_per_stop, m.comm_s_per_stop, LOCAL_STEPS), 2),
         })
     if print_csv:
         for r in rows:
             print(f"{r['bench']},{r['case']},0,"
                   f"gamma={r['gamma_delayed_return']};"
                   f"naive={r['gamma_naive_return']};"
-                  f"kJ/round={r['kj_per_round']}")
+                  f"kJ/round={r['kj_per_round']};"
+                  f"max_link_s={r['max_link_s']}")
     return rows
 
 

@@ -1,19 +1,33 @@
-"""Generate EXPERIMENTS.md from recorded artifacts.
+"""Generate EXPERIMENTS.md from recorded artifacts — and gate perf trends.
 
-    PYTHONPATH=src python -m benchmarks.report
+    PYTHONPATH=src python -m benchmarks.report            # write EXPERIMENTS.md
+    PYTHONPATH=src python benchmarks/report.py --check    # perf trend gate
 
 Sections: paper reproduction tables (Fig.2 / Table II / Eq.6 / Table III /
 Fig.3), §Dry-run, §Roofline — all derived from results/; §Perf is included
 verbatim from results/PERF_LOG.md (the hillclimb log).
+
+``--check`` reads ``results/engine_perf.json`` (the per-commit steps/sec
+log appended by ``benchmarks/bench_engine_perf.py``), compares the last
+two logged commits on every (model, case, variant) they share, and exits
+nonzero when any variant regressed by more than ``--threshold`` (default
+10%) — the CI perf gate. ``--relative`` divides each variant's steps/s by
+the same commit's ``sl_host_loop`` baseline before comparing: the host
+loop is the never-optimized reference, so the ratio cancels machine speed
+and isolates engine regressions — use it when the two commits' rows come
+from different machines (the committed log vs a CI runner).
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PERF_LOG = "results/engine_perf.json"
 
 
 def _fmt_bytes(b):
@@ -185,6 +199,107 @@ def roofline_section() -> str:
     return "\n".join(out)
 
 
+BASELINE_VARIANT = "sl_host_loop"
+
+
+def perf_trend(rows: list[dict], *, threshold: float = 0.10,
+               relative: bool = False) -> tuple[list[dict], list[str]]:
+    """Compare the last two logged commits of the engine-perf log.
+
+    ``rows`` is the append-only ``engine_perf.json`` list; commit order is
+    first-appearance order (the log is chronological). Returns
+    ``(comparisons, regressions)``: one comparison dict per
+    (model, case, variant) key both commits share (the latest row wins when
+    a commit logged a key twice), and a flat list of human-readable
+    regression strings for every key whose metric dropped more than
+    ``threshold``.
+
+    ``relative`` normalizes each variant by the same commit's
+    ``sl_host_loop`` row for that (model, case) — the seed-style reference
+    loop nobody optimizes — so comparisons across machines measure engine
+    speedup, not machine speed. Keys without a baseline on both sides
+    (including the baseline itself) fall back to absolute steps/s.
+    """
+    rows = [r for r in rows if r.get("bench") == "engine_perf"
+            and "steps_per_s" in r]
+    commits: list[str] = []
+    for r in rows:
+        if r["commit"] not in commits:
+            commits.append(r["commit"])
+    if len(commits) < 2:
+        return [], []
+    prev_c, cur_c = commits[-2], commits[-1]
+
+    def keyed(commit):
+        out = {}
+        for r in rows:
+            if r["commit"] == commit:
+                out[(r["model"], r["case"], r["variant"])] = r["steps_per_s"]
+        return out
+
+    prev, cur = keyed(prev_c), keyed(cur_c)
+    comparisons, regressions = [], []
+    for key in sorted(set(prev) & set(cur)):
+        p, c = prev[key], cur[key]
+        unit = "steps/s"
+        if relative and key[2] != BASELINE_VARIANT:
+            base_key = (key[0], key[1], BASELINE_VARIANT)
+            pb, cb = prev.get(base_key, 0), cur.get(base_key, 0)
+            if pb > 0 and cb > 0:
+                p, c = round(p / pb, 3), round(c / cb, 3)
+                unit = "x host_loop"
+        delta = (c - p) / p if p > 0 else 0.0
+        comp = {"model": key[0], "case": key[1], "variant": key[2],
+                "prev_commit": prev_c, "cur_commit": cur_c,
+                "prev_steps_per_s": p, "cur_steps_per_s": c, "unit": unit,
+                "delta_pct": round(100.0 * delta, 1)}
+        comparisons.append(comp)
+        if relative and key[2] == BASELINE_VARIANT:
+            continue   # the baseline row only measures machine speed here
+        if delta < -threshold:
+            regressions.append(
+                f"{key[0]}/{key[1]}/{key[2]}: {p} -> {c} {unit} "
+                f"({comp['delta_pct']}% vs {prev_c})")
+    return comparisons, regressions
+
+
+def check_perf(path: str = PERF_LOG, *, threshold: float = 0.10,
+               relative: bool = False) -> int:
+    """CLI trend gate: 0 = ok (or nothing comparable), 1 = regression."""
+    if not os.path.exists(path):
+        print(f"perf-check: no {path}; nothing to compare")
+        return 0
+    try:
+        rows = json.load(open(path))
+    except ValueError:
+        print(f"perf-check: {path} is not valid JSON")
+        return 1
+    comparisons, regressions = perf_trend(rows, threshold=threshold,
+                                          relative=relative)
+    if not comparisons:
+        print("perf-check: <2 commits share a (model, case, variant) key; "
+              "nothing to compare")
+        return 0
+    cur = comparisons[0]["cur_commit"]
+    prev = comparisons[0]["prev_commit"]
+    print(f"perf-check: {cur} vs {prev} "
+          f"({len(comparisons)} comparable variants, "
+          f"threshold -{threshold:.0%}"
+          f"{', relative to ' + BASELINE_VARIANT if relative else ''})")
+    for c in comparisons:
+        print(f"  {c['model']}/{c['case']}/{c['variant']}: "
+              f"{c['prev_steps_per_s']} -> {c['cur_steps_per_s']} "
+              f"{c['unit']} ({c['delta_pct']:+}%)")
+    if regressions:
+        print(f"perf-check: {len(regressions)} REGRESSION(S) "
+              f"worse than {threshold:.0%}:")
+        for r in regressions:
+            print(f"  !! {r}")
+        return 1
+    print("perf-check: ok")
+    return 0
+
+
 HEADER = """# EXPERIMENTS
 
 Artifacts: `results/dryrun/*.json` (per-pair dry-run records),
@@ -195,6 +310,20 @@ Artifacts: `results/dryrun/*.json` (per-pair dry-run records),
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="perf trend gate over results/engine_perf.json "
+                         "(nonzero exit on >threshold regressions)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="fractional steps/s drop that fails --check")
+    ap.add_argument("--relative", action="store_true",
+                    help="normalize by each commit's sl_host_loop row "
+                         "(cross-machine comparisons, e.g. CI vs the "
+                         "committed log)")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check_perf(threshold=args.threshold,
+                            relative=args.relative))
     parts = [HEADER, paper_sections(), "", training_section(), "",
              dryrun_section(), "", roofline_section(), ""]
     if os.path.exists("results/PERF_LOG.md"):

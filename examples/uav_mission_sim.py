@@ -14,13 +14,16 @@ from repro.runtime_flags import enable_fast_cpu_runtime
 
 enable_fast_cpu_runtime()
 
+import dataclasses  # noqa: E402
+
 import numpy as np  # noqa: E402
 
+from repro.api import (ClientSpec, DataSpec, EngineSpec, ExperimentSpec,  # noqa: E402
+                       LinkPolicy, MissionSpec, ModelSpec,
+                       compile_experiment)
 from repro.core.deployment import (deploy_edge_devices, deploy_gasbac,  # noqa: E402
                                    deploy_kmeans, uniform_grid_sensors)
-from repro.core.link import LinkConfig  # noqa: E402
 from repro.core.trajectory import greedy_tour_plan, plan_tour  # noqa: E402
-from repro.fleet import CampaignConfig, run_link_sweep  # noqa: E402
 
 # ---- deployment + trajectory sweep (paper Fig. 2 / Table II) --------------
 print(f"{'farm':>6} {'method':>14} {'devices':>8} {'tour_m':>8} "
@@ -39,25 +42,37 @@ for acres, n in ((100, 25), (140, 36), (200, 49), (250, 64)):
               f"{plan.rounds:>7}")
 
 # ---- fleet campaign: 8 clients, fp32 vs int8 link -------------------------
-cfg = CampaignConfig(model="tinycnn", num_clients=8, global_rounds=3,
-                     local_steps=2, batch_size=8, image_size=16,
-                     link=LinkConfig(rate_bps=100e6))
-print(f"\nfleet campaign: {cfg.num_clients} clients, {cfg.model}, "
-      f"{cfg.farm_acres:.0f} acres")
-results = run_link_sweep(cfg)
-tour = results["none"].tour
-print(f"tour {tour.tour_length:.0f} m, budget affords {tour.rounds} rounds "
-      f"({tour.e_per_round/1e3:.0f} kJ/round)")
+# One declarative spec; the link sweep edits ONLY the LinkPolicy field.
+base = ExperimentSpec(
+    model=ModelSpec(name="tinycnn", num_classes=12),
+    data=DataSpec(kind="synthetic", image_size=16),
+    clients=ClientSpec(num_clients=8),
+    engine=EngineSpec(kind="sl", client_axis="vmap"),     # parallel fleet SL
+    mission=MissionSpec(farm_acres=100.0),                # UAV budget caps rounds
+    global_rounds=3, local_steps=2, batch_size=8)
+print(f"\nfleet campaign: {base.clients.num_clients} clients, "
+      f"{base.model.name}, {base.mission.farm_acres:.0f} acres")
+results = {}
+for mode in ("none", "int8"):
+    spec = dataclasses.replace(base, link_policy=LinkPolicy(
+        rate_bps=100e6, compress=mode))
+    exp = compile_experiment(spec)
+    _, records = exp.run()
+    results[mode] = records
+    if mode == "none":
+        tour = exp.tour
+        print(f"tour {tour.tour_length:.0f} m, budget affords {tour.rounds} "
+              f"rounds ({tour.e_per_round/1e3:.0f} kJ/round)")
 print(f"{'link':>5} {'rnd':>4} {'loss':>7} {'acc':>6} {'wire_MB':>8} "
       f"{'link_s':>7} {'link_J':>7} {'client_J':>9} {'uav_kJ':>8}")
-for mode, res in results.items():
-    for r in res.records:
+for mode, records in results.items():
+    for r in records:
         print(f"{mode:>5} {r.round:>4} {r.loss:>7.3f} {r.accuracy:>6.3f} "
               f"{r.link_bytes/1e6:>8.3f} {r.link_time_s:>7.3f} "
               f"{r.link_energy_j:>7.3f} "
               f"{r.client_energy_j:>9.4f} {r.uav_energy_j/1e3:>8.1f}")
-tot_none, tot_int8 = (results[m].totals() for m in ("none", "int8"))
-print(f"\nint8 link moves {tot_none['link_bytes']/tot_int8['link_bytes']:.2f}x "
+b_none, b_int8 = (sum(r.link_bytes for r in results[m])
+                  for m in ("none", "int8"))
+print(f"\nint8 link moves {b_none/b_int8:.2f}x "
       f"fewer wire bytes than fp32 on the same campaign "
-      f"({tot_none['link_bytes']/1e6:.2f} MB -> "
-      f"{tot_int8['link_bytes']/1e6:.2f} MB)")
+      f"({b_none/1e6:.2f} MB -> {b_int8/1e6:.2f} MB)")

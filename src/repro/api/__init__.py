@@ -1,0 +1,22 @@
+"""Unified experiment layer: one declarative spec compiles every round.
+
+``ExperimentSpec`` (a dataclass tree: model + data + clients + cut_policy +
+link_policy + engine + optional mission) names an experiment;
+``compile_experiment`` lowers it to a ``Plan`` with a uniform
+``init() / run_round() / evaluate()`` surface and a ``RoundRecord`` stream,
+dispatching internally to the scan/vmap/sharded/hetero engines. The legacy
+entry points (``core.paper_train.train_fl/train_sl``,
+``fleet.campaign.run_campaign``) are thin adapters over this layer.
+
+See ``src/repro/api/README.md`` for the old-call-site -> spec table.
+"""
+from .records import RoundRecord
+from .runtime import (classification_metrics, client_coords,
+                      client_step_time_s, count_fl_step_flops,
+                      count_sl_step_flops, mission_max_link_s, round_batches,
+                      stack_replicas)
+from .spec import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                   ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec)
+from .plan import Plan, PlanState, compile_experiment
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,521 @@
+"""``compile_experiment``: lower one declarative spec to one compiled plan.
+
+A ``Plan`` is the uniform run surface every entry point now shares:
+
+    plan = compile_experiment(spec, mesh=..., data=...)
+    state = plan.init()
+    state, rec = plan.run_round(state)          # one RoundRecord per round
+    metrics = plan.evaluate(state)
+
+Internally the plan dispatches on ``spec.engine`` to the existing compiled
+engines (see ``api.spec`` for the lowering table), wires the policies —
+FedAvg, adaptive cuts, the int8 link boundary, client dropout, UAV mission
+budgeting — into that engine, and hoists every energy/FLOP/link constant
+out of the hot loop at compile time (the paper's analytic Eq. 8/9
+accounting). Nothing is metered per step; ``run_round`` multiplies
+pre-computed per-client constants by the step counts of the round that
+actually ran (dropout masks excluded clients from both training and
+billing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.energy import RTX_A5000
+from ..core.split import (SplitStep, apply_stages, cut_index_for_fraction,
+                          init_stages, make_fl_round,
+                          make_multi_client_round)
+from ..core.trajectory import TourPlan, plan_tour
+from ..data.partition import partition_non_iid
+from ..data.synthetic import SyntheticPestImages
+from ..fleet.engine import (make_fleet_fl_round, make_fleet_sl_round,
+                            validate_fleet_mesh)
+from ..fleet.hetero import HeteroFleet, assign_cuts_cnn, cnn_split_program
+from ..fleet.link import FleetLink
+from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
+from ..optim import adamw, init_stacked
+from .records import RoundRecord
+from .runtime import (classification_metrics, client_coords,
+                      client_step_time_s, count_fl_step_flops,
+                      count_sl_step_flops, mission_max_link_s, roofline_s,
+                      round_batches, stack_replicas)
+from .spec import ExperimentSpec
+
+# time billed to the FL server per round: aggregation only (negligible
+# FLOPs; the historical constant from the faithful reproduction trainer)
+FL_SERVER_AGG_S = 1e-3
+
+
+@dataclasses.dataclass
+class PlanState:
+    """Mutable run state threaded through ``run_round``."""
+    round: int
+    engine_state: Any               # pytree tuple, or the HeteroFleet
+    rng: np.random.RandomState      # minibatch sampling stream
+    dropout_rng: np.random.RandomState
+    last_metrics: Optional[dict] = None   # full metric dict of the last eval
+
+
+class Plan:
+    """A compiled experiment. Built by ``compile_experiment`` — the
+    attributes below are its public read surface; the engine closures are
+    private."""
+
+    def __init__(self, spec: ExperimentSpec, *, mesh, arrays, parts, stages,
+                 params0, tour: Optional[TourPlan], cut_of_client,
+                 flops: dict, edges, consts, engine_fns):
+        self.spec = spec
+        self.mesh = mesh
+        self.engine_label = f"{spec.engine.kind}/{spec.engine.client_axis}"
+        self.x_train, self.y_train, self.x_test, self.y_test = arrays
+        self.parts = parts
+        self.stages = stages
+        self.params0 = params0
+        self.tour = tour
+        self.rounds_budget = tour.rounds if tour is not None else None
+        self.num_rounds = (min(spec.global_rounds, tour.rounds)
+                           if tour is not None else spec.global_rounds)
+        self.cut_of_client = list(cut_of_client)
+        self.flops = flops            # {"full": f} | {cut: (client, server, sd)}
+        self.edges = edges
+        # hoisted per-client constants (np arrays over the client axis)
+        (self._t_client, self._t_server, self._link_bytes, self._link_time,
+         self._link_energy, self._server_base_s) = consts
+        # engine closures: (init_state, run, eval)
+        self._init_state, self._run, self._eval = engine_fns
+
+    # ---- lifecycle --------------------------------------------------------
+
+    def init(self) -> PlanState:
+        """Fresh run state (per-client model/optimizer stacks, RNG streams).
+        The batch stream matches the legacy trainers' (one RandomState
+        seeded with ``spec.seed``, one ``choice`` per client per round)."""
+        return PlanState(
+            round=0, engine_state=self._init_state(),
+            rng=np.random.RandomState(self.spec.seed),
+            dropout_rng=np.random.RandomState(self.spec.seed + 1))
+
+    def round_batches(self, state: PlanState):
+        """Pre-gathered (clients, local_steps, ...) stacks for one round, in
+        the engine's batch format (FL: ``(bx, by)``; SL: dict)."""
+        bx, by = round_batches(self.x_train, self.y_train, self.parts,
+                               self.spec.batch_size, self.spec.local_steps,
+                               state.rng, shrink=self.spec.data.shrink_batches)
+        if self.spec.engine.kind == "fl":
+            return bx, by
+        return {"inputs": bx, "targets": by}
+
+    def _round_mask(self, state: PlanState) -> Optional[np.ndarray]:
+        rate = self.spec.clients.dropout_rate
+        if rate <= 0.0:
+            return None
+        n = self.spec.clients.num_clients
+        mask = (state.dropout_rng.uniform(size=n) >= rate).astype(np.float32)
+        if mask.sum() == 0:          # never drop the whole fleet
+            mask[state.dropout_rng.randint(n)] = 1.0
+        return mask
+
+    def run_round(self, state: PlanState, batches=None, *,
+                  with_eval: bool = True) -> tuple[PlanState, RoundRecord]:
+        """Execute one global round; returns (state, RoundRecord). Batches
+        default to the plan's own stream; pass them explicitly to drive the
+        engine with external data (the perf benches do)."""
+        if batches is None:
+            batches = self.round_batches(state)
+        mask = self._round_mask(state)
+        state.engine_state, losses = self._run(state.engine_state, batches,
+                                               mask)
+        n = self.spec.clients.num_clients
+        active = np.arange(n) if mask is None else np.flatnonzero(mask > 0)
+        # losses: FL (clients, steps); SL (steps, clients)
+        loss_c = np.asarray(losses)
+        loss = float((loss_c[active, :] if self.spec.engine.kind == "fl"
+                      else loss_c[:, active]).mean())
+        if with_eval:
+            state.last_metrics = self.evaluate(state)
+            accuracy = state.last_metrics["accuracy"]
+        else:
+            accuracy = float("nan")
+        steps = self.spec.local_steps
+        uav = 0.0
+        if self.tour is not None:
+            uav = float(self.tour.e_first if state.round == 0
+                        else self.tour.e_per_round)
+        t_cli = float(self._t_client[active].sum() * steps)
+        e_cli = float(sum(self._t_client[c] * steps * self.edges[c].power_w
+                          for c in active))
+        t_srv = float(self._t_server[active].sum() * steps
+                      + self._server_base_s)
+        rec = RoundRecord(
+            round=state.round, loss=loss, accuracy=accuracy,
+            link_bytes=float(self._link_bytes[active].sum() * steps),
+            link_time_s=float(self._link_time[active].sum() * steps),
+            link_energy_j=float(self._link_energy[active].sum() * steps),
+            client_time_s=t_cli, client_energy_j=e_cli,
+            server_time_s=t_srv,
+            server_energy_j=t_srv * RTX_A5000.power_w,
+            uav_energy_j=uav, active_clients=len(active),
+            engine=self.engine_label)
+        state.round += 1
+        return state, rec
+
+    def raw_round(self, engine_state, batches, mask=None):
+        """One engine round with NO record assembly or host synchronization:
+        ``(engine_state, losses_device_array)``. The throughput benches use
+        this to queue rounds back-to-back (jax async dispatch) and block
+        once at the end — ``run_round``'s per-round loss extraction would
+        otherwise serialize dispatch against compute."""
+        return self._run(engine_state, batches, mask)
+
+    def evaluate(self, state: PlanState) -> dict:
+        """Held-out classification metrics of the current global model."""
+        return self._eval(state.engine_state)
+
+    def run(self, rounds: Optional[int] = None, *, with_eval: bool = True
+            ) -> tuple[PlanState, list[RoundRecord]]:
+        """Init + run ``rounds`` (default: the mission-budgeted round count)
+        and collect the record stream."""
+        state = self.init()
+        records = []
+        for _ in range(self.num_rounds if rounds is None else rounds):
+            state, rec = self.run_round(state, with_eval=with_eval)
+            records.append(rec)
+        return state, records
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def _resolve_data(spec: ExperimentSpec, data):
+    if data is not None or spec.data.kind == "arrays":
+        if data is None:
+            raise ValueError("DataSpec(kind='arrays') needs data=(x_train, "
+                             "y_train, x_test, y_test) at compile time")
+        return tuple(np.asarray(a) for a in data)
+    gen = SyntheticPestImages(num_classes=spec.model.num_classes,
+                              image_size=spec.data.image_size, seed=spec.seed)
+    key = jax.random.PRNGKey(spec.seed)
+    n_train = spec.data.n_train or max(24 * spec.clients.num_clients,
+                                       12 * spec.model.num_classes)
+    n_test = spec.data.n_test or max(n_train // 4, 48)
+    x_train, y_train = gen.sample(jax.random.fold_in(key, 0), n_train)
+    x_test, y_test = gen.sample(jax.random.fold_in(key, 1), n_test)
+    return (np.asarray(x_train), np.asarray(y_train),
+            np.asarray(x_test), np.asarray(y_test))
+
+
+def _validate(spec: ExperimentSpec):
+    eng = spec.engine
+    if eng.kind not in ("fl", "sl"):
+        raise ValueError(f"engine.kind must be 'fl' or 'sl', got {eng.kind!r}")
+    if eng.client_axis not in ("scan", "vmap"):
+        raise ValueError(f"engine.client_axis must be 'scan' or 'vmap', "
+                         f"got {eng.client_axis!r}")
+    if spec.model.family != "cnn":
+        raise ValueError(f"unknown model family {spec.model.family!r}; "
+                         "transformer stacks enter via "
+                         "fleet.hetero.arch_split_program (see api/README)")
+    if spec.model.name not in CNN_BUILDERS:
+        raise ValueError(f"unknown CNN {spec.model.name!r}")
+    if spec.cut_policy.mode not in ("fraction", "adaptive"):
+        raise ValueError(spec.cut_policy.mode)
+    if spec.cut_policy.mode == "adaptive" and not (
+            eng.kind == "sl" and eng.client_axis == "vmap"):
+        raise ValueError("adaptive cuts produce per-client programs; they "
+                         "need the bucketed fleet engine (sl/vmap)")
+    if spec.clients.dropout_rate > 0 and eng.client_axis != "vmap":
+        raise ValueError("client dropout is a fleet policy; use a vmap "
+                         "client axis")
+
+
+def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
+    """Lower ``spec`` to a ``Plan``. ``data`` is an optional
+    ``(x_train, y_train, x_test, y_test)`` tuple (required for
+    ``DataSpec(kind='arrays')``); ``mesh`` an optional ('data','model')
+    fleet mesh — the stacked client axis of vmap engines shards over
+    ``data`` (see ``launch.mesh.make_fleet_mesh``)."""
+    _validate(spec)
+    n = spec.clients.num_clients
+    if spec.engine.client_axis == "vmap":
+        validate_fleet_mesh(mesh, n)
+    arrays = _resolve_data(spec, data)
+    x_train, y_train, x_test, y_test = arrays
+    parts = partition_non_iid(y_train, n, spec.data.classes_per_client,
+                              num_classes=spec.model.num_classes,
+                              seed=spec.seed)
+    edges = [spec.clients.edge_profiles[i % len(spec.clients.edge_profiles)]
+             for i in range(n)]
+    link = FleetLink(config=spec.link_policy.config())
+
+    # ---- mission: placement, tour, round budget --------------------------
+    tour = None
+    if spec.mission is not None:
+        coords = client_coords(spec.mission.farm_acres, n, seed=spec.seed)
+        tour = plan_tour(coords, np.zeros(2), params=spec.mission.uav,
+                         hover_s_per_stop=spec.mission.hover_s_per_stop,
+                         comm_s_per_stop=spec.mission.comm_s_per_stop)
+
+    # ---- model + params ---------------------------------------------------
+    stages = CNN_BUILDERS[spec.model.name](spec.model.num_classes)
+    params0 = init_stages(jax.random.PRNGKey(spec.seed), stages)
+    sample_x = jnp.asarray(x_train[:spec.batch_size])
+    sample_y = jnp.asarray(y_train[:spec.batch_size])
+    x_test_j = jnp.asarray(x_test)
+
+    # ---- per-client constants (filled per engine below) ------------------
+    t_client = np.zeros(n)
+    t_server = np.zeros(n)
+    link_bytes = np.zeros(n)
+    link_time = np.zeros(n)
+    link_energy = np.zeros(n)
+    server_base_s = 0.0
+    flops: dict = {}
+
+    if spec.engine.kind == "fl":
+        cut_of_client: list[int] = []
+        step_flops = count_fl_step_flops(stages, params0, sample_x, sample_y)
+        flops["full"] = step_flops
+        for c in range(n):
+            t_client[c] = client_step_time_s(step_flops, edges[c])
+        server_base_s = FL_SERVER_AGG_S
+        engine_fns = _compile_fl(spec, mesh, stages, params0, x_test_j,
+                                 y_test)
+    else:
+        # cut assignment: one fraction-derived cut, or per-client adaptive
+        # cuts under the (optionally mission-derived) link deadline
+        max_link_s = spec.cut_policy.max_link_s
+        if max_link_s is None and spec.mission is not None:
+            max_link_s = mission_max_link_s(spec.mission.hover_s_per_stop,
+                                            spec.mission.comm_s_per_stop,
+                                            spec.local_steps)
+        if spec.cut_policy.mode == "adaptive":
+            cut_of_client = assign_cuts_cnn(
+                stages, params0, sample_x, edges=edges,
+                links=[spec.link_policy.config()] * n,
+                min_client_layers=spec.cut_policy.min_client_layers,
+                max_link_s=max_link_s)
+        else:
+            cut_of_client = [cut_index_for_fraction(
+                stages, spec.cut_policy.fraction)] * n
+        # hoisted per-step constants, per distinct cut
+        by_cut: dict[int, list[int]] = {}
+        for cid, k in enumerate(cut_of_client):
+            by_cut.setdefault(int(k), []).append(cid)
+        for k, ids in by_cut.items():
+            cs, cp = list(stages[:k]), list(params0[:k])
+            ss, sp = list(stages[k:]), list(params0[k:])
+            fl_client, fl_server, smashed_sd = count_sl_step_flops(
+                cs, cp, ss, sp, sample_x, sample_y)
+            flops[k] = (fl_client, fl_server, smashed_sd)
+            for cid in ids:
+                t_client[cid] = client_step_time_s(fl_client, edges[cid])
+                t_server[cid] = roofline_s(fl_server, RTX_A5000)
+                link_bytes[cid] = link.step_wire_bytes(smashed_sd)
+                link_time[cid] = link.step_time_s(smashed_sd)
+                link_energy[cid] = link.step_energy_j(smashed_sd)
+        if spec.engine.client_axis == "scan":
+            engine_fns = _compile_sl_scan(spec, stages, params0,
+                                          cut_of_client[0], link, x_test_j,
+                                          y_test)
+        else:
+            engine_fns = _compile_sl_fleet(spec, mesh, stages, params0,
+                                           cut_of_client, link, x_test_j,
+                                           y_test)
+
+    consts = (t_client, t_server, link_bytes, link_time, link_energy,
+              server_base_s)
+    return Plan(spec, mesh=mesh, arrays=arrays, parts=parts, stages=stages,
+                params0=params0, tour=tour, cut_of_client=cut_of_client,
+                flops=flops, edges=edges, consts=consts,
+                engine_fns=engine_fns)
+
+
+# ---------------------------------------------------------------------------
+# per-engine lowering: (init_state, run(state, batches, mask), eval(state))
+# ---------------------------------------------------------------------------
+
+def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
+    opt = adamw(spec.lr)
+
+    def grad_fn(params, batch):
+        bx, by = batch
+        return jax.value_and_grad(
+            lambda p: cross_entropy_loss(apply_stages(stages, p, bx), by))(
+                params)
+
+    dropout = spec.clients.dropout_rate > 0
+    if spec.engine.client_axis == "vmap":
+        round_fn = jax.jit(make_fleet_fl_round(grad_fn, opt, mesh=mesh,
+                                               client_dropout=dropout),
+                           donate_argnums=(0,))
+    else:
+        round_fn = jax.jit(make_fl_round(grad_fn, opt, client_axis="scan"),
+                           donate_argnums=(0,))
+
+    def init_state():
+        return jax.tree_util.tree_map(jnp.copy, params0)
+
+    def run(engine_state, batches, mask):
+        if dropout:
+            m = (jnp.ones(spec.clients.num_clients, jnp.float32)
+                 if mask is None else jnp.asarray(mask))
+            return round_fn(engine_state, batches, m)
+        return round_fn(engine_state, batches)
+
+    eval_logits = jax.jit(lambda p: apply_stages(stages, p, x_test_j))
+
+    def evaluate(engine_state):
+        return classification_metrics(eval_logits(engine_state), y_test,
+                                      spec.model.num_classes)
+
+    return init_state, run, evaluate
+
+
+def _eval_prefix(client_stack, dropout: bool):
+    """The global client prefix to evaluate with. Rows are identical after
+    FedAvg (row 0 suffices); under dropout they may hold stale straggler
+    prefixes, so the row mean stands in for the active average."""
+    if dropout:
+        return jax.tree_util.tree_map(
+            lambda v: jnp.mean(v.astype(jnp.float32), axis=0).astype(v.dtype),
+            client_stack)
+    return jax.tree_util.tree_map(lambda v: v[0], client_stack)
+
+
+def _split_step(stages, params0, k, link):
+    cs, cp = list(stages[:k]), list(params0[:k])
+    ss, sp = list(stages[k:]), list(params0[k:])
+    step = SplitStep(
+        client_fwd=lambda pc, xx: apply_stages(cs, pc, xx),
+        server_loss=lambda ps, sm, yy: (
+            cross_entropy_loss(apply_stages(ss, ps, sm), yy), {}),
+        link_constraint=link.boundary(),
+    )
+    return cs, cp, ss, sp, step
+
+
+def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test):
+    """Sequential Algorithm 3: one shared server model updated per client
+    visit (``make_multi_client_round``), homogeneous cut."""
+    cs, cp0, ss, sp, step = _split_step(stages, params0, k, link)
+    opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
+    n = spec.clients.num_clients
+    round_fn = jax.jit(
+        make_multi_client_round(step, opt_c, opt_s,
+                                local_rounds=spec.local_steps),
+        donate_argnums=(0, 1, 2, 3))
+
+    def init_state():
+        state = (stack_replicas(cp0, n), sp, init_stacked(opt_c, cp0, n),
+                 opt_s.init(sp))
+        return jax.tree_util.tree_map(jnp.copy, state)
+
+    def run(engine_state, batches, mask):
+        assert mask is None, "dropout is fleet-only (validated at compile)"
+        *state, losses = round_fn(*engine_state, batches)
+        return tuple(state), losses
+
+    eval_logits = jax.jit(
+        lambda cp, sp_: apply_stages(ss, sp_, apply_stages(cs, cp, x_test_j)))
+
+    def evaluate(engine_state):
+        client_stack, sp_, _, _ = engine_state
+        prefix = _eval_prefix(client_stack, dropout=False)
+        return classification_metrics(eval_logits(prefix, sp_), y_test,
+                                      spec.model.num_classes)
+
+    return init_state, run, evaluate
+
+
+def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
+                      x_test_j, y_test):
+    """Parallel fleet SL (``make_fleet_sl_round``). Homogeneous cuts run
+    the engine directly — one compiled round, no host-side bucket
+    reassembly; heterogeneous cuts dispatch through ``HeteroFleet`` (one
+    compiled round + server suffix per cut bucket)."""
+    opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
+    dropout = spec.clients.dropout_rate > 0
+    n = spec.clients.num_clients
+
+    if len(set(cut_of_client)) == 1:
+        k = cut_of_client[0]
+        cs, cp0, ss, sp, step = _split_step(stages, params0, k, link)
+        round_fn = jax.jit(
+            make_fleet_sl_round(step, opt_c, opt_s,
+                                local_rounds=spec.local_steps, mesh=mesh,
+                                server_reduce=spec.engine.server_reduce,
+                                client_dropout=dropout),
+            donate_argnums=(0, 1, 2, 3))
+
+        def init_state():
+            state = (stack_replicas(cp0, n), sp,
+                     init_stacked(opt_c, cp0, n), opt_s.init(sp))
+            return jax.tree_util.tree_map(jnp.copy, state)
+
+        def run(engine_state, batches, mask):
+            if dropout:
+                m = (jnp.ones(n, jnp.float32) if mask is None
+                     else jnp.asarray(mask))
+                *state, losses = round_fn(*engine_state, batches, m)
+            else:
+                *state, losses = round_fn(*engine_state, batches)
+            return tuple(state), losses
+
+        eval_logits = jax.jit(
+            lambda cp, sp_: apply_stages(ss, sp_,
+                                         apply_stages(cs, cp, x_test_j)))
+
+        def evaluate(engine_state):
+            client_stack, sp_, _, _ = engine_state
+            prefix = _eval_prefix(client_stack, dropout)
+            return classification_metrics(eval_logits(prefix, sp_), y_test,
+                                          spec.model.num_classes)
+
+        return init_state, run, evaluate
+
+    def build_program(k):
+        return cnn_split_program(stages, params0, k,
+                                 loss_fn=cross_entropy_loss,
+                                 link_boundary=link.boundary())
+
+    fleet = HeteroFleet(build_program, cut_of_client, opt_c, opt_s,
+                        local_rounds=spec.local_steps, mesh=mesh,
+                        client_dropout=dropout,
+                        server_reduce=spec.engine.server_reduce)
+
+    bucket_eval = []
+    for bucket in fleet.buckets:
+        k = bucket.cut_index
+        cs, ss = list(stages[:k]), list(stages[k:])
+        bucket_eval.append(jax.jit(
+            lambda cp, sp_, cs=cs, ss=ss: apply_stages(
+                ss, sp_, apply_stages(cs, cp, x_test_j))))
+
+    def init_state():
+        # per-bucket state tuples threaded EXTERNALLY through run_round_on,
+        # so every PlanState owns independent fresh state (the fleet object
+        # only holds the compiled engines)
+        return fleet.init_states()
+
+    def run(engine_state, batches, mask):
+        return fleet.run_round_on(engine_state, batches, client_mask=mask)
+
+    def evaluate(engine_state):
+        # every bucket's model votes on the held-out set, weighted by its
+        # client count
+        logits = jnp.zeros((len(y_test), spec.model.num_classes), jnp.float32)
+        for i, bucket in enumerate(fleet.buckets):
+            client_stack, params_s, _, _ = engine_state[i]
+            prefix = _eval_prefix(client_stack, dropout)
+            out = bucket_eval[i](prefix, params_s)
+            logits = logits + out.astype(jnp.float32) * len(bucket.client_ids)
+        return classification_metrics(logits / n, y_test,
+                                      spec.model.num_classes)
+
+    return init_state, run, evaluate

@@ -1,0 +1,32 @@
+"""The uniform per-round record every compiled plan emits.
+
+One ``RoundRecord`` per executed global round, regardless of which engine
+ran it — FL or SL, scanned or fleet-vmapped, homogeneous or hetero-cut,
+with or without a UAV mission. Fields an engine has nothing to say about
+are zero (e.g. ``link_*`` for FL, ``uav_energy_j`` without a mission), so
+downstream consumers (campaign totals, benches, reports) read one schema.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    round: int
+    loss: float                  # mean training loss over ACTIVE clients
+    accuracy: float              # held-out accuracy after the round (nan if
+                                 # the round ran without evaluation)
+    link_bytes: float            # wire bytes this round (all active clients)
+    link_time_s: float
+    link_energy_j: float         # edge radio transmit energy (L/R * P_radio)
+    client_energy_j: float       # edge compute, Eq. (9)-scaled
+    server_energy_j: float
+    uav_energy_j: float          # tour energy for this round (Alg. 2)
+    client_time_s: float = 0.0   # edge compute seconds behind client_energy_j
+    server_time_s: float = 0.0
+    active_clients: int = -1     # clients that survived dropout this round
+    engine: str = ""             # "fl/scan" | "fl/vmap" | "sl/scan" | "sl/vmap"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)

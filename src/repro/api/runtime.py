@@ -1,0 +1,178 @@
+"""Shared experiment runtime helpers — one home for logic the bespoke
+entry points used to duplicate.
+
+Everything here is deliberately *neutral*: it imports only ``core``,
+``models`` and ``data`` modules (never ``core.paper_train`` or
+``fleet.campaign``), so both the legacy shims and the compiled-plan layer
+can depend on it without import cycles.
+
+Hoisted from ``core.paper_train`` / ``fleet.campaign`` (which previously
+carried private near-copies):
+
+  * ``round_batches``        — one global round of pre-gathered minibatch
+                               stacks with a leading client axis
+  * ``client_step_time_s``   — A5000-roofline seconds scaled to an edge
+                               profile via paper Eq. (9)
+  * ``count_fl_step_flops`` / ``count_sl_step_flops`` — the symmetric
+                               per-step FLOP accounting both pipelines share
+  * ``classification_metrics`` — the paper's Fig. 3 radar metrics
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.energy import (HardwareProfile, JETSON_AGX_ORIN, RTX_A5000,
+                           scale_time)
+from ..core.flops import flops_of
+from ..core.split import apply_stages
+from ..models.cnn import cross_entropy_loss
+
+
+# ---------------------------------------------------------------------------
+# batch gathering (leading client axis)
+# ---------------------------------------------------------------------------
+
+def round_batches(x, y, parts, batch_size, steps, rng, *,
+                  shrink: bool = False):
+    """One global round of minibatches, pre-gathered and stacked on a
+    leading client axis: ``((clients, steps, b, ...), (clients, steps, b))``.
+
+    Sampling is with replacement so small partitions still fill batches
+    (hoisted per-step link/energy constants stay exact). With ``shrink``
+    the batch dimension is capped at the smallest partition size (the
+    legacy ``paper_train`` behaviour); otherwise empty partitions are an
+    error and every batch is exactly ``batch_size``.
+    """
+    empty = [ci for ci, idx in enumerate(parts) if len(idx) == 0]
+    if empty:
+        raise ValueError(f"clients {empty} drew no data; increase the "
+                         f"training set or classes_per_client")
+    bs = min(batch_size, min(len(idx) for idx in parts)) if shrink \
+        else batch_size
+    sel = np.stack([rng.choice(idx, size=(steps, bs), replace=True)
+                    for idx in parts])
+    return jnp.asarray(x[sel]), jnp.asarray(y[sel])
+
+
+def client_coords(acres: float, n: int, *, seed: int = 0) -> np.ndarray:
+    """``n`` edge-device positions on a square farm: a jittered uniform grid
+    over the next square count, truncated to ``n`` (deterministic)."""
+    import math
+
+    from ..core.deployment import field_side_meters
+    side = field_side_meters(acres)
+    g = int(math.ceil(math.sqrt(n)))
+    xs = (np.arange(g) + 0.5) * side / g
+    pts = np.stack(np.meshgrid(xs, xs, indexing="ij"), axis=-1).reshape(-1, 2)
+    rng = np.random.RandomState(seed)
+    pts = pts + rng.uniform(-0.05, 0.05, size=pts.shape) * side / g
+    return pts[:n]
+
+
+def stack_replicas(tree, n: int):
+    """Broadcast one pytree to ``n`` identical replicas on a leading axis."""
+    return jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), tree)
+
+
+# ---------------------------------------------------------------------------
+# analytic per-step time constants (paper Eq. 9 methodology)
+# ---------------------------------------------------------------------------
+
+def roofline_s(flops: float, hw: HardwareProfile) -> float:
+    return flops / (hw.fp32_tflops * 1e12)
+
+
+def client_step_time_s(flops: float,
+                       edge: HardwareProfile = JETSON_AGX_ORIN) -> float:
+    """Edge-device seconds per step: A5000 roofline scaled via Eq. (9)."""
+    return scale_time(roofline_s(flops, RTX_A5000), RTX_A5000, edge)
+
+
+def mission_max_link_s(hover_s_per_stop: float, comm_s_per_stop: float,
+                       local_steps: int) -> float:
+    """Per-step link deadline implied by the UAV's dwell at one stop.
+
+    Algorithm 2 parks the UAV ``hover + comm`` seconds per edge device per
+    round; a round runs ``local_steps`` split steps, each needing one
+    smashed-data roundtrip, so each step's link time must fit an equal
+    share of the dwell window. ``adaptive_cut.select_cut(max_link_s=...)``
+    takes this directly.
+    """
+    return (hover_s_per_stop + comm_s_per_stop) / max(local_steps, 1)
+
+
+# ---------------------------------------------------------------------------
+# symmetric per-step FLOP counting (shared by FL and SL accounting)
+# ---------------------------------------------------------------------------
+
+def count_fl_step_flops(stages, params, bx, by) -> float:
+    """XLA-counted (analytic fallback) fwd+bwd FLOPs of one full-model
+    training step on one minibatch."""
+    return flops_of(
+        lambda p, xx, yy: jax.grad(
+            lambda q: cross_entropy_loss(apply_stages(stages, q, xx), yy))(p),
+        params, bx, by)
+
+
+def count_sl_step_flops(cs, cp, ss, sp, bx, by):
+    """Per-tier fwd+bwd FLOPs of one split step, counted symmetrically with
+    ``count_fl_step_flops``.
+
+    client: prefix forward + the VJP that turns the returned cut gradient
+    into client-param gradients (the full client-side backward).
+    server: suffix forward + backward w.r.t. server params AND the smashed
+    input (the cut gradient it sends back).
+    Returns (client_flops, server_flops, smashed_shape_dtype_struct).
+    """
+    smashed_sd = jax.eval_shape(lambda p, xx: apply_stages(cs, p, xx), cp, bx)
+    cut_grad = jnp.zeros(smashed_sd.shape, smashed_sd.dtype)
+
+    def client_step(p, xx, ct):
+        smashed, vjp = jax.vjp(lambda q: apply_stages(cs, q, xx), p)
+        return smashed, vjp(ct)
+
+    def server_step(p, sm, yy):
+        return jax.grad(
+            lambda q, s: cross_entropy_loss(apply_stages(ss, q, s), yy),
+            argnums=(0, 1))(p, sm)
+
+    client_fl = flops_of(client_step, cp, bx, cut_grad)
+    server_fl = flops_of(server_step, sp, cut_grad, by)
+    return client_fl, server_fl, smashed_sd
+
+
+# ---------------------------------------------------------------------------
+# metrics (paper Fig. 3 radar: Acc / Precision / Recall / F1 / MCC)
+# ---------------------------------------------------------------------------
+
+def classification_metrics(logits: jax.Array, labels: jax.Array,
+                           num_classes: int) -> dict:
+    pred = np.asarray(logits.argmax(-1))
+    y = np.asarray(labels)
+    acc = float((pred == y).mean())
+    precs, recs, f1s = [], [], []
+    for c in range(num_classes):
+        tp = float(((pred == c) & (y == c)).sum())
+        fp = float(((pred == c) & (y != c)).sum())
+        fn = float(((pred != c) & (y == c)).sum())
+        p = tp / (tp + fp) if tp + fp else 0.0
+        r = tp / (tp + fn) if tp + fn else 0.0
+        precs.append(p)
+        recs.append(r)
+        f1s.append(2 * p * r / (p + r) if p + r else 0.0)
+    # multiclass MCC
+    n = len(y)
+    t_k = np.bincount(y, minlength=num_classes).astype(float)
+    p_k = np.bincount(pred, minlength=num_classes).astype(float)
+    c = float((pred == y).sum())
+    s2 = n * n
+    num = c * n - float(t_k @ p_k)
+    den = np.sqrt(max(s2 - float(p_k @ p_k), 0.0)) * \
+        np.sqrt(max(s2 - float(t_k @ t_k), 0.0))
+    mcc = num / den if den else 0.0
+    return {"accuracy": acc, "precision": float(np.mean(precs)),
+            "recall": float(np.mean(recs)), "f1": float(np.mean(f1s)),
+            "mcc": float(mcc)}

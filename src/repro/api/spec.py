@@ -1,0 +1,130 @@
+"""Declarative experiment specs — one dataclass tree for every round shape.
+
+An ``ExperimentSpec`` names *what* to run (model, data, clients, cut, link,
+engine, optional UAV mission); ``api.plan.compile_experiment`` lowers it to
+the matching compiled engine. The paper's whole sweep space — FL baseline
+vs sequential SL (Alg. 3) vs parallel fleet SL, homogeneous vs per-client
+adaptive cuts, fp32 vs int8 links, with or without the UAV mission budget —
+is spanned by field edits on one spec, never by switching entry points.
+
+Engine selection (``EngineSpec``):
+
+  kind  client_axis  lowers to
+  ----  -----------  -------------------------------------------------------
+  fl    scan         ``core.split.make_fl_round(client_axis='scan')``
+  fl    vmap         ``fleet.engine.make_fleet_fl_round`` (shardable)
+  sl    scan         ``core.split.make_multi_client_round`` (sequential Alg. 3)
+  sl    vmap         ``fleet.engine.make_fleet_sl_round`` (parallel SL);
+                     heterogeneous (adaptive) cuts dispatch through
+                     ``fleet.hetero.HeteroFleet`` — one compiled round per
+                     cut bucket
+
+Policies, not code paths:
+
+  * ``CutPolicy``  — fixed layer fraction, or P3SL-style per-client adaptive
+    cuts from each client's (hardware, link) profile; when a mission is
+    present and no explicit ``max_link_s`` is given, the UAV hover window
+    bounds the per-step link time (``runtime.mission_max_link_s``).
+  * ``LinkPolicy`` — fp32 or int8 straight-through boundary + wire-byte
+    accounting (``fleet.link.FleetLink``).
+  * ``ClientSpec.dropout_rate`` — EPSL/P3SL-style straggler masking: each
+    round a Bernoulli mask drops clients from training, aggregation and
+    energy billing (fleet engines only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from ..core.energy import HardwareProfile, JETSON_AGX_ORIN
+from ..core.link import LinkConfig
+from ..core.uav_energy import DEFAULT_UAV, UAVParams
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    family: str = "cnn"          # "cnn" (Stage lists) — see api/README.md
+    name: str = "tinycnn"        # key into models.cnn.CNN_BUILDERS
+    num_classes: int = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    kind: str = "synthetic"      # "synthetic" | "arrays" (pass data= at compile)
+    image_size: int = 32
+    classes_per_client: int = 3  # non-IID shards (paper §IV-C)
+    n_train: int = 0             # 0 -> heuristic from fleet size/classes
+    n_test: int = 0
+    shrink_batches: bool = False  # cap batch at smallest partition (legacy
+    #                               paper_train behaviour; campaigns keep
+    #                               exact batch_size so hoisted constants hold)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSpec:
+    num_clients: int = 4
+    # heterogeneity source: profiles cycled across clients (Eq. 9 scaling
+    # and, under an adaptive CutPolicy, per-client cut selection)
+    edge_profiles: Tuple[HardwareProfile, ...] = (JETSON_AGX_ORIN,)
+    # P3SL-style straggler masking: per-round probability a client drops
+    # out of training/aggregation (fleet engines only; >=1 client kept)
+    dropout_rate: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CutPolicy:
+    mode: str = "fraction"       # "fraction" | "adaptive"
+    fraction: float = 0.25       # SL_{a,b}: client holds a% of layers
+    min_client_layers: int = 1   # privacy floor (raw data stays on device)
+    # per-step link deadline for adaptive selection; None + mission ->
+    # derived from the UAV hover window (runtime.mission_max_link_s)
+    max_link_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkPolicy:
+    rate_bps: float = 100e6
+    compress: str = "none"       # "none" | "int8"
+    radio_power_w: float = 2.0
+
+    def config(self) -> LinkConfig:
+        return LinkConfig(rate_bps=self.rate_bps, compress=self.compress,
+                          radio_power_w=self.radio_power_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    kind: str = "sl"             # "fl" | "sl"
+    client_axis: str = "scan"    # "scan" (sequential) | "vmap" (fleet)
+    server_reduce: str = "mean"  # fleet SL server gradient reduction
+
+
+@dataclasses.dataclass(frozen=True)
+class MissionSpec:
+    farm_acres: float = 100.0
+    uav: UAVParams = DEFAULT_UAV
+    hover_s_per_stop: float = 30.0
+    comm_s_per_stop: float = 10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    model: ModelSpec = ModelSpec()
+    data: DataSpec = DataSpec()
+    clients: ClientSpec = ClientSpec()
+    cut_policy: CutPolicy = CutPolicy()
+    link_policy: LinkPolicy = LinkPolicy()
+    engine: EngineSpec = EngineSpec()
+    mission: Optional[MissionSpec] = None   # None -> no tour/budget/UAV terms
+    global_rounds: int = 4       # cap; a mission's UAV budget may cut it short
+    local_steps: int = 2
+    batch_size: int = 8
+    lr: float = 1e-3
+    seed: int = 0
+
+    def describe(self) -> str:
+        """One-line engine label for records/logs."""
+        cut = (self.cut_policy.mode if self.engine.kind == "sl" else "-")
+        return (f"{self.engine.kind}/{self.engine.client_axis}"
+                f"[cut={cut},link={self.link_policy.compress},"
+                f"mission={'yes' if self.mission else 'no'}]")

@@ -50,6 +50,42 @@ def fedavg_stack(stacked_params):
     return jax.tree_util.tree_map(agg, stacked_params)
 
 
+def fedavg_stack_masked(stacked_params, mask):
+    """FedAvg over the ACTIVE rows of a leading client axis.
+
+    ``mask`` is a (clients,) 0/1 vector (traced — changes per round without
+    recompiling). Active clients receive the mean of the active rows;
+    dropped clients keep their stale row (P3SL straggler semantics: a
+    client that missed the round rejoins from its last local state). When
+    every client is masked out the stack passes through unchanged.
+    """
+    mask = jnp.asarray(mask, jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+
+    def agg(x):
+        w = mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+        avg = (x.astype(jnp.float32) * w).sum(axis=0, keepdims=True) / total
+        out = jnp.where(w > 0, jnp.broadcast_to(avg, x.shape),
+                        x.astype(jnp.float32))
+        return out.astype(x.dtype)
+
+    return jax.tree_util.tree_map(agg, stacked_params)
+
+
+def fedavg_mean_masked(stacked_params, mask, fallback):
+    """Mean over the active rows, dropping the client axis; returns
+    ``fallback`` (the incoming global model) when no client is active."""
+    mask = jnp.asarray(mask, jnp.float32)
+    total = mask.sum()
+
+    def agg(x, fb):
+        w = mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+        avg = (x.astype(jnp.float32) * w).sum(axis=0) / jnp.maximum(total, 1.0)
+        return jnp.where(total > 0, avg, fb.astype(jnp.float32)).astype(x.dtype)
+
+    return jax.tree_util.tree_map(agg, stacked_params, fallback)
+
+
 def fedavg_pmean(params, axis_name: str):
     """SPMD FedAvg: mean over a mesh axis (use inside shard_map)."""
     return jax.tree_util.tree_map(

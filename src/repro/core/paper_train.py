@@ -1,46 +1,30 @@
 """Faithful reproduction pipelines: FL baseline vs SL (Algorithm 3).
 
-Multi-client (explicit client list, non-IID partitions, 4 clients x 3
-classes as in §IV-C):
+DEPRECATED SHIMS — ``train_fl`` / ``train_sl`` keep their historical
+signatures and return dicts for one release, but both now delegate to the
+unified experiment layer: ``paper_spec`` maps a ``PaperTrainConfig`` to an
+``repro.api.ExperimentSpec`` and ``repro.api.compile_experiment`` lowers it
+to the same compiled engines these functions used to hand-wire
+(``make_fl_round`` with a scanned client axis for FL;
+``make_multi_client_round`` — the sequential Alg. 3 — for SL). New code
+should build specs directly; see ``src/repro/api/README.md``.
 
-  FL      : each client trains the FULL model on its shard for `local_steps`
-            minibatches; server FedAvg's all client models each global round.
+What the shims preserve:
+
+  FL      : each client trains the FULL model on its shard for
+            ``local_steps`` minibatches; server FedAvg's all client models
+            each global round.
   SL      : eEnergy-Split / SplitFed — client prefix (cut at SL_{a,b}) runs
             locally; smashed activations (+labels) go to the server model,
             which backprops and returns the cut gradient; server params
             update per client-batch (sequential, as the UAV visits clients
             one at a time); client prefixes FedAvg every global round.
 
-Device-resident engine (stacked-client layout)
-----------------------------------------------
-Every per-client quantity — model params, Adam moments, and the round's
-minibatches — carries a leading ``num_clients`` axis. One global round is
-ONE jitted XLA program built by ``repro.core.split``:
-
-  * FL: ``make_fl_round`` — outer ``lax.scan`` over clients, inner scan over
-    local steps, FedAvg folded into the same program.
-  * SL: ``make_multi_client_round`` — outer scan over the ``local_steps``
-    UAV visits, inner scan over clients (server updates stay sequential per
-    client batch, exactly Alg. 3's inner loop), client-prefix FedAvg at the
-    end of the compiled round.
-
-State buffers are donated round-over-round and batches are gathered once
-per round on the host ((clients, steps, batch, ...) arrays), so the hot
-loop performs `global_rounds` dispatches total instead of
-`rounds x clients x local_steps`.
-
-Energy / link accounting
-------------------------
-Nothing is metered inside the hot loop. Per-step FLOPs are counted ONCE
-from the compiled step programs (XLA ``cost_analysis`` with an analytic
-jaxpr-walk fallback — ``repro.core.flops``), symmetrically for both
-pipelines and both tiers: full fwd+bwd for FL, client-prefix fwd+bwd
-(``jax.vjp``) and server-suffix fwd+bwd (grad w.r.t. params *and* smashed
-input) for SL. The smashed-tensor shape comes from ``jax.eval_shape``.
-Those counts become per-step analytic constants (A5000 roofline, client
-side scaled to Jetson via Eq. 9, link bytes via Eq. 8) multiplied by the
-step counts and recorded per (round, client) through EnergyTracker
-(Table III) / LinkConfig.
+Both run as ONE jitted XLA program per global round (donated state, batches
+pre-gathered per round), with energy/link accounting hoisted to per-step
+analytic constants from symmetric XLA-counted FLOPs on both tiers
+(``repro.api.runtime``: A5000 roofline, client side scaled to Jetson via
+Eq. 9, link bytes via Eq. 8).
 """
 from __future__ import annotations
 
@@ -48,18 +32,15 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..data.partition import partition_non_iid
-from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
-from ..optim import adamw, init_stacked
-from .energy import (EnergyTracker, HardwareProfile, JETSON_AGX_ORIN,
-                     RTX_A5000, scale_time)
-from .flops import flops_of
-from .link import LinkConfig
-from .split import (SplitStep, apply_stages, init_stages, make_fl_round,
-                    make_multi_client_round, partition_stages)
+from ..api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                   ExperimentSpec, LinkPolicy, ModelSpec, compile_experiment)
+# Re-exported for callers that historically imported these from here
+# (benchmarks/bench_resource.py, tests/test_engine.py, fleet.campaign):
+from ..api.runtime import (classification_metrics,  # noqa: F401
+                           count_fl_step_flops, count_sl_step_flops)
+from .energy import CO2_G_PER_J, EnergyRecord
 
 
 @dataclasses.dataclass
@@ -78,249 +59,90 @@ class PaperTrainConfig:
     seed: int = 0
 
 
-def _round_batches(x, y, parts, batch_size, steps, rng):
-    """One global round of minibatches, pre-gathered and stacked on a
-    leading client axis: ((clients, steps, b, ...), (clients, steps, b))."""
-    bs = min(batch_size, min(len(idx) for idx in parts))
-    sel = np.stack([rng.choice(idx, size=(steps, bs), replace=True)
-                    for idx in parts])
-    return jnp.asarray(x[sel]), jnp.asarray(y[sel])
+def paper_spec(cfg: PaperTrainConfig, kind: str) -> ExperimentSpec:
+    """The ``ExperimentSpec`` a legacy ``PaperTrainConfig`` stands for.
 
-
-def _stack_replicas(tree, n: int):
-    """Broadcast one pytree to n identical replicas on a leading axis."""
-    return jax.tree_util.tree_map(
-        lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), tree)
-
-
-def _roofline_s(flops: float, hw: HardwareProfile) -> float:
-    return flops / (hw.fp32_tflops * 1e12)
-
-
-def _client_step_time_s(flops: float) -> float:
-    """Edge-device seconds per step: A5000 roofline scaled via Eq. 9."""
-    return scale_time(_roofline_s(flops, RTX_A5000), RTX_A5000,
-                      JETSON_AGX_ORIN)
-
-
-# ---------------------------------------------------------------------------
-# symmetric per-step FLOP counting (shared with benchmarks/bench_resource)
-# ---------------------------------------------------------------------------
-
-def count_fl_step_flops(stages, params, bx, by) -> float:
-    """XLA-counted (analytic fallback) fwd+bwd FLOPs of one full-model
-    training step on one minibatch."""
-    return flops_of(
-        lambda p, xx, yy: jax.grad(
-            lambda q: cross_entropy_loss(apply_stages(stages, q, xx), yy))(p),
-        params, bx, by)
-
-
-def count_sl_step_flops(cs, cp, ss, sp, bx, by):
-    """Per-tier fwd+bwd FLOPs of one split step, counted symmetrically with
-    ``count_fl_step_flops``.
-
-    client: prefix forward + the VJP that turns the returned cut gradient
-    into client-param gradients (the full client-side backward).
-    server: suffix forward + backward w.r.t. server params AND the smashed
-    input (the cut gradient it sends back).
-    Returns (client_flops, server_flops, smashed_shape_dtype_struct).
+    ``kind`` is ``'fl'`` or ``'sl'`` — both lower to the sequential
+    (``client_axis='scan'``) engines the faithful reproduction uses. The
+    shim-equivalence tests run this spec directly and compare against the
+    ``train_fl``/``train_sl`` wrappers.
     """
-    smashed_sd = jax.eval_shape(lambda p, xx: apply_stages(cs, p, xx), cp, bx)
-    cut_grad = jnp.zeros(smashed_sd.shape, smashed_sd.dtype)
+    return ExperimentSpec(
+        model=ModelSpec(name=cfg.model, num_classes=cfg.num_classes),
+        data=DataSpec(kind="arrays", image_size=cfg.image_size,
+                      classes_per_client=cfg.classes_per_client,
+                      shrink_batches=True),
+        clients=ClientSpec(num_clients=cfg.num_clients),
+        cut_policy=CutPolicy(mode="fraction", fraction=cfg.client_fraction),
+        link_policy=LinkPolicy(
+            compress="int8" if cfg.compress_link else "none"),
+        engine=EngineSpec(kind=kind, client_axis="scan"),
+        global_rounds=cfg.global_rounds, local_steps=cfg.local_steps,
+        batch_size=cfg.batch_size, lr=cfg.lr, seed=cfg.seed)
 
-    def client_step(p, xx, ct):
-        smashed, vjp = jax.vjp(lambda q: apply_stages(cs, q, xx), p)
-        return smashed, vjp(ct)
 
-    def server_step(p, sm, yy):
-        return jax.grad(
-            lambda q, s: cross_entropy_loss(apply_stages(ss, q, s), yy),
-            argnums=(0, 1))(p, sm)
+def _energy_record(label: str, time_s: float, energy_j: float) -> EnergyRecord:
+    return EnergyRecord(label=label, time_s=time_s, energy_j=energy_j,
+                        co2_g=energy_j * CO2_G_PER_J)
 
-    client_fl = flops_of(client_step, cp, bx, cut_grad)
-    server_fl = flops_of(server_step, sp, cut_grad, by)
-    return client_fl, server_fl, smashed_sd
+
+def _run_rounds(plan):
+    """Drive a compiled plan for its round budget; returns
+    (state, records, history, wall_s, steps_per_s)."""
+    t0 = time.time()
+    state = plan.init()
+    records, history = [], []
+    for _ in range(plan.num_rounds):
+        state, rec = plan.run_round(state)
+        records.append(rec)
+        history.append(state.last_metrics)
+    wall_s = time.time() - t0
+    n_steps = (plan.num_rounds * plan.spec.clients.num_clients
+               * plan.spec.local_steps)
+    return state, records, history, wall_s, n_steps / max(wall_s, 1e-9)
 
 
 # ---------------------------------------------------------------------------
-# FL baseline
+# FL baseline (deprecated shim)
 # ---------------------------------------------------------------------------
 
 def train_fl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
-    stages = CNN_BUILDERS[cfg.model](cfg.num_classes)
-    key = jax.random.PRNGKey(cfg.seed)
-    global_params = init_stages(key, stages)
-    opt = adamw(cfg.lr)
-    x_train = np.asarray(x_train)
-    y_train = np.asarray(y_train)
-    parts = partition_non_iid(y_train, cfg.num_clients,
-                              cfg.classes_per_client,
-                              num_classes=cfg.num_classes, seed=cfg.seed)
-    rng = np.random.RandomState(cfg.seed)
-    tracker_c = EnergyTracker(JETSON_AGX_ORIN)
-    tracker_s = EnergyTracker(RTX_A5000)
-
-    def grad_fn(params, batch):
-        bx, by = batch
-        return jax.value_and_grad(
-            lambda p: cross_entropy_loss(apply_stages(stages, p, bx), by))(params)
-
-    # one compiled program per global round; global params donated through
-    fl_round = jax.jit(make_fl_round(grad_fn, opt), donate_argnums=(0,))
-
-    # hoisted energy constants: full fwd+bwd on the edge device, per step
-    sample = (jnp.asarray(x_train[:cfg.batch_size]),
-              jnp.asarray(y_train[:cfg.batch_size]))
-    step_flops = count_fl_step_flops(stages, global_params, *sample)
-    t_client_step = _client_step_time_s(step_flops)
-
-    x_test_j = jnp.asarray(x_test)
-    eval_logits = jax.jit(lambda p: apply_stages(stages, p, x_test_j))
-
-    t0 = time.time()
-    history = []
-    for rnd in range(cfg.global_rounds):
-        batches = _round_batches(x_train, y_train, parts, cfg.batch_size,
-                                 cfg.local_steps, rng)
-        global_params, _losses = fl_round(global_params, batches)
-        for ci in range(cfg.num_clients):
-            # full fwd+bwd on the edge device (Jetson-scaled via Eq. 9)
-            tracker_c.track_time(f"r{rnd}/c{ci}", t_client_step,
-                                 count=cfg.local_steps)
-        # server cost: aggregation only (negligible flops, small time)
-        tracker_s.track_time(f"r{rnd}/agg", 1e-3)
-        history.append(classification_metrics(eval_logits(global_params),
-                                              y_test, cfg.num_classes))
-    wall_s = time.time() - t0
-    n_steps = cfg.global_rounds * cfg.num_clients * cfg.local_steps
-    return {"params": global_params, "history": history,
-            "client_energy": tracker_c.total(), "server_energy": tracker_s.total(),
-            "metrics": history[-1], "step_flops": step_flops,
-            "wall_s": wall_s, "steps_per_s": n_steps / max(wall_s, 1e-9)}
+    plan = compile_experiment(paper_spec(cfg, "fl"),
+                              data=(x_train, y_train, x_test, y_test))
+    state, records, history, wall_s, sps = _run_rounds(plan)
+    return {"params": state.engine_state, "history": history,
+            "client_energy": _energy_record(
+                "total", sum(r.client_time_s for r in records),
+                sum(r.client_energy_j for r in records)),
+            "server_energy": _energy_record(
+                "total", sum(r.server_time_s for r in records),
+                sum(r.server_energy_j for r in records)),
+            "metrics": history[-1], "step_flops": plan.flops["full"],
+            "wall_s": wall_s, "steps_per_s": sps}
 
 
 # ---------------------------------------------------------------------------
-# SL (Algorithm 3)
+# SL (Algorithm 3) (deprecated shim)
 # ---------------------------------------------------------------------------
 
 def train_sl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
-    stages = CNN_BUILDERS[cfg.model](cfg.num_classes)
-    key = jax.random.PRNGKey(cfg.seed)
-    params = init_stages(key, stages)
-    cs, cp0, ss, sp, k = partition_stages(stages, params, cfg.client_fraction)
-    opt_c, opt_s = adamw(cfg.lr), adamw(cfg.lr)
-    x_train = np.asarray(x_train)
-    y_train = np.asarray(y_train)
-    parts = partition_non_iid(y_train, cfg.num_clients,
-                              cfg.classes_per_client,
-                              num_classes=cfg.num_classes, seed=cfg.seed)
-    rng = np.random.RandomState(cfg.seed)
-    tracker_c = EnergyTracker(JETSON_AGX_ORIN)
-    tracker_s = EnergyTracker(RTX_A5000)
-    link = LinkConfig(compress="int8" if cfg.compress_link else "none")
-
-    maybe_compress = None
-    if cfg.compress_link:
-        from ..kernels.quant.ops import link_compress as maybe_compress
-
-    step = SplitStep(
-        client_fwd=lambda pc, xx: apply_stages(cs, pc, xx),
-        server_loss=lambda ps, sm, yy: (
-            cross_entropy_loss(apply_stages(ss, ps, sm), yy), {}),
-        link_constraint=maybe_compress,
-    )
-    sl_round = jax.jit(
-        make_multi_client_round(step, opt_c, opt_s,
-                                local_rounds=cfg.local_steps),
-        donate_argnums=(0, 1, 2, 3))
-
-    # stacked-client state: leading num_clients axis everywhere
-    client_stack = _stack_replicas(cp0, cfg.num_clients)
-    oc_stack = init_stacked(opt_c, cp0, cfg.num_clients)
-    server_params = sp
-    server_opt = opt_s.init(sp)
-
-    # hoisted per-step constants: symmetric FLOP accounting + link bytes
-    sample = (jnp.asarray(x_train[:cfg.batch_size]),
-              jnp.asarray(y_train[:cfg.batch_size]))
-    fl_client, fl_server, smashed_sd = count_sl_step_flops(
-        cs, cp0, ss, sp, *sample)
-    t_client_step = _client_step_time_s(fl_client)
-    t_server_step = _roofline_s(fl_server, RTX_A5000)
-    sm_bytes = smashed_sd.size * smashed_sd.dtype.itemsize
-    step_link_bytes = link.roundtrip_bytes(sm_bytes,
-                                           smashed_sd.dtype.itemsize,
-                                           scale_block=smashed_sd.shape[-1])
-
-    x_test_j = jnp.asarray(x_test)
-    eval_logits = jax.jit(
-        lambda cp, sp_: apply_stages(ss, sp_, apply_stages(cs, cp, x_test_j)))
-
-    t0 = time.time()
-    history = []
-    link_bytes_total = 0.0
-    for rnd in range(cfg.global_rounds):
-        bx, by = _round_batches(x_train, y_train, parts, cfg.batch_size,
-                                cfg.local_steps, rng)
-        (client_stack, server_params, oc_stack, server_opt,
-         _losses) = sl_round(client_stack, server_params, oc_stack,
-                             server_opt, {"inputs": bx, "targets": by})
-        for ci in range(cfg.num_clients):
-            tracker_c.track_time(f"r{rnd}/c{ci}", t_client_step,
-                                 count=cfg.local_steps)
-            tracker_s.track_time(f"r{rnd}/c{ci}", t_server_step,
-                                 count=cfg.local_steps)
-        link_bytes_total += (cfg.num_clients * cfg.local_steps
-                             * step_link_bytes)
-        avg_prefix = jax.tree_util.tree_map(lambda v: v[0], client_stack)
-        history.append(classification_metrics(
-            eval_logits(avg_prefix, server_params), y_test, cfg.num_classes))
-    wall_s = time.time() - t0
-    n_steps = cfg.global_rounds * cfg.num_clients * cfg.local_steps
+    plan = compile_experiment(paper_spec(cfg, "sl"),
+                              data=(x_train, y_train, x_test, y_test))
+    state, records, history, wall_s, sps = _run_rounds(plan)
+    client_stack, server_params, _, _ = state.engine_state
     client_params = jax.tree_util.tree_map(lambda v: v[0], client_stack)
+    k = plan.cut_of_client[0]
+    fl_client, fl_server, _smashed = plan.flops[k]
     return {"client_params": client_params, "server_params": server_params,
             "history": history, "metrics": history[-1],
-            "client_energy": tracker_c.total(),
-            "server_energy": tracker_s.total(),
-            "link_bytes": link_bytes_total,
-            # link_bytes_total is already wire bytes (compression applied);
-            # Eq. (8) directly, not transfer_time_s (would re-compress)
-            "link_time_s": 8.0 * link_bytes_total / link.rate_bps,
+            "client_energy": _energy_record(
+                "total", sum(r.client_time_s for r in records),
+                sum(r.client_energy_j for r in records)),
+            "server_energy": _energy_record(
+                "total", sum(r.server_time_s for r in records),
+                sum(r.server_energy_j for r in records)),
+            "link_bytes": sum(r.link_bytes for r in records),
+            "link_time_s": sum(r.link_time_s for r in records),
             "cut_index": k,
             "client_flops": fl_client, "server_flops": fl_server,
-            "wall_s": wall_s, "steps_per_s": n_steps / max(wall_s, 1e-9)}
-
-
-# ---------------------------------------------------------------------------
-# metrics (paper Fig. 3 radar: Acc / Precision / Recall / F1 / MCC)
-# ---------------------------------------------------------------------------
-
-def classification_metrics(logits: jax.Array, labels: jax.Array,
-                           num_classes: int) -> dict:
-    pred = np.asarray(logits.argmax(-1))
-    y = np.asarray(labels)
-    acc = float((pred == y).mean())
-    precs, recs, f1s = [], [], []
-    for c in range(num_classes):
-        tp = float(((pred == c) & (y == c)).sum())
-        fp = float(((pred == c) & (y != c)).sum())
-        fn = float(((pred != c) & (y == c)).sum())
-        p = tp / (tp + fp) if tp + fp else 0.0
-        r = tp / (tp + fn) if tp + fn else 0.0
-        precs.append(p)
-        recs.append(r)
-        f1s.append(2 * p * r / (p + r) if p + r else 0.0)
-    # multiclass MCC
-    n = len(y)
-    t_k = np.bincount(y, minlength=num_classes).astype(float)
-    p_k = np.bincount(pred, minlength=num_classes).astype(float)
-    c = float((pred == y).sum())
-    s2 = n * n
-    num = c * n - float(t_k @ p_k)
-    den = np.sqrt(max(s2 - float(p_k @ p_k), 0.0)) * \
-        np.sqrt(max(s2 - float(t_k @ t_k), 0.0))
-    mcc = num / den if den else 0.0
-    return {"accuracy": acc, "precision": float(np.mean(precs)),
-            "recall": float(np.mean(recs)), "f1": float(np.mean(f1s)),
-            "mcc": float(mcc)}
+            "wall_s": wall_s, "steps_per_s": sps}

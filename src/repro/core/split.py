@@ -222,7 +222,8 @@ def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int)
     return global_round
 
 
-def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan"):
+def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan",
+                  aggregate: bool = True):
     """One global round of the FL baseline over an explicit client axis.
 
     ``grad_fn(params, batch) -> (loss, grads)`` on the full model. Each
@@ -245,7 +246,10 @@ def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan"):
                ``benchmarks/bench_engine_perf.py``.
 
     ``batches`` is a pytree with leading (clients, local_steps) axes;
-    returns (new_global_params, losses[clients, local_steps]).
+    returns (new_global_params, losses[clients, local_steps]). With
+    ``aggregate=False`` the FedAvg reduction is skipped and the raw
+    client-stacked models are returned instead (the fleet layer's dropout
+    path aggregates with a per-round client mask).
     """
     from ..optim.optimizers import apply_updates
     from .fedavg import fedavg_mean
@@ -272,6 +276,8 @@ def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan"):
         else:
             raise ValueError(f"client_axis must be 'scan' or 'vmap', "
                              f"got {client_axis!r}")
+        if not aggregate:
+            return client_stack, losses
         return fedavg_mean(client_stack), losses
 
     return global_round

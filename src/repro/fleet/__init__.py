@@ -37,11 +37,13 @@ Layout
 from .engine import (FLEET_EQUIV_ATOL, fleet_sharding, make_fleet_fl_round,
                      make_fleet_sl_round, shard_client_stack,
                      validate_fleet_mesh)
-from .hetero import (CutBucket, HeteroFleet, SplitProgram, assign_cuts_cnn,
+from .hetero import (CutBucket, HeteroFleet, SplitProgram,
+                     arch_split_program, assign_cuts_cnn,
                      assign_cuts_transformer, bucket_by_cut,
-                     cnn_split_program, stack_split_program)
+                     cnn_split_program, stack_split_program,
+                     transformer_block_apply)
 from .link import FleetLink
 from .campaign import (CampaignConfig, CampaignResult, RoundRecord,
-                       run_campaign, run_link_sweep)
+                       campaign_spec, run_campaign, run_link_sweep)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,49 +1,43 @@
 """Multi-round fleet campaign simulator — the paper's mission, at fleet scale.
 
-One campaign composes the repo's layers end-to-end:
+DEPRECATED SHIM — ``run_campaign`` keeps its ``CampaignConfig`` ->
+``CampaignResult`` surface for one release, but the round loop now lives in
+the unified experiment layer: ``campaign_spec`` maps the config to an
+``repro.api.ExperimentSpec`` with a ``MissionSpec`` attached, and
+``compile_experiment`` lowers it to the same sharded fleet engine +
+bucketed hetero cuts + link/energy/UAV accounting this module used to
+hand-assemble. New code should build specs directly (see
+``src/repro/api/README.md``).
 
-  field      client placement on a farm (jittered grid over ``farm_acres``)
+One campaign still composes the repo's layers end-to-end:
+
+  field      client placement on a farm (``api.plan.client_coords``)
   tour       exact-TSP UAV tour + Algorithm 2's delayed-return round budget
-             (``core.trajectory`` / ``core.uav_energy``)
-  training   the sharded fleet SL engine (``fleet.engine``) — homogeneous
-             cut, or per-client cuts bucketed by ``fleet.hetero``
-  link       fp32 or int8-compressed boundary (``fleet.link``), with wire
-             bytes/time/energy accounted per step
-  energy     per-step compute constants from symmetric FLOP counting
-             (``core.paper_train.count_sl_step_flops`` over ``core.flops``),
+  training   the sharded fleet SL engine — homogeneous cut, or per-client
+             cuts bucketed by ``fleet.hetero``; optional P3SL-style client
+             dropout (``dropout_rate``)
+  link       fp32 or int8-compressed boundary, wire bytes/time/energy per
+             step; under adaptive cuts the UAV hover window bounds each
+             step's link time (``runtime.mission_max_link_s``)
+  energy     per-step compute constants from symmetric FLOP counting,
              scaled to each client's edge profile via Eq. (9)
 
-and emits one ``RoundRecord`` per executed global round — loss, accuracy,
-link bytes, client/server/UAV energy — i.e. the paper's rounds-vs-energy
-tradeoff curves, sweepable over fleet sizes, models, cuts and link modes
-(``run_link_sweep`` runs the fp32-vs-int8 pair on one config).
-
-The number of executed rounds is ``min(cfg.global_rounds, tour.rounds)``:
-the UAV's energy budget, not the caller, caps the campaign.
+and emits one ``RoundRecord`` per executed global round. The number of
+executed rounds is ``min(cfg.global_rounds, tour.rounds)``: the UAV's
+energy budget, not the caller, caps the campaign.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..core.energy import (HardwareProfile, JETSON_AGX_ORIN, RTX_A5000,
-                           scale_time)
+# Re-exported: the campaign's record type IS the uniform api record now,
+# and client_coords moved to the (import-neutral) api runtime module.
+from ..api.records import RoundRecord  # noqa: F401
+from ..api.runtime import client_coords  # noqa: F401
+from ..core.energy import HardwareProfile, JETSON_AGX_ORIN
 from ..core.link import LinkConfig
-from ..core.paper_train import classification_metrics, count_sl_step_flops
-from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
-from ..core.split import apply_stages, init_stages
-from ..core.trajectory import TourPlan, plan_tour
+from ..core.trajectory import TourPlan
 from ..core.uav_energy import DEFAULT_UAV, UAVParams
-from ..data.partition import partition_non_iid
-from ..data.synthetic import SyntheticPestImages
-from ..optim import adamw
-from .engine import validate_fleet_mesh
-from .hetero import HeteroFleet, assign_cuts_cnn, cnn_split_program
-from .link import FleetLink
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,23 +60,9 @@ class CampaignConfig:
     comm_s_per_stop: float = 10.0
     # heterogeneity source for adaptive cuts: profiles cycled across clients
     edge_profiles: tuple[HardwareProfile, ...] = (JETSON_AGX_ORIN,)
+    # P3SL-style straggler masking: per-round client dropout probability
+    dropout_rate: float = 0.0
     seed: int = 0
-
-
-@dataclasses.dataclass(frozen=True)
-class RoundRecord:
-    round: int
-    loss: float                  # fleet-mean training loss this round
-    accuracy: float              # held-out accuracy after the round
-    link_bytes: float            # wire bytes this round (all clients/steps)
-    link_time_s: float
-    link_energy_j: float         # edge radio transmit energy (L/R * P_radio)
-    client_energy_j: float       # edge compute, Eq. (9)-scaled
-    server_energy_j: float
-    uav_energy_j: float          # tour energy for this round (Alg. 2)
-
-    def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -107,157 +87,52 @@ class CampaignResult:
         }
 
 
-def client_coords(acres: float, n: int, *, seed: int = 0) -> np.ndarray:
-    """``n`` edge-device positions on a square farm: a jittered uniform grid
-    over the next square count, truncated to ``n`` (deterministic)."""
-    from ..core.deployment import field_side_meters
-    side = field_side_meters(acres)
-    g = int(math.ceil(math.sqrt(n)))
-    xs = (np.arange(g) + 0.5) * side / g
-    pts = np.stack(np.meshgrid(xs, xs, indexing="ij"), axis=-1).reshape(-1, 2)
-    rng = np.random.RandomState(seed)
-    pts = pts + rng.uniform(-0.05, 0.05, size=pts.shape) * side / g
-    return pts[:n]
-
-
-def _round_batches(x, y, parts, batch_size, steps, rng):
-    """(clients, steps, batch_size, ...) minibatch stacks for one global
-    round. Sampling is with replacement, so small partitions still yield
-    full batches — the hoisted per-step link/energy constants (computed for
-    ``batch_size``) stay exact."""
-    empty = [ci for ci, idx in enumerate(parts) if len(idx) == 0]
-    if empty:
-        raise ValueError(f"clients {empty} drew no data; increase the "
-                         f"training set or classes_per_client")
-    sel = np.stack([rng.choice(idx, size=(steps, batch_size), replace=True)
-                    for idx in parts])
-    return jnp.asarray(x[sel]), jnp.asarray(y[sel])
-
-
-def _client_step_time_s(flops: float, edge: HardwareProfile) -> float:
-    return scale_time(flops / (RTX_A5000.fp32_tflops * 1e12), RTX_A5000, edge)
+def campaign_spec(cfg: CampaignConfig):
+    """The ``ExperimentSpec`` a legacy ``CampaignConfig`` stands for: the
+    parallel fleet SL engine (``sl/vmap``) under a UAV mission."""
+    # deferred: repro.api imports fleet.engine/hetero, so a module-level
+    # import here would cycle through this package's own __init__
+    from ..api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                       ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec)
+    return ExperimentSpec(
+        model=ModelSpec(name=cfg.model, num_classes=cfg.num_classes),
+        data=DataSpec(kind="synthetic", image_size=cfg.image_size,
+                      classes_per_client=cfg.classes_per_client),
+        clients=ClientSpec(num_clients=cfg.num_clients,
+                           edge_profiles=cfg.edge_profiles,
+                           dropout_rate=cfg.dropout_rate),
+        cut_policy=CutPolicy(
+            mode="adaptive" if cfg.adaptive_cuts else "fraction",
+            fraction=cfg.client_fraction),
+        link_policy=LinkPolicy(rate_bps=cfg.link.rate_bps,
+                               compress=cfg.link.compress,
+                               radio_power_w=cfg.link.radio_power_w),
+        engine=EngineSpec(kind="sl", client_axis="vmap"),
+        mission=MissionSpec(farm_acres=cfg.farm_acres, uav=cfg.uav,
+                            hover_s_per_stop=cfg.hover_s_per_stop,
+                            comm_s_per_stop=cfg.comm_s_per_stop),
+        global_rounds=cfg.global_rounds, local_steps=cfg.local_steps,
+        batch_size=cfg.batch_size, lr=cfg.lr, seed=cfg.seed)
 
 
 def run_campaign(cfg: CampaignConfig, *, data=None, mesh=None) -> CampaignResult:
-    """Run one fleet campaign. ``data`` is an optional
-    ``(x_train, y_train, x_test, y_test)`` tuple (synthetic pests when
-    omitted); ``mesh`` an optional ('data','model') fleet mesh — the client
-    axis shards over ``data`` (see ``launch.mesh.make_fleet_mesh``)."""
-    validate_fleet_mesh(mesh, cfg.num_clients)
-    link = FleetLink(config=cfg.link)
-
-    # ---- data -------------------------------------------------------------
-    if data is None:
-        gen = SyntheticPestImages(num_classes=cfg.num_classes,
-                                  image_size=cfg.image_size, seed=cfg.seed)
-        key = jax.random.PRNGKey(cfg.seed)
-        n_train = max(24 * cfg.num_clients, 12 * cfg.num_classes)
-        x_train, y_train = gen.sample(jax.random.fold_in(key, 0), n_train)
-        x_test, y_test = gen.sample(jax.random.fold_in(key, 1),
-                                    max(n_train // 4, 48))
-        x_train, y_train = np.asarray(x_train), np.asarray(y_train)
-        x_test, y_test = np.asarray(x_test), np.asarray(y_test)
-    else:
-        x_train, y_train, x_test, y_test = (np.asarray(a) for a in data)
-    parts = partition_non_iid(y_train, cfg.num_clients, cfg.classes_per_client,
-                              num_classes=cfg.num_classes, seed=cfg.seed)
-    rng = np.random.RandomState(cfg.seed)
-
-    # ---- mission: placement, tour, round budget ---------------------------
-    coords = client_coords(cfg.farm_acres, cfg.num_clients, seed=cfg.seed)
-    tour = plan_tour(coords, np.zeros(2), params=cfg.uav,
-                     hover_s_per_stop=cfg.hover_s_per_stop,
-                     comm_s_per_stop=cfg.comm_s_per_stop)
-    rounds_run = min(cfg.global_rounds, tour.rounds)
-
-    # ---- model + per-client cuts ------------------------------------------
-    stages = CNN_BUILDERS[cfg.model](cfg.num_classes)
-    params = init_stages(jax.random.PRNGKey(cfg.seed), stages)
-    sample_x = jnp.asarray(x_train[:cfg.batch_size])
-    sample_y = jnp.asarray(y_train[:cfg.batch_size])
-    edges = [cfg.edge_profiles[i % len(cfg.edge_profiles)]
-             for i in range(cfg.num_clients)]
-    if cfg.adaptive_cuts:
-        cuts = assign_cuts_cnn(stages, params, sample_x, edges=edges,
-                               links=[cfg.link] * cfg.num_clients)
-    else:
-        from ..core.split import cut_index_for_fraction
-        cuts = [cut_index_for_fraction(stages, cfg.client_fraction)
-                ] * cfg.num_clients
-    opt_c, opt_s = adamw(cfg.lr), adamw(cfg.lr)
-
-    def build_program(k):
-        return cnn_split_program(stages, params, k,
-                                 loss_fn=cross_entropy_loss,
-                                 link_boundary=link.boundary())
-
-    fleet = HeteroFleet(build_program, cuts, opt_c, opt_s,
-                        local_rounds=cfg.local_steps, mesh=mesh)
-
-    # ---- hoisted per-step constants (per bucket: flops + link bytes) ------
-    x_test_j = jnp.asarray(x_test)
-    per_client_t = np.zeros(cfg.num_clients)
-    per_client_t_server = np.zeros(cfg.num_clients)
-    per_client_link_bytes = np.zeros(cfg.num_clients)
-    per_client_link_time = np.zeros(cfg.num_clients)
-    per_client_link_energy = np.zeros(cfg.num_clients)
-    bucket_eval = []
-    for bucket in fleet.buckets:
-        prog = fleet.programs[bucket.cut_index]
-        cs, ss = list(stages[:bucket.cut_index]), list(stages[bucket.cut_index:])
-        fl_client, fl_server, smashed_sd = count_sl_step_flops(
-            cs, prog.params_c0, ss, prog.params_s0, sample_x, sample_y)
-        for cid in bucket.client_ids:
-            per_client_t[cid] = _client_step_time_s(fl_client, edges[cid])
-            # each bucket has its own server suffix — bill its own step time
-            per_client_t_server[cid] = fl_server / (RTX_A5000.fp32_tflops
-                                                    * 1e12)
-            per_client_link_bytes[cid] = link.step_wire_bytes(smashed_sd)
-            per_client_link_time[cid] = link.step_time_s(smashed_sd)
-            per_client_link_energy[cid] = link.step_energy_j(smashed_sd)
-        bucket_eval.append(jax.jit(
-            lambda cp, sp_, cs=cs, ss=ss: apply_stages(
-                ss, sp_, apply_stages(cs, cp, x_test_j))))
-
-    # ---- evaluation: every bucket's model votes on the held-out set -------
-    def evaluate() -> dict:
-        logits = jnp.zeros((len(x_test), cfg.num_classes), jnp.float32)
-        for i, bucket in enumerate(fleet.buckets):
-            client_stack, params_s, _, _ = fleet.bucket_state(i)
-            prefix = jax.tree_util.tree_map(lambda v: v[0], client_stack)
-            out = bucket_eval[i](prefix, params_s)
-            logits = logits + out.astype(jnp.float32) * len(bucket.client_ids)
-        return classification_metrics(logits / cfg.num_clients, y_test,
-                                      cfg.num_classes)
-
-    # ---- the campaign loop ------------------------------------------------
-    records: list[RoundRecord] = []
-    metrics = None
-    for rnd in range(rounds_run):
-        bx, by = _round_batches(x_train, y_train, parts, cfg.batch_size,
-                                cfg.local_steps, rng)
-        losses = fleet.run_round({"inputs": bx, "targets": by})
-        metrics = evaluate()
-        steps = cfg.local_steps
-        records.append(RoundRecord(
-            round=rnd,
-            loss=float(losses.mean()),
-            accuracy=metrics["accuracy"],
-            link_bytes=float(per_client_link_bytes.sum() * steps),
-            link_time_s=float(per_client_link_time.sum() * steps),
-            link_energy_j=float(per_client_link_energy.sum() * steps),
-            client_energy_j=float(sum(
-                per_client_t[c] * steps * edges[c].power_w
-                for c in range(cfg.num_clients))),
-            server_energy_j=float(per_client_t_server.sum() * steps
-                                  * RTX_A5000.power_w),
-            uav_energy_j=float(tour.e_first if rnd == 0 else tour.e_per_round),
-        ))
-    if metrics is None:           # budget afforded zero rounds
-        metrics = evaluate()
-    return CampaignResult(config=cfg, tour=tour, rounds_budget=tour.rounds,
+    """Run one fleet campaign (deprecated shim over ``compile_experiment``).
+    ``data`` is an optional ``(x_train, y_train, x_test, y_test)`` tuple
+    (synthetic pests when omitted); ``mesh`` an optional ('data','model')
+    fleet mesh — the client axis shards over ``data``."""
+    from ..api.plan import compile_experiment
+    spec = campaign_spec(cfg)
+    if data is not None:
+        spec = dataclasses.replace(spec, data=dataclasses.replace(
+            spec.data, kind="arrays"))
+    plan = compile_experiment(spec, mesh=mesh, data=data)
+    state, records = plan.run()
+    metrics = (state.last_metrics if state.last_metrics is not None
+               else plan.evaluate(state))   # budget afforded zero rounds
+    return CampaignResult(config=cfg, tour=plan.tour,
+                          rounds_budget=plan.rounds_budget,
                           records=records, metrics=metrics,
-                          cut_of_client=fleet.cut_of_client)
+                          cut_of_client=plan.cut_of_client)
 
 
 def run_link_sweep(cfg: CampaignConfig, *, data=None,

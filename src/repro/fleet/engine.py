@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core.fedavg import fedavg_stack
+from ..core.fedavg import (fedavg_mean_masked, fedavg_stack,
+                           fedavg_stack_masked)
 from ..core.split import SplitStep, make_fl_round
 from ..optim.optimizers import apply_updates
 
@@ -80,24 +81,44 @@ def _constrain(tree, mesh):
         lambda x: jax.lax.with_sharding_constraint(x, s), tree)
 
 
-def make_fleet_fl_round(grad_fn: Callable, opt, *, mesh=None):
+def make_fleet_fl_round(grad_fn: Callable, opt, *, mesh=None,
+                        client_dropout: bool = False):
     """FL baseline round with the client axis vmapped and (optionally)
     sharded over ``data``. Same signature/returns as ``make_fl_round``:
-    ``f(global_params, batches) -> (new_global_params, losses[C, S])``."""
-    vmapped = make_fl_round(grad_fn, opt, client_axis="vmap")
+    ``f(global_params, batches) -> (new_global_params, losses[C, S])``.
 
-    def global_round(global_params, batches):
+    With ``client_dropout`` the round takes a trailing ``client_mask``
+    (clients,) 0/1 argument: masked clients still execute (the program is
+    shape-static) but are excluded from FedAvg — stragglers that missed
+    the round contribute nothing to the new global model. All-masked
+    rounds leave the global params unchanged.
+    """
+    vmapped = make_fl_round(grad_fn, opt, client_axis="vmap",
+                            aggregate=not client_dropout)
+
+    if not client_dropout:
+        def global_round(global_params, batches):
+            batches = _constrain(batches, mesh)
+            new_params, losses = vmapped(global_params, batches)
+            # FedAvg already reduced the client axis (all-reduce over `data`
+            # when sharded); losses keep the client-sharded layout.
+            return new_params, _constrain(losses, mesh)
+
+        return global_round
+
+    def global_round_masked(global_params, batches, client_mask):
         batches = _constrain(batches, mesh)
-        new_params, losses = vmapped(global_params, batches)
-        # FedAvg already reduced the client axis (all-reduce over `data`
-        # when sharded); losses keep the client-sharded layout.
+        client_stack, losses = vmapped(global_params, batches)
+        new_params = fedavg_mean_masked(client_stack, client_mask,
+                                        global_params)
         return new_params, _constrain(losses, mesh)
 
-    return global_round
+    return global_round_masked
 
 
 def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
-                        mesh=None, server_reduce: str = "mean"):
+                        mesh=None, server_reduce: str = "mean",
+                        client_dropout: bool = False):
     """One global round of *parallel* split learning over a sharded fleet.
 
     Per local step: every client's prefix runs fwd/bwd batched (vmap over
@@ -111,44 +132,91 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
     ``f(params_c_stack, params_s, oc_stack, os_, batches)`` with ``batches``
     leading (clients, local_rounds) axes; losses return as
     ``(local_rounds, clients)``.
+
+    With ``client_dropout`` the round takes a trailing ``client_mask``
+    (clients,) 0/1 argument (traced — one compile serves every mask):
+    P3SL-style stragglers. Masked clients keep their params/opt state
+    frozen for the round, contribute nothing to the server's reduced
+    gradient, and are excluded from the closing FedAvg (they rejoin later
+    from their stale prefix). A fully-masked round is a no-op on all state.
     """
     if server_reduce not in ("mean", "sum"):
         raise ValueError(server_reduce)
 
-    def global_round(params_c_stack, params_s, oc_stack, os_, batches):
+    def _run_round(params_c_stack, params_s, oc_stack, os_, batches, mask):
         params_c_stack = _constrain(params_c_stack, mesh)
         oc_stack = _constrain(oc_stack, mesh)
         batches = _constrain(batches, mesh)
         # (clients, local_rounds, ...) -> (local_rounds, clients, ...)
         batches_rm = jax.tree_util.tree_map(
             lambda x: jnp.swapaxes(x, 0, 1), batches)
+        n_active = None if mask is None else jnp.maximum(mask.sum(), 1.0)
 
         def per_client_grads(pc, batch, ps):
             loss, _aux, g_c, g_s = step.grads(pc, ps, batch)
             return loss, g_c, g_s
+
+        def masked_rows(new, old):
+            """Keep masked clients' leading-axis rows at their old value."""
+            def sel(n, o):
+                w = mask.reshape((n.shape[0],) + (1,) * (n.ndim - 1))
+                return jnp.where(w > 0, n, o)
+            return jax.tree_util.tree_map(sel, new, old)
 
         def round_body(carry, batch_r):
             params_c_stack, oc_stack, params_s, os_ = carry
             losses, g_c_stack, g_s_stack = jax.vmap(
                 per_client_grads, in_axes=(0, 0, None))(
                     params_c_stack, batch_r, params_s)
-            up_c, oc_stack = jax.vmap(opt_c.update)(
+            up_c, oc_new = jax.vmap(opt_c.update)(
                 g_c_stack, oc_stack, params_c_stack)
-            params_c_stack = apply_updates(params_c_stack, up_c)
+            pc_new = apply_updates(params_c_stack, up_c)
+            if mask is not None:
+                pc_new = masked_rows(pc_new, params_c_stack)
+                oc_new = masked_rows(oc_new, oc_stack)
+            params_c_stack, oc_stack = pc_new, oc_new
             # server: ONE update on the fleet-reduced gradient (all-reduce
             # over `data` when the client axis is sharded)
             def reduce_g(g):
-                r = jnp.mean if server_reduce == "mean" else jnp.sum
-                return r(g.astype(jnp.float32), axis=0).astype(g.dtype)
+                g32 = g.astype(jnp.float32)
+                if mask is None:
+                    r = jnp.mean if server_reduce == "mean" else jnp.sum
+                    return r(g32, axis=0).astype(g.dtype)
+                w = mask.reshape((g.shape[0],) + (1,) * (g.ndim - 1))
+                s = (g32 * w).sum(axis=0)
+                if server_reduce == "mean":
+                    s = s / n_active
+                return s.astype(g.dtype)
             g_s = jax.tree_util.tree_map(reduce_g, g_s_stack)
-            up_s, os_ = opt_s.update(g_s, os_, params_s)
-            params_s = apply_updates(params_s, up_s)
-            return (params_c_stack, oc_stack, params_s, os_), losses
+            up_s, os_new = opt_s.update(g_s, os_, params_s)
+            ps_new = apply_updates(params_s, up_s)
+            if mask is not None:
+                # zero active clients -> the server also sits the round out
+                any_active = mask.sum() > 0
+                ps_new = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(any_active, n, o), ps_new, params_s)
+                os_new = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(any_active, n, o), os_new, os_)
+            return (params_c_stack, oc_stack, ps_new, os_new), losses
 
         carry = (params_c_stack, oc_stack, params_s, os_)
         carry, losses = jax.lax.scan(round_body, carry, batches_rm)
         params_c_stack, oc_stack, params_s, os_ = carry
-        params_c_stack = _constrain(fedavg_stack(params_c_stack), mesh)
+        agg = (fedavg_stack(params_c_stack) if mask is None
+               else fedavg_stack_masked(params_c_stack, mask))
+        params_c_stack = _constrain(agg, mesh)
         return params_c_stack, params_s, oc_stack, os_, losses
+
+    if client_dropout:
+        def global_round_masked(params_c_stack, params_s, oc_stack, os_,
+                                batches, client_mask):
+            mask = jnp.asarray(client_mask, jnp.float32)
+            return _run_round(params_c_stack, params_s, oc_stack, os_,
+                              batches, mask)
+        return global_round_masked
+
+    def global_round(params_c_stack, params_s, oc_stack, os_, batches):
+        return _run_round(params_c_stack, params_s, oc_stack, os_, batches,
+                          None)
 
     return global_round

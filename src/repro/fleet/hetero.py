@@ -130,6 +130,57 @@ def cnn_split_program(stages: Sequence[Stage], params, k: int, *,
     return SplitProgram(step=step, params_c0=cp, params_s0=sp, cut_index=k)
 
 
+def transformer_block_apply(cfg, *, window="cfg") -> Callable:
+    """``block_apply`` for ``stack_split_program`` backed by the *real*
+    transformer forward (``models.transformer.group_apply``).
+
+    Applies ONE attention layer of an ``ArchConfig`` stack: the un-stacked
+    layer params are re-lifted to a one-layer stack and run through the
+    same ``group_apply`` scan the production launcher uses, so the split
+    model is bit-identical to slicing the full model's layer axis. Dense
+    attention groups only (MoE groups carry a router-aux scalar that the
+    stacked-block interface has no channel for).
+    """
+    from ..models.transformer import GroupSpec, group_apply
+
+    if cfg.n_experts:
+        raise ValueError("transformer_block_apply serves dense attention "
+                         "stacks; MoE groups need the aux-carrying "
+                         "launch-layer forward")
+    g = GroupSpec("attn", 1, 0)
+    win = cfg.swa_window if window == "cfg" else window
+
+    def block_apply(blk, h):
+        stacked = jax.tree_util.tree_map(lambda v: v[None], blk)
+        b, s = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, _aux = group_apply(cfg, g, stacked, h,
+                              jnp.zeros((), jnp.float32),
+                              positions=positions, window=win)
+        return h
+
+    return block_apply
+
+
+def arch_split_program(cfg, key, k: int, *, loss_fn: Callable,
+                       link_boundary: Optional[Callable] = None,
+                       window="cfg") -> SplitProgram:
+    """Split a real transformer ``ArchConfig`` at layer ``k`` through the
+    stacked-block interface: init one homogeneous attention stack
+    (``models.transformer.group_init``) and cut its layer axis. The smashed
+    tensor is the (batch, seq, d_model) residual stream at the cut — the
+    paper's transformer SL boundary."""
+    from ..models.transformer import GroupSpec, group_init
+
+    if not 1 <= k <= cfg.n_layers - 1:
+        raise ValueError(f"cut {k} outside (0, {cfg.n_layers})")
+    stacked = group_init(key, cfg, GroupSpec("attn", cfg.n_layers, 0))
+    return stack_split_program(stacked, k,
+                               block_apply=transformer_block_apply(
+                                   cfg, window=window),
+                               loss_fn=loss_fn, link_boundary=link_boundary)
+
+
 def stack_split_program(stacked_params, k: int, *, block_apply: Callable,
                         loss_fn: Callable,
                         link_boundary: Optional[Callable] = None) -> SplitProgram:
@@ -138,7 +189,8 @@ def stack_split_program(stacked_params, k: int, *, block_apply: Callable,
     ``block_apply(block_params, h) -> h`` applies ONE block (params without
     the stacked layer axis); ``loss_fn(h, targets) -> scalar`` closes the
     server side on the last hidden state. Each tier scans its slice of the
-    stack, so the same program serves any transformer ``split_stack`` model.
+    stack, so the same program serves any transformer ``split_stack`` model
+    (``arch_split_program`` builds one straight from an ``ArchConfig``).
     """
     params_c, params_s = split_stack(stacked_params, k)
 
@@ -179,13 +231,15 @@ class HeteroFleet:
 
     def __init__(self, build_program: Callable[[int], SplitProgram],
                  cut_indices: Sequence[int], opt_c, opt_s, *,
-                 local_rounds: int, mesh=None):
+                 local_rounds: int, mesh=None, client_dropout: bool = False,
+                 server_reduce: str = "mean"):
         self.buckets = bucket_by_cut(cut_indices)
         self.local_rounds = local_rounds
         self.num_clients = len(cut_indices)
+        self.client_dropout = client_dropout
         self._ids: list[np.ndarray] = []
         self._engines = []
-        self._states = []
+        self._init_states = []
         self.programs: dict[int, SplitProgram] = {}
         for bucket in self.buckets:
             prog = build_program(bucket.cut_index)
@@ -198,21 +252,44 @@ class HeteroFleet:
                 validate_fleet_mesh(b_mesh, n)
             except ValueError:
                 b_mesh = None
-            # donate the bucket's stacked state round-over-round (batches,
-            # argnum 4, are fresh each round and not donated)
+            # donate the bucket's stacked state round-over-round (batches
+            # and the dropout mask are fresh each round and not donated)
             engine = jax.jit(make_fleet_sl_round(
                 prog.step, opt_c, opt_s, local_rounds=local_rounds,
-                mesh=b_mesh), donate_argnums=(0, 1, 2, 3))
+                mesh=b_mesh, client_dropout=client_dropout,
+                server_reduce=server_reduce),
+                donate_argnums=(0, 1, 2, 3))
             state = (_stack_replicas(prog.params_c0, n), prog.params_s0,
                      init_stacked(opt_c, prog.params_c0, n),
                      opt_s.init(prog.params_s0))
-            # the engine donates its state buffers; the initial tiers alias
-            # the caller's (shared) model params, so copy before donating
-            state = jax.tree_util.tree_map(jnp.copy, state)
             self.programs[bucket.cut_index] = prog
             self._ids.append(np.asarray(bucket.client_ids))
             self._engines.append(engine)
-            self._states.append(state)
+            # the engine donates its state buffers; the initial tiers alias
+            # the caller's (shared) model params, so fresh copies are made
+            # whenever live/external state is materialized
+            self._init_states.append(state)
+        # the fleet's OWN live state (run_round/bucket_state surface) is
+        # materialized lazily: callers threading state externally through
+        # init_states()/run_round_on never pay for the internal copy
+        self._states = None
+
+    def reset(self) -> None:
+        """Re-initialize every bucket's live state (compiled engines are
+        kept), so one fleet can run several independent experiments."""
+        self._states = self.init_states()
+
+    def _live_states(self) -> list[tuple]:
+        if self._states is None:
+            self._states = self.init_states()
+        return self._states
+
+    def init_states(self) -> list[tuple]:
+        """Fresh per-bucket state tuples, independent of the fleet's own
+        live state — for callers that thread state externally through
+        ``run_round_on`` (each copy may be donated exactly once)."""
+        return [jax.tree_util.tree_map(jnp.copy, s)
+                for s in self._init_states]
 
     @property
     def cut_of_client(self) -> list[int]:
@@ -224,17 +301,43 @@ class HeteroFleet:
 
     def bucket_state(self, i: int):
         """(params_c_stack, params_s, oc_stack, os) of bucket ``i``."""
-        return self._states[i]
+        return self._live_states()[i]
 
-    def run_round(self, batches) -> np.ndarray:
+    def run_round(self, batches, client_mask=None) -> np.ndarray:
         """One global round. ``batches`` is a pytree with leading
         (num_clients, local_rounds) axes; returns losses
-        (local_rounds, num_clients) with every client filled exactly once."""
+        (local_rounds, num_clients) with every client filled exactly once.
+
+        ``client_mask`` (global (num_clients,) 0/1 vector) drops stragglers
+        for the round; requires the fleet to be built with
+        ``client_dropout=True`` (the mask is sliced per bucket and fed to
+        each bucket's compiled round).
+        """
+        self._states, losses = self.run_round_on(self._live_states(),
+                                                 batches, client_mask)
+        return losses
+
+    def run_round_on(self, states: list[tuple], batches,
+                     client_mask=None) -> tuple[list[tuple], np.ndarray]:
+        """``run_round`` over caller-owned per-bucket states (as produced
+        by ``init_states``): returns ``(new_states, losses)``. The input
+        state buffers are donated to the compiled rounds — reuse the
+        returned list, never the argument."""
+        if client_mask is not None and not self.client_dropout:
+            raise ValueError("client_mask needs HeteroFleet("
+                             "client_dropout=True)")
         losses = np.zeros((self.local_rounds, self.num_clients), np.float32)
+        new_states = list(states)
         for i, ids in enumerate(self._ids):
             sub = jax.tree_util.tree_map(
                 lambda x: jnp.take(x, jnp.asarray(ids), axis=0), batches)
-            *state, bucket_losses = self._engines[i](*self._states[i], sub)
-            self._states[i] = tuple(state)
+            if self.client_dropout:
+                mask = (np.ones(len(ids), np.float32) if client_mask is None
+                        else np.asarray(client_mask, np.float32)[ids])
+                out = self._engines[i](*states[i], sub, jnp.asarray(mask))
+            else:
+                out = self._engines[i](*states[i], sub)
+            *state, bucket_losses = out
+            new_states[i] = tuple(state)
             losses[:, ids] = np.asarray(bucket_losses)
-        return losses
+        return new_states, losses

@@ -1,0 +1,388 @@
+"""The unified ``repro.api`` experiment layer.
+
+Acceptance: ONE ``ExperimentSpec`` reproduces the FL baseline, sequential
+SL, fleet-vmap SL, hetero-cut SL and a compressed-link campaign round by
+changing only spec fields; the legacy entry points (``train_fl`` /
+``train_sl`` / ``run_campaign``) are shims that produce records equal to
+running the same spec directly. Policy follow-ups landed in the redesign —
+P3SL-style client dropout and the mission-derived link deadline — are
+covered here too, as is the transformer-ArchConfig path through
+``fleet.hetero.stack_split_program`` and the perf trend gate.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                       ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec,
+                       RoundRecord, compile_experiment, mission_max_link_s)
+from repro.core.adaptive_cut import profile_cuts_cnn, select_cut
+from repro.core.energy import HardwareProfile, JETSON_AGX_ORIN
+from repro.core.paper_train import PaperTrainConfig, paper_spec, train_fl, \
+    train_sl
+from repro.core.split import (SplitStep, apply_stages, init_stages,
+                              partition_stages)
+from repro.fleet import (CampaignConfig, FLEET_EQUIV_ATOL, campaign_spec,
+                         make_fleet_sl_round, run_campaign)
+from repro.fleet.hetero import arch_split_program, transformer_block_apply
+from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss
+from repro.optim import adamw, init_stacked
+
+NUM_CLASSES = 4
+
+BASE = ExperimentSpec(
+    model=ModelSpec(name="tinycnn", num_classes=NUM_CLASSES),
+    data=DataSpec(kind="synthetic", image_size=16, classes_per_client=2),
+    clients=ClientSpec(num_clients=4),
+    cut_policy=CutPolicy(mode="fraction", fraction=0.4),
+    engine=EngineSpec(kind="sl", client_axis="scan"),
+    global_rounds=2, local_steps=2, batch_size=4)
+
+MCU = HardwareProfile("mcu-class", fp32_tflops=0.02, mem_bw_gbs=2.0,
+                      tensor_tflops=0.04, cpu_passmark=400.0, power_w=2.0)
+
+# The acceptance matrix: every paper scenario is a FIELD EDIT on one spec.
+VARIANTS = {
+    "fl_baseline": dataclasses.replace(
+        BASE, engine=EngineSpec(kind="fl", client_axis="scan")),
+    "sl_sequential": BASE,
+    "sl_fleet_vmap": dataclasses.replace(
+        BASE, engine=EngineSpec(kind="sl", client_axis="vmap")),
+    "sl_hetero_cut": dataclasses.replace(
+        BASE, engine=EngineSpec(kind="sl", client_axis="vmap"),
+        cut_policy=CutPolicy(mode="adaptive"),
+        clients=ClientSpec(num_clients=4,
+                           edge_profiles=(JETSON_AGX_ORIN, MCU))),
+    "campaign_int8": dataclasses.replace(
+        BASE, engine=EngineSpec(kind="sl", client_axis="vmap"),
+        link_policy=LinkPolicy(compress="int8"),
+        mission=MissionSpec(farm_acres=100.0)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_one_spec_reproduces_every_round_shape(name):
+    """compile_experiment lowers each field-edited spec to a running plan
+    with the uniform RoundRecord stream."""
+    spec = VARIANTS[name]
+    plan = compile_experiment(spec)
+    state, records = plan.run()
+    assert len(records) == plan.num_rounds > 0
+    assert state.last_metrics is not None
+    for rec in records:
+        assert isinstance(rec, RoundRecord)
+        d = rec.to_dict()
+        assert np.isfinite(d["loss"])
+        assert 0.0 <= d["accuracy"] <= 1.0
+        assert d["client_energy_j"] > 0
+        assert d["active_clients"] == spec.clients.num_clients
+        assert d["engine"] == plan.engine_label
+        if spec.engine.kind == "sl":
+            assert d["link_bytes"] > 0 and d["server_energy_j"] > 0
+        else:
+            assert d["link_bytes"] == 0.0
+        assert (d["uav_energy_j"] > 0) == (spec.mission is not None)
+    if name == "sl_hetero_cut":
+        assert len(set(plan.cut_of_client)) >= 1
+        assert len(plan.cut_of_client) == 4
+    if name == "campaign_int8":
+        assert plan.tour is not None and plan.rounds_budget >= len(records)
+
+
+def test_hetero_plan_states_are_independent():
+    """plan.init() returns fresh state on every call, hetero path included:
+    a second run must not wipe or alias the first run's trained state."""
+    plan = compile_experiment(VARIANTS["sl_hetero_cut"])
+    s1, _ = plan.run_round(plan.init())
+    m1 = plan.evaluate(s1)
+    s2 = plan.init()                    # must not reset s1's state
+    m1_again = plan.evaluate(s1)
+    assert m1 == m1_again
+    m_fresh = plan.evaluate(s2)
+    # fresh state is the untrained init, distinct object from s1's
+    assert s2.engine_state is not s1.engine_state
+    assert m_fresh.keys() == m1.keys()
+
+
+def test_second_round_trains(tmp_path):
+    """The record stream reflects actual optimization: training loss drops
+    over rounds on every engine (same synthetic data, fresh plan)."""
+    for name in ("fl_baseline", "sl_fleet_vmap"):
+        spec = dataclasses.replace(VARIANTS[name], global_rounds=3)
+        _, records = compile_experiment(spec).run()
+        assert records[-1].loss < records[0].loss
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims == the same spec run directly
+# ---------------------------------------------------------------------------
+
+def _shim_data(seed=0, n=96):
+    rng = np.random.RandomState(seed)
+    x = rng.uniform(0, 1, size=(n, 16, 16, 3)).astype(np.float32)
+    y = rng.randint(0, NUM_CLASSES, size=(n,))
+    return x, y, x[:24], y[:24]
+
+
+@pytest.mark.parametrize("kind", ["fl", "sl"])
+def test_trainer_shims_equal_direct_spec(kind):
+    """train_fl/train_sl == compile_experiment(paper_spec(cfg)) run
+    directly, within FLEET_EQUIV_ATOL (they share one code path now)."""
+    cfg = PaperTrainConfig(model="tinycnn", num_clients=3, global_rounds=2,
+                           local_steps=2, batch_size=4, image_size=16,
+                           client_fraction=0.4, num_classes=NUM_CLASSES)
+    data = _shim_data()
+    res = (train_fl if kind == "fl" else train_sl)(cfg, *data)
+
+    plan = compile_experiment(paper_spec(cfg, kind), data=data)
+    state, records = plan.run()
+    assert len(records) == len(res["history"]) == cfg.global_rounds
+    for rec, hist in zip(records, res["history"]):
+        assert abs(rec.accuracy - hist["accuracy"]) <= FLEET_EQUIV_ATOL
+    assert abs(sum(r.client_energy_j for r in records)
+               - res["client_energy"].energy_j) <= 1e-9 \
+        + FLEET_EQUIV_ATOL * abs(res["client_energy"].energy_j)
+    if kind == "sl":
+        assert abs(sum(r.link_bytes for r in records)
+                   - res["link_bytes"]) < 1e-6
+        assert plan.cut_of_client[0] == res["cut_index"]
+
+
+def test_campaign_shim_equals_direct_spec():
+    """run_campaign == compile_experiment(campaign_spec(cfg)) run directly:
+    identical record streams within FLEET_EQUIV_ATOL."""
+    cfg = CampaignConfig(model="tinycnn", num_clients=4, global_rounds=2,
+                         local_steps=2, batch_size=4, image_size=16,
+                         num_classes=NUM_CLASSES, classes_per_client=2)
+    res = run_campaign(cfg)
+
+    plan = compile_experiment(campaign_spec(cfg))
+    _, records = plan.run()
+    assert len(records) == len(res.records)
+    assert plan.cut_of_client == res.cut_of_client
+    assert plan.tour.order == res.tour.order
+    for a, b in zip(records, res.records):
+        for field in ("loss", "accuracy", "link_bytes", "link_energy_j",
+                      "client_energy_j", "server_energy_j", "uav_energy_j"):
+            va, vb = getattr(a, field), getattr(b, field)
+            assert abs(va - vb) <= FLEET_EQUIV_ATOL * max(1.0, abs(vb)), \
+                (field, va, vb)
+
+
+# ---------------------------------------------------------------------------
+# policy follow-ups: client dropout + mission-derived link deadline
+# ---------------------------------------------------------------------------
+
+def test_client_dropout_masks_stragglers():
+    """P3SL-style dropout: some rounds run with fewer active clients; the
+    round's energy/link bill covers only the active subset."""
+    spec = dataclasses.replace(
+        VARIANTS["sl_fleet_vmap"], global_rounds=4,
+        clients=ClientSpec(num_clients=4, dropout_rate=0.6), seed=3)
+    plan = compile_experiment(spec)
+    _, records = plan.run()
+    actives = [r.active_clients for r in records]
+    assert all(1 <= a <= 4 for a in actives)
+    assert min(actives) < 4          # dropout actually fired at rate 0.6
+    full = compile_experiment(dataclasses.replace(
+        spec, clients=ClientSpec(num_clients=4)))
+    _, full_records = full.run()
+    for r, fr in zip(records, full_records):
+        if r.active_clients < 4:
+            assert r.client_energy_j < fr.client_energy_j
+            assert r.link_bytes < fr.link_bytes
+        assert np.isfinite(r.loss)
+
+
+def test_dropout_engine_full_mask_matches_plain():
+    """The mask-aware fleet SL round with an all-ones mask == the plain
+    round (the dropout seam costs nothing when unused)."""
+    C, S, B = 4, 2, 4
+    stages = CNN_BUILDERS["tinycnn"](NUM_CLASSES)
+    key = jax.random.PRNGKey(0)
+    params = init_stages(key, stages)
+    bx = jax.random.uniform(jax.random.fold_in(key, 1), (C, S, B, 16, 16, 3))
+    by = jax.random.randint(jax.random.fold_in(key, 2), (C, S, B), 0,
+                            NUM_CLASSES)
+    cs, cp0, ss, sp, _ = partition_stages(stages, params, 0.4)
+    opt_c, opt_s = adamw(1e-3), adamw(1e-3)
+    step = SplitStep(
+        client_fwd=lambda pc, xx: apply_stages(cs, pc, xx),
+        server_loss=lambda ps, sm, yy: (
+            cross_entropy_loss(apply_stages(ss, ps, sm), yy), {}),
+    )
+    stack = jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (C,) + v.shape), cp0)
+    state = (stack, sp, init_stacked(opt_c, cp0, C), opt_s.init(sp))
+    batches = {"inputs": bx, "targets": by}
+    plain = make_fleet_sl_round(step, opt_c, opt_s, local_rounds=S)(
+        *state, batches)
+    masked = make_fleet_sl_round(step, opt_c, opt_s, local_rounds=S,
+                                 client_dropout=True)(
+        *state, batches, jnp.ones(C))
+    for a, b in zip(jax.tree_util.tree_leaves(plain),
+                    jax.tree_util.tree_leaves(masked)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=FLEET_EQUIV_ATOL)
+
+    # a zero mask is a no-op round: params pass through untouched
+    frozen = make_fleet_sl_round(step, opt_c, opt_s, local_rounds=S,
+                                 client_dropout=True)(
+        *jax.tree_util.tree_map(jnp.copy, state), batches, jnp.zeros(C))
+    for a, b in zip(jax.tree_util.tree_leaves(frozen[:4]),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-7)
+
+
+def test_mission_derives_link_deadline():
+    """With adaptive cuts + a mission, the UAV hover window bounds the
+    per-step link time exactly as an explicit max_link_s would."""
+    mission = MissionSpec(hover_s_per_stop=0.002, comm_s_per_stop=0.002)
+    derived = mission_max_link_s(mission.hover_s_per_stop,
+                                 mission.comm_s_per_stop, BASE.local_steps)
+    assert derived == pytest.approx(0.004 / BASE.local_steps)
+    starved = LinkPolicy(rate_bps=1e6)    # 1 Mb/s: link time dominates
+    with_mission = dataclasses.replace(
+        VARIANTS["sl_hetero_cut"], link_policy=starved, mission=mission)
+    explicit = dataclasses.replace(
+        VARIANTS["sl_hetero_cut"], link_policy=starved,
+        cut_policy=CutPolicy(mode="adaptive", max_link_s=derived))
+    plan_m = compile_experiment(with_mission)
+    plan_e = compile_experiment(explicit)
+    assert plan_m.cut_of_client == plan_e.cut_of_client
+
+    # the binding deadline forces the min-link-time cut (select_cut's
+    # documented fallback) for the Jetson-profile clients
+    stages = plan_m.stages
+    choices = profile_cuts_cnn(stages, plan_m.params0,
+                               jnp.asarray(plan_m.x_train[:BASE.batch_size]),
+                               edge=JETSON_AGX_ORIN, link=starved.config())
+    expected = select_cut(choices, max_link_s=derived).cut_index
+    assert plan_m.cut_of_client[0] == expected
+
+
+# ---------------------------------------------------------------------------
+# real transformer ArchConfig through the stacked-block split (ROADMAP PR-2)
+# ---------------------------------------------------------------------------
+
+def _tiny_arch():
+    from repro.configs.base import ArchConfig
+    return ArchConfig(name="tiny-attn", family="dense", n_layers=4,
+                      d_model=16, n_heads=2, n_kv_heads=2, d_ff=32,
+                      vocab=64, dtype="float32")
+
+
+def test_arch_split_program_matches_full_group_apply():
+    """arch_split_program drives models.transformer.group_apply through
+    stack_split_program: client scan + server scan == one scan over the
+    whole stack, and the fleet round trains the split."""
+    from repro.models.transformer import GroupSpec, group_apply
+    cfg = _tiny_arch()
+    key = jax.random.PRNGKey(0)
+
+    def loss_fn(h, targets):
+        return jnp.mean((h.mean(-1) - targets) ** 2)
+
+    prog = arch_split_program(cfg, key, 2, loss_fn=loss_fn)
+    B, S = 2, 8
+    x = 0.5 * jax.random.normal(jax.random.fold_in(key, 1),
+                                (B, S, cfg.d_model), jnp.float32)
+    smashed = prog.step.client_fwd(prog.params_c0, x)
+    assert smashed.shape == (B, S, cfg.d_model)
+    served = prog.step.client_fwd(prog.params_s0, smashed)
+
+    # reference: group_apply over the full 4-layer stack in one scan
+    from repro.core.split import merge_stack
+    full_stack = merge_stack(prog.params_c0, prog.params_s0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ref, _ = group_apply(cfg, GroupSpec("attn", cfg.n_layers, 0), full_stack,
+                         x, jnp.zeros((), jnp.float32), positions=positions,
+                         window=cfg.swa_window)
+    np.testing.assert_allclose(np.asarray(served), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+    # the split trains under the fleet engine
+    C, St = 2, 2
+    opt_c, opt_s = adamw(1e-3), adamw(1e-3)
+    engine = jax.jit(make_fleet_sl_round(prog.step, opt_c, opt_s,
+                                         local_rounds=St))
+    stack = jax.tree_util.tree_map(
+        lambda v: jnp.broadcast_to(v[None], (C,) + v.shape), prog.params_c0)
+    bx = 0.5 * jax.random.normal(jax.random.fold_in(key, 2),
+                                 (C, St, B, S, cfg.d_model), jnp.float32)
+    by = jax.random.normal(jax.random.fold_in(key, 3), (C, St, B, S))
+    *_, losses = engine(stack, prog.params_s0,
+                        init_stacked(opt_c, prog.params_c0, C),
+                        opt_s.init(prog.params_s0),
+                        {"inputs": bx, "targets": by})
+    assert losses.shape == (St, C) and bool(jnp.isfinite(losses).all())
+
+
+def test_transformer_block_apply_rejects_moe():
+    import dataclasses as dc
+    cfg = dc.replace(_tiny_arch(), n_experts=4, top_k=2)
+    with pytest.raises(ValueError):
+        transformer_block_apply(cfg)
+
+
+# ---------------------------------------------------------------------------
+# spec validation + perf trend gate
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError):   # adaptive cuts need the fleet engine
+        compile_experiment(dataclasses.replace(
+            BASE, cut_policy=CutPolicy(mode="adaptive")))
+    with pytest.raises(ValueError):   # dropout is a fleet policy
+        compile_experiment(dataclasses.replace(
+            BASE, clients=ClientSpec(num_clients=4, dropout_rate=0.5)))
+    with pytest.raises(ValueError):   # arrays spec needs arrays
+        compile_experiment(dataclasses.replace(
+            BASE, data=DataSpec(kind="arrays")))
+    with pytest.raises(ValueError):
+        compile_experiment(dataclasses.replace(
+            BASE, engine=EngineSpec(kind="sl", client_axis="pmap")))
+
+
+def test_perf_trend_gate(tmp_path):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.report import check_perf, perf_trend
+
+    def row(commit, variant, sps):
+        return {"commit": commit, "bench": "engine_perf", "model": "tinycnn",
+                "case": "c8s2b8", "variant": variant, "steps_per_s": sps}
+
+    rows = [row("aaa", "sl_fleet", 100.0), row("aaa", "fl_vmap", 200.0),
+            row("bbb", "sl_fleet", 95.0), row("bbb", "fl_vmap", 170.0)]
+    comps, regs = perf_trend(rows, threshold=0.10)
+    assert len(comps) == 2
+    assert len(regs) == 1 and "fl_vmap" in regs[0]   # -15% flagged, -5% not
+    assert perf_trend(rows[:2]) == ([], [])          # one commit: vacuous
+
+    path = tmp_path / "engine_perf.json"
+    path.write_text(json.dumps(rows))
+    assert check_perf(str(path), threshold=0.10) == 1
+    assert check_perf(str(path), threshold=0.20) == 0
+    assert check_perf(str(tmp_path / "missing.json")) == 0
+
+    # relative mode: a 2x-slower machine is NOT a regression once each
+    # variant is normalized by its commit's sl_host_loop baseline — but a
+    # genuinely slower engine still is
+    rel = [row("aaa", "sl_host_loop", 100.0), row("aaa", "sl_fleet", 300.0),
+           row("bbb", "sl_host_loop", 50.0), row("bbb", "sl_fleet", 150.0)]
+    comps, regs = perf_trend(rel, threshold=0.10, relative=True)
+    fleet = [c for c in comps if c["variant"] == "sl_fleet"][0]
+    assert fleet["unit"] == "x host_loop" and regs == []   # 3.0x both sides
+    _, regs_abs = perf_trend(rel, threshold=0.10)
+    assert len(regs_abs) == 2                        # absolute mode flags both
+    rel[-1] = row("bbb", "sl_fleet", 100.0)          # fleet fell to 2x: real
+    _, regs = perf_trend(rel, threshold=0.10, relative=True)
+    assert len(regs) == 1 and "sl_fleet" in regs[0]
