@@ -12,10 +12,15 @@ hand-wired as the historical baseline:
                  round one compiled program (nested scan, FedAvg inside).
   sl_fleet     : spec ``sl/vmap`` — parallel split learning, client axis
                  vmapped (shardable over `data`).
+  sl_shard_map : spec ``sl/shard_map`` — the explicit-collective variant
+                 (in-map ``lax.pmean`` server gradient, ``fedavg_pmean``
+                 FedAvg); the sl_shard_map/sl_fleet ratio prices the
+                 pinned collective schedule vs GSPMD inference.
   fl_scan      : spec ``fl/scan`` — ``make_fl_round(client_axis='scan')``.
   fl_vmap      : spec ``fl/vmap`` — the fl_vmap/fl_scan ratio is the
                  measured steps/s delta bought by the loosened
                  FLEET_EQUIV_ATOL equivalence bound.
+  fl_shard_map : spec ``fl/shard_map`` — explicit ``fedavg_pmean`` FedAvg.
 
 Results append to ``results/engine_perf.json`` as a per-PR log — one row
 per (commit, model, case, variant):
@@ -140,7 +145,7 @@ def bench_sl_host_loop(spec: ExperimentSpec, *, rounds: int) -> float:
 
 def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         batch: int = 16, image: int = 32, rounds: int = 10,
-        print_csv: bool = True) -> list[dict]:
+        print_csv: bool = True, commit: str | None = None) -> list[dict]:
     base = _base_spec(model, clients, steps, batch, image)
     variants = {
         "sl_host_loop": bench_sl_host_loop(base, rounds=rounds),
@@ -148,14 +153,20 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         "sl_fleet": bench_spec_variant(
             dataclasses.replace(base, engine=EngineSpec("sl", "vmap")),
             rounds=rounds),
+        "sl_shard_map": bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("sl", "shard_map")),
+            rounds=rounds),
         "fl_scan": bench_spec_variant(
             dataclasses.replace(base, engine=EngineSpec("fl", "scan")),
             rounds=rounds),
         "fl_vmap": bench_spec_variant(
             dataclasses.replace(base, engine=EngineSpec("fl", "vmap")),
             rounds=rounds),
+        "fl_shard_map": bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("fl", "shard_map")),
+            rounds=rounds),
     }
-    commit = _commit()
+    commit = commit or _commit()
     case = f"c{clients}s{steps}b{batch}"
     rows = [{"commit": commit, "bench": "engine_perf", "model": model,
              "case": case, "variant": v, "steps_per_s": round(sps, 2)}
@@ -171,12 +182,14 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
     if print_csv:
         sl_speed = variants["sl_scanned"] / max(variants["sl_host_loop"], 1e-9)
         fl_delta = variants["fl_vmap"] / max(variants["fl_scan"], 1e-9)
+        sm_delta = variants["sl_shard_map"] / max(variants["sl_fleet"], 1e-9)
         for r in rows:
             print(f"{r['bench']},{r['model']}/{case}/{r['variant']},0,"
                   f"{r['steps_per_s']}steps/s")
         print(f"engine_perf,{model}/{case}/summary,0,"
               f"scanned_vs_host={sl_speed:.2f}x;"
-              f"fl_vmap_vs_scan={fl_delta:.2f}x")
+              f"fl_vmap_vs_scan={fl_delta:.2f}x;"
+              f"sl_shard_map_vs_vmap={sm_delta:.2f}x")
     return rows
 
 
@@ -188,9 +201,15 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--image", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--commit", default=None,
+                    help="override the logged commit label (used to append "
+                         "same-machine re-measured baseline rows next to a "
+                         "new commit's rows, so the trend gate compares "
+                         "like with like)")
     args = ap.parse_args()
     run(model=args.model, clients=args.clients, steps=args.steps,
-        batch=args.batch, image=args.image, rounds=args.rounds)
+        batch=args.batch, image=args.image, rounds=args.rounds,
+        commit=args.commit)
 
 
 if __name__ == "__main__":

@@ -4,11 +4,12 @@
 link_policy + engine + optional mission) names an experiment;
 ``compile_experiment`` lowers it to a ``Plan`` with a uniform
 ``init() / run_round() / evaluate()`` surface and a ``RoundRecord`` stream,
-dispatching internally to the scan/vmap/sharded/hetero engines. The legacy
-entry points (``core.paper_train.train_fl/train_sl``,
-``fleet.campaign.run_campaign``) are thin adapters over this layer.
+dispatching internally to the scan/vmap/shard_map/hetero engines. The
+legacy entry points are gone; ``core.paper_train.paper_spec`` and
+``fleet.campaign.campaign_spec`` map the historical configs onto specs.
 
-See ``src/repro/api/README.md`` for the old-call-site -> spec table.
+See ``src/repro/api/README.md`` for the old-call-site -> spec table and
+``docs/ARCHITECTURE.md`` for the layer map.
 """
 from .records import RoundRecord
 from .runtime import (classification_metrics, client_coords,

@@ -34,7 +34,9 @@ from ..core.trajectory import TourPlan, plan_tour
 from ..data.partition import partition_non_iid
 from ..data.synthetic import SyntheticPestImages
 from ..fleet.engine import (make_fleet_fl_round, make_fleet_sl_round,
+                            server_mesh_sizes, shard_server_state,
                             validate_fleet_mesh)
+from ..launch.mesh import make_fleet_mesh, single_device_fleet_mesh
 from ..fleet.hetero import HeteroFleet, assign_cuts_cnn, cnn_split_program
 from ..fleet.link import FleetLink
 from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
@@ -214,9 +216,9 @@ def _validate(spec: ExperimentSpec):
     eng = spec.engine
     if eng.kind not in ("fl", "sl"):
         raise ValueError(f"engine.kind must be 'fl' or 'sl', got {eng.kind!r}")
-    if eng.client_axis not in ("scan", "vmap"):
-        raise ValueError(f"engine.client_axis must be 'scan' or 'vmap', "
-                         f"got {eng.client_axis!r}")
+    if eng.client_axis not in ("scan", "vmap", "shard_map"):
+        raise ValueError(f"engine.client_axis must be 'scan', 'vmap' or "
+                         f"'shard_map', got {eng.client_axis!r}")
     if spec.model.family != "cnn":
         raise ValueError(f"unknown model family {spec.model.family!r}; "
                          "transformer stacks enter via "
@@ -226,24 +228,77 @@ def _validate(spec: ExperimentSpec):
     if spec.cut_policy.mode not in ("fraction", "adaptive"):
         raise ValueError(spec.cut_policy.mode)
     if spec.cut_policy.mode == "adaptive" and not (
-            eng.kind == "sl" and eng.client_axis == "vmap"):
+            eng.kind == "sl" and eng.is_fleet):
         raise ValueError("adaptive cuts produce per-client programs; they "
-                         "need the bucketed fleet engine (sl/vmap)")
-    if spec.clients.dropout_rate > 0 and eng.client_axis != "vmap":
-        raise ValueError("client dropout is a fleet policy; use a vmap "
-                         "client axis")
+                         "need the bucketed fleet engine (sl/vmap or "
+                         "sl/shard_map)")
+    if spec.clients.dropout_rate > 0 and not eng.is_fleet:
+        raise ValueError("client dropout is a fleet policy; use a vmap or "
+                         "shard_map client axis")
+    if eng.server_mesh is not None:
+        if eng.kind != "sl" or not eng.is_fleet:
+            raise ValueError("server_mesh shards the SL server suffix; it "
+                             "needs a fleet SL engine (sl/vmap or "
+                             "sl/shard_map)")
+        f, t = eng.server_mesh
+        if f < 1 or t < 1:
+            raise ValueError(f"server_mesh sizes must be >= 1, got "
+                             f"{eng.server_mesh}")
+
+
+def _resolve_mesh(spec: ExperimentSpec, mesh):
+    """Pick/validate the fleet mesh for a fleet-axis engine. ``server_mesh``
+    grows a ('data','fsdp','tp') layout; shard_map always gets a concrete
+    mesh (single-device fallback) so the explicit-collective program
+    compiles anywhere."""
+    eng = spec.engine
+    if not eng.is_fleet:
+        return mesh
+    n = spec.clients.num_clients
+    if mesh is None and eng.server_mesh is not None:
+        f, t = eng.server_mesh
+        mesh = make_fleet_mesh(n, fsdp=f, tp=t)
+        if mesh is None and f * t > 1:
+            raise ValueError(
+                f"server_mesh={eng.server_mesh} needs at least {f * t} "
+                f"devices ({len(jax.devices())} available)")
+    elif mesh is not None and eng.server_mesh is not None:
+        # an explicit mesh must deliver the server sub-mesh the spec asked
+        # for — never silently fall back to a replicated server suffix
+        if server_mesh_sizes(mesh) != tuple(eng.server_mesh):
+            raise ValueError(
+                f"server_mesh={eng.server_mesh} but the supplied mesh has "
+                f"(fsdp, tp)={server_mesh_sizes(mesh)}; build it with "
+                f"launch.mesh.make_fleet_mesh(num_clients, fsdp=, tp=) or "
+                f"drop one of the two")
+    if mesh is None and eng.client_axis == "shard_map":
+        mesh = make_fleet_mesh(n) or single_device_fleet_mesh()
+    validate_fleet_mesh(mesh, n)
+    f, t = server_mesh_sizes(mesh)
+    if (eng.client_axis == "shard_map" and f * t > 1
+            and jax.default_backend() == "cpu"):
+        # this repo's pinned XLA:CPU partitioner aborts (hard, not an
+        # exception) on fsdp/tp-sharded operands entering the manual
+        # body's scan — see fleet.engine and ROADMAP; the vmap engine
+        # runs the full 2D layout on every backend
+        raise ValueError(
+            "client_axis='shard_map' with a >1 server_mesh is gated off "
+            "the CPU backend (XLA:CPU partitioner abort in the pinned "
+            "toolchain); use client_axis='vmap' for the 2D layout on CPU")
+    return mesh
 
 
 def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
     """Lower ``spec`` to a ``Plan``. ``data`` is an optional
     ``(x_train, y_train, x_test, y_test)`` tuple (required for
-    ``DataSpec(kind='arrays')``); ``mesh`` an optional ('data','model')
-    fleet mesh — the stacked client axis of vmap engines shards over
-    ``data`` (see ``launch.mesh.make_fleet_mesh``)."""
+    ``DataSpec(kind='arrays')``); ``mesh`` an optional fleet mesh
+    (``launch.mesh.make_fleet_mesh`` — built automatically for
+    ``client_axis='shard_map'`` or a ``server_mesh``): the stacked client
+    axis of fleet engines shards over ``data``, the SL server suffix over
+    ``fsdp`` x ``tp``."""
     _validate(spec)
     n = spec.clients.num_clients
-    if spec.engine.client_axis == "vmap":
-        validate_fleet_mesh(mesh, n)
+    mesh = _resolve_mesh(spec, mesh)
     arrays = _resolve_data(spec, data)
     x_train, y_train, x_test, y_test = arrays
     parts = partition_non_iid(y_train, n, spec.data.classes_per_client,
@@ -350,10 +405,10 @@ def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
                 params)
 
     dropout = spec.clients.dropout_rate > 0
-    if spec.engine.client_axis == "vmap":
-        round_fn = jax.jit(make_fleet_fl_round(grad_fn, opt, mesh=mesh,
-                                               client_dropout=dropout),
-                           donate_argnums=(0,))
+    if spec.engine.is_fleet:
+        round_fn = jax.jit(make_fleet_fl_round(
+            grad_fn, opt, mesh=mesh, client_dropout=dropout,
+            client_axis=spec.engine.client_axis), donate_argnums=(0,))
     else:
         round_fn = jax.jit(make_fl_round(grad_fn, opt, client_axis="scan"),
                            donate_argnums=(0,))
@@ -435,28 +490,51 @@ def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test):
 
 def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
                       x_test_j, y_test):
-    """Parallel fleet SL (``make_fleet_sl_round``). Homogeneous cuts run
-    the engine directly — one compiled round, no host-side bucket
-    reassembly; heterogeneous cuts dispatch through ``HeteroFleet`` (one
-    compiled round + server suffix per cut bucket)."""
+    """Parallel fleet SL (``make_fleet_sl_round``, vmap or shard_map client
+    axis). Homogeneous cuts run the engine directly — one compiled round,
+    no host-side bucket reassembly; heterogeneous cuts dispatch through
+    ``HeteroFleet`` (one compiled round + server suffix per cut bucket).
+    With a >1 ``server_mesh`` the ``launch.steps.fleet_server_pspecs`` tier
+    specs shard the server suffix (params + optimizer moments) fsdp x tp
+    while the client axis shards over ``data``."""
     opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
     dropout = spec.clients.dropout_rate > 0
     n = spec.clients.num_clients
+    client_axis = spec.engine.client_axis
+    fsdp, tp = server_mesh_sizes(mesh)
+    server_pspecs_fn = None
+    if mesh is not None and fsdp * tp > 1:
+        from ..launch.steps import fleet_server_pspecs
+        server_pspecs_fn = fleet_server_pspecs
 
     if len(set(cut_of_client)) == 1:
         k = cut_of_client[0]
         cs, cp0, ss, sp, step = _split_step(stages, params0, k, link)
+        sps_specs = (server_pspecs_fn(sp, mesh)
+                     if server_pspecs_fn is not None else None)
         round_fn = jax.jit(
             make_fleet_sl_round(step, opt_c, opt_s,
                                 local_rounds=spec.local_steps, mesh=mesh,
                                 server_reduce=spec.engine.server_reduce,
-                                client_dropout=dropout),
+                                client_dropout=dropout,
+                                client_axis=client_axis,
+                                server_pspecs=sps_specs),
             donate_argnums=(0, 1, 2, 3))
 
         def init_state():
             state = (stack_replicas(cp0, n), sp,
                      init_stacked(opt_c, cp0, n), opt_s.init(sp))
-            return jax.tree_util.tree_map(jnp.copy, state)
+            state = jax.tree_util.tree_map(jnp.copy, state)
+            if sps_specs is not None:
+                from jax.sharding import PartitionSpec as P
+                from ..optim.optimizers import OptState
+                pc, ps, oc, os_ = state
+                ps = shard_server_state(ps, mesh, sps_specs)
+                os_ = shard_server_state(
+                    os_, mesh, OptState(step=P(), mu=sps_specs,
+                                        nu=sps_specs))
+                state = (pc, ps, oc, os_)
+            return state
 
         def run(engine_state, batches, mask):
             if dropout:
@@ -487,7 +565,9 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
     fleet = HeteroFleet(build_program, cut_of_client, opt_c, opt_s,
                         local_rounds=spec.local_steps, mesh=mesh,
                         client_dropout=dropout,
-                        server_reduce=spec.engine.server_reduce)
+                        server_reduce=spec.engine.server_reduce,
+                        client_axis=client_axis,
+                        server_pspecs_fn=server_pspecs_fn)
 
     bucket_eval = []
     for bucket in fleet.buckets:

@@ -13,11 +13,24 @@ Engine selection (``EngineSpec``):
   ----  -----------  -------------------------------------------------------
   fl    scan         ``core.split.make_fl_round(client_axis='scan')``
   fl    vmap         ``fleet.engine.make_fleet_fl_round`` (shardable)
+  fl    shard_map    same engine, explicit-collective variant: the local
+                     step runs inside ``jax.shard_map`` over ``data`` and
+                     FedAvg is ``core.fedavg.fedavg_pmean``
   sl    scan         ``core.split.make_multi_client_round`` (sequential Alg. 3)
   sl    vmap         ``fleet.engine.make_fleet_sl_round`` (parallel SL);
                      heterogeneous (adaptive) cuts dispatch through
                      ``fleet.hetero.HeteroFleet`` — one compiled round per
                      cut bucket
+  sl    shard_map    parallel SL with the pinned collective schedule
+                     (in-map ``lax.pmean`` server gradient,
+                     ``fedavg_pmean_stack`` prefixes); hetero cuts bucket
+                     the same way
+
+``EngineSpec.server_mesh=(fsdp, tp)`` grows the fleet mesh to the 2D
+(clients x server-model) layout: ``compile_experiment`` builds a
+``('data','fsdp','tp')`` mesh (``launch.mesh.make_fleet_mesh``) and wires
+``launch.steps.fleet_server_pspecs`` tier specs into the SL round so the
+server suffix shards fsdp x tp while the client axis shards over ``data``.
 
 Policies, not code paths:
 
@@ -95,8 +108,19 @@ class LinkPolicy:
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
     kind: str = "sl"             # "fl" | "sl"
-    client_axis: str = "scan"    # "scan" (sequential) | "vmap" (fleet)
+    # "scan" (sequential) | "vmap" (fleet, GSPMD-inferred collectives) |
+    # "shard_map" (fleet, explicit fedavg_pmean / in-map lax.pmean)
+    client_axis: str = "scan"
     server_reduce: str = "mean"  # fleet SL server gradient reduction
+    # (fsdp, tp) sizes of the server suffix's 2D sub-mesh; None -> (1, 1).
+    # compile_experiment grows the fleet mesh to ('data','fsdp','tp') and
+    # shards the SL server params/optimizer state with the
+    # launch.steps.fleet_server_pspecs tier specs.
+    server_mesh: Optional[Tuple[int, int]] = None
+
+    @property
+    def is_fleet(self) -> bool:
+        return self.client_axis in ("vmap", "shard_map")
 
 
 @dataclasses.dataclass(frozen=True)

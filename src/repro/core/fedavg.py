@@ -1,10 +1,17 @@
 """FedAvg aggregation (paper Algorithm 3, line 19: theta_agg = mean_e theta_e).
 
-Two representations:
-- explicit client axis (leading dim) -> ``fedavg_stack`` (mean + rebroadcast)
+Three representations:
 - list of per-client pytrees        -> ``fedavg`` (weighted mean)
-In the SPMD mapping, FedAvg over the `data` mesh axis is a pmean — provided
-as ``fedavg_pmean`` for use inside shard_map'd steps.
+- explicit client axis (leading dim) -> ``fedavg_mean`` (drop the axis) /
+  ``fedavg_stack`` (mean + rebroadcast), with ``*_masked`` variants that
+  exclude dropped-out clients (P3SL straggler semantics).
+- SPMD over a mesh axis -> the ``fedavg_pmean*`` family, for use INSIDE a
+  ``shard_map`` body: each device holds a (local_clients, ...) slice of the
+  client stack; the global FedAvg is a local reduction composed with a
+  ``lax.pmean``/``lax.psum`` over the named mesh axis, so the collective
+  schedule is explicit in the program (no GSPMD inference). The masked
+  variants ``psum`` the masked sums and the active count, so dropout
+  semantics survive the collective exactly as in the host-side versions.
 """
 from __future__ import annotations
 
@@ -86,7 +93,66 @@ def fedavg_mean_masked(stacked_params, mask, fallback):
     return jax.tree_util.tree_map(agg, stacked_params, fallback)
 
 
-def fedavg_pmean(params, axis_name: str):
-    """SPMD FedAvg: mean over a mesh axis (use inside shard_map)."""
+def fedavg_pmean(stacked_params, axis_name: str):
+    """SPMD FedAvg inside a ``shard_map`` body: mean over the local leading
+    client axis composed with ``lax.pmean`` over ``axis_name``, dropping the
+    client axis (one replicated global model). Equal local client counts per
+    shard (``validate_fleet_mesh``) make local-mean + pmean the exact global
+    mean.
+
+    CONTRACT CHANGE (PR 4): this used to be a per-leaf ``lax.pmean`` with no
+    local reduction. It now expects a client-STACKED local shard — passing
+    an unstacked params tree silently drops each leaf's leading dim. No
+    in-repo caller used the old form; external callers must re-stack."""
     return jax.tree_util.tree_map(
-        lambda x: jax.lax.pmean(x, axis_name), params)
+        lambda x: jax.lax.pmean(
+            jnp.mean(x.astype(jnp.float32), axis=0), axis_name).astype(x.dtype),
+        stacked_params)
+
+
+def fedavg_pmean_masked(stacked_params, mask, fallback, axis_name: str):
+    """``fedavg_mean_masked`` inside a ``shard_map`` body: the masked sums
+    and the active-client count are ``psum``'d over ``axis_name``, so every
+    shard computes the same global mean of the ACTIVE rows; when no client
+    anywhere is active, ``fallback`` (the incoming global model) passes
+    through."""
+    mask = jnp.asarray(mask, jnp.float32)
+    total = jax.lax.psum(mask.sum(), axis_name)
+
+    def agg(x, fb):
+        w = mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+        s = jax.lax.psum((x.astype(jnp.float32) * w).sum(axis=0), axis_name)
+        avg = s / jnp.maximum(total, 1.0)
+        return jnp.where(total > 0, avg, fb.astype(jnp.float32)).astype(x.dtype)
+
+    return jax.tree_util.tree_map(agg, stacked_params, fallback)
+
+
+def fedavg_pmean_stack(stacked_params, axis_name: str):
+    """``fedavg_stack`` inside a ``shard_map`` body: global mean over
+    (local axis x mesh axis), rebroadcast to every local client row."""
+    def agg(x):
+        m = jax.lax.pmean(jnp.mean(x.astype(jnp.float32), axis=0,
+                                   keepdims=True), axis_name)
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+    return jax.tree_util.tree_map(agg, stacked_params)
+
+
+def fedavg_pmean_stack_masked(stacked_params, mask, axis_name: str):
+    """``fedavg_stack_masked`` inside a ``shard_map`` body: active rows get
+    the global mean of all active rows (masked ``psum``), dropped rows keep
+    their stale value; an all-masked fleet passes through unchanged."""
+    mask = jnp.asarray(mask, jnp.float32)
+    total = jnp.maximum(jax.lax.psum(mask.sum(), axis_name), 1.0)
+
+    def agg(x):
+        w = mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+        s = jax.lax.psum((x.astype(jnp.float32) * w).sum(axis=0,
+                                                         keepdims=True),
+                         axis_name)
+        avg = s / total
+        out = jnp.where(w > 0, jnp.broadcast_to(avg, x.shape),
+                        x.astype(jnp.float32))
+        return out.astype(x.dtype)
+
+    return jax.tree_util.tree_map(agg, stacked_params)

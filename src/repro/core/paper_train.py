@@ -1,46 +1,39 @@
-"""Faithful reproduction pipelines: FL baseline vs SL (Algorithm 3).
+"""Faithful reproduction configs: FL baseline vs SL (Algorithm 3) as specs.
 
-DEPRECATED SHIMS — ``train_fl`` / ``train_sl`` keep their historical
-signatures and return dicts for one release, but both now delegate to the
-unified experiment layer: ``paper_spec`` maps a ``PaperTrainConfig`` to an
-``repro.api.ExperimentSpec`` and ``repro.api.compile_experiment`` lowers it
-to the same compiled engines these functions used to hand-wire
-(``make_fl_round`` with a scanned client axis for FL;
-``make_multi_client_round`` — the sequential Alg. 3 — for SL). New code
-should build specs directly; see ``src/repro/api/README.md``.
+The legacy ``train_fl`` / ``train_sl`` entry points are GONE (they spent
+one release as deprecated shims over the unified experiment layer — see
+CHANGES.md). What remains is the mapping layer: ``PaperTrainConfig`` is the
+historical config surface, and ``paper_spec`` turns one into the
+``repro.api.ExperimentSpec`` the old trainers stood for:
 
-What the shims preserve:
+  FL : each client trains the FULL model on its shard for ``local_steps``
+       minibatches; the server FedAvg's all client models each global round
+       (``EngineSpec('fl', 'scan')``).
+  SL : eEnergy-Split / SplitFed — client prefix (cut at SL_{a,b}) runs
+       locally; smashed activations (+labels) go to the server model, which
+       backprops and returns the cut gradient; server params update per
+       client-batch (sequential, as the UAV visits clients one at a time);
+       client prefixes FedAvg every global round
+       (``EngineSpec('sl', 'scan')``).
 
-  FL      : each client trains the FULL model on its shard for
-            ``local_steps`` minibatches; server FedAvg's all client models
-            each global round.
-  SL      : eEnergy-Split / SplitFed — client prefix (cut at SL_{a,b}) runs
-            locally; smashed activations (+labels) go to the server model,
-            which backprops and returns the cut gradient; server params
-            update per client-batch (sequential, as the UAV visits clients
-            one at a time); client prefixes FedAvg every global round.
-
-Both run as ONE jitted XLA program per global round (donated state, batches
-pre-gathered per round), with energy/link accounting hoisted to per-step
-analytic constants from symmetric XLA-counted FLOPs on both tiers
-(``repro.api.runtime``: A5000 roofline, client side scaled to Jetson via
-Eq. 9, link bytes via Eq. 8).
+Run them with ``repro.api.compile_experiment(paper_spec(cfg, kind),
+data=...)`` — one jitted XLA program per global round (donated state,
+batches pre-gathered), energy/link accounting hoisted to per-step analytic
+constants (``repro.api.runtime``: A5000 roofline, client side scaled via
+Eq. 9, link bytes via Eq. 8). ``benchmarks/bench_sl_accuracy.py`` is the
+reference caller; the old-call-site -> spec table lives in
+``src/repro/api/README.md``.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-
-import jax
-import numpy as np
 
 from ..api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
-                   ExperimentSpec, LinkPolicy, ModelSpec, compile_experiment)
+                   ExperimentSpec, LinkPolicy, ModelSpec)
 # Re-exported for callers that historically imported these from here
-# (benchmarks/bench_resource.py, tests/test_engine.py, fleet.campaign):
+# (benchmarks/bench_resource.py, tests/test_engine.py):
 from ..api.runtime import (classification_metrics,  # noqa: F401
                            count_fl_step_flops, count_sl_step_flops)
-from .energy import CO2_G_PER_J, EnergyRecord
 
 
 @dataclasses.dataclass
@@ -63,9 +56,7 @@ def paper_spec(cfg: PaperTrainConfig, kind: str) -> ExperimentSpec:
     """The ``ExperimentSpec`` a legacy ``PaperTrainConfig`` stands for.
 
     ``kind`` is ``'fl'`` or ``'sl'`` — both lower to the sequential
-    (``client_axis='scan'``) engines the faithful reproduction uses. The
-    shim-equivalence tests run this spec directly and compare against the
-    ``train_fl``/``train_sl`` wrappers.
+    (``client_axis='scan'``) engines the faithful reproduction uses.
     """
     return ExperimentSpec(
         model=ModelSpec(name=cfg.model, num_classes=cfg.num_classes),
@@ -79,70 +70,3 @@ def paper_spec(cfg: PaperTrainConfig, kind: str) -> ExperimentSpec:
         engine=EngineSpec(kind=kind, client_axis="scan"),
         global_rounds=cfg.global_rounds, local_steps=cfg.local_steps,
         batch_size=cfg.batch_size, lr=cfg.lr, seed=cfg.seed)
-
-
-def _energy_record(label: str, time_s: float, energy_j: float) -> EnergyRecord:
-    return EnergyRecord(label=label, time_s=time_s, energy_j=energy_j,
-                        co2_g=energy_j * CO2_G_PER_J)
-
-
-def _run_rounds(plan):
-    """Drive a compiled plan for its round budget; returns
-    (state, records, history, wall_s, steps_per_s)."""
-    t0 = time.time()
-    state = plan.init()
-    records, history = [], []
-    for _ in range(plan.num_rounds):
-        state, rec = plan.run_round(state)
-        records.append(rec)
-        history.append(state.last_metrics)
-    wall_s = time.time() - t0
-    n_steps = (plan.num_rounds * plan.spec.clients.num_clients
-               * plan.spec.local_steps)
-    return state, records, history, wall_s, n_steps / max(wall_s, 1e-9)
-
-
-# ---------------------------------------------------------------------------
-# FL baseline (deprecated shim)
-# ---------------------------------------------------------------------------
-
-def train_fl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
-    plan = compile_experiment(paper_spec(cfg, "fl"),
-                              data=(x_train, y_train, x_test, y_test))
-    state, records, history, wall_s, sps = _run_rounds(plan)
-    return {"params": state.engine_state, "history": history,
-            "client_energy": _energy_record(
-                "total", sum(r.client_time_s for r in records),
-                sum(r.client_energy_j for r in records)),
-            "server_energy": _energy_record(
-                "total", sum(r.server_time_s for r in records),
-                sum(r.server_energy_j for r in records)),
-            "metrics": history[-1], "step_flops": plan.flops["full"],
-            "wall_s": wall_s, "steps_per_s": sps}
-
-
-# ---------------------------------------------------------------------------
-# SL (Algorithm 3) (deprecated shim)
-# ---------------------------------------------------------------------------
-
-def train_sl(cfg: PaperTrainConfig, x_train, y_train, x_test, y_test):
-    plan = compile_experiment(paper_spec(cfg, "sl"),
-                              data=(x_train, y_train, x_test, y_test))
-    state, records, history, wall_s, sps = _run_rounds(plan)
-    client_stack, server_params, _, _ = state.engine_state
-    client_params = jax.tree_util.tree_map(lambda v: v[0], client_stack)
-    k = plan.cut_of_client[0]
-    fl_client, fl_server, _smashed = plan.flops[k]
-    return {"client_params": client_params, "server_params": server_params,
-            "history": history, "metrics": history[-1],
-            "client_energy": _energy_record(
-                "total", sum(r.client_time_s for r in records),
-                sum(r.client_energy_j for r in records)),
-            "server_energy": _energy_record(
-                "total", sum(r.server_time_s for r in records),
-                sum(r.server_energy_j for r in records)),
-            "link_bytes": sum(r.link_bytes for r in records),
-            "link_time_s": sum(r.link_time_s for r in records),
-            "cut_index": k,
-            "client_flops": fl_client, "server_flops": fl_server,
-            "wall_s": wall_s, "steps_per_s": sps}

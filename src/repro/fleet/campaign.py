@@ -1,18 +1,20 @@
-"""Multi-round fleet campaign simulator — the paper's mission, at fleet scale.
+"""Fleet campaign configs — the paper's UAV mission, at fleet scale, as specs.
 
-DEPRECATED SHIM — ``run_campaign`` keeps its ``CampaignConfig`` ->
-``CampaignResult`` surface for one release, but the round loop now lives in
-the unified experiment layer: ``campaign_spec`` maps the config to an
-``repro.api.ExperimentSpec`` with a ``MissionSpec`` attached, and
-``compile_experiment`` lowers it to the same sharded fleet engine +
-bucketed hetero cuts + link/energy/UAV accounting this module used to
-hand-assemble. New code should build specs directly (see
-``src/repro/api/README.md``).
+The legacy ``run_campaign`` / ``run_link_sweep`` runners are GONE (one
+release as deprecated shims over the unified experiment layer — see
+CHANGES.md). What remains is the mapping layer: ``CampaignConfig`` is the
+historical config surface and ``campaign_spec`` turns one into the
+``repro.api.ExperimentSpec`` (with a ``MissionSpec`` attached) the old
+runner stood for. Run it with::
+
+    plan = repro.api.compile_experiment(campaign_spec(cfg), mesh=...)
+    state, records = plan.run()        # one RoundRecord per executed round
 
 One campaign still composes the repo's layers end-to-end:
 
-  field      client placement on a farm (``api.plan.client_coords``)
+  field      client placement on a farm (``api.runtime.client_coords``)
   tour       exact-TSP UAV tour + Algorithm 2's delayed-return round budget
+             (``plan.tour`` / ``plan.rounds_budget``)
   training   the sharded fleet SL engine — homogeneous cut, or per-client
              cuts bucketed by ``fleet.hetero``; optional P3SL-style client
              dropout (``dropout_rate``)
@@ -22,21 +24,22 @@ One campaign still composes the repo's layers end-to-end:
   energy     per-step compute constants from symmetric FLOP counting,
              scaled to each client's edge profile via Eq. (9)
 
-and emits one ``RoundRecord`` per executed global round. The number of
-executed rounds is ``min(cfg.global_rounds, tour.rounds)``: the UAV's
-energy budget, not the caller, caps the campaign.
+The number of executed rounds is ``min(cfg.global_rounds, tour.rounds)``:
+the UAV's energy budget, not the caller, caps the campaign. The fp32-vs-
+int8 link sweep is two specs differing only in ``LinkPolicy.compress``
+(``dataclasses.replace(cfg, link=...)`` — see ``tests/test_fleet.py`` and
+``examples/uav_mission_sim.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 
-# Re-exported: the campaign's record type IS the uniform api record now,
-# and client_coords moved to the (import-neutral) api runtime module.
+# Re-exported: the campaign's record type IS the uniform api record, and
+# client_coords lives in the (import-neutral) api runtime module.
 from ..api.records import RoundRecord  # noqa: F401
 from ..api.runtime import client_coords  # noqa: F401
 from ..core.energy import HardwareProfile, JETSON_AGX_ORIN
 from ..core.link import LinkConfig
-from ..core.trajectory import TourPlan
 from ..core.uav_energy import DEFAULT_UAV, UAVParams
 
 
@@ -65,26 +68,27 @@ class CampaignConfig:
     seed: int = 0
 
 
-@dataclasses.dataclass
-class CampaignResult:
-    config: CampaignConfig
-    tour: TourPlan
-    rounds_budget: int           # rounds the UAV battery affords (gamma)
-    records: list[RoundRecord]
-    metrics: dict                # final held-out classification metrics
-    cut_of_client: list[int]
+def campaign_totals(records, tour) -> dict:
+    """Mission totals over a campaign's ``RoundRecord`` stream.
 
-    def totals(self) -> dict:
-        return {
-            "rounds_run": len(self.records),
-            "link_bytes": sum(r.link_bytes for r in self.records),
-            "link_energy_j": sum(r.link_energy_j for r in self.records),
-            "client_energy_j": sum(r.client_energy_j for r in self.records),
-            "server_energy_j": sum(r.server_energy_j for r in self.records),
-            "uav_energy_j": sum(r.uav_energy_j for r in self.records)
-            + self.tour.e_return,
-            "final_accuracy": self.metrics.get("accuracy", 0.0),
-        }
+    Per-round ``uav_energy_j`` bills the tour legs actually flown that
+    round; the return-to-base leg (``tour.e_return``) is flown once at
+    mission end and appears in NO record — Algorithm 2's delayed-return
+    budget (``core.trajectory.budget_rounds``) reserves it, so summing
+    records alone under-counts the mission by exactly that leg. This
+    helper is the bookkeeping the old ``CampaignResult.totals()``
+    carried; pass ``plan.tour``.
+    """
+    return {
+        "rounds_run": len(records),
+        "link_bytes": sum(r.link_bytes for r in records),
+        "link_energy_j": sum(r.link_energy_j for r in records),
+        "client_energy_j": sum(r.client_energy_j for r in records),
+        "server_energy_j": sum(r.server_energy_j for r in records),
+        "uav_energy_j": sum(r.uav_energy_j for r in records)
+        + (tour.e_return if tour is not None else 0.0),
+        "final_accuracy": records[-1].accuracy if records else 0.0,
+    }
 
 
 def campaign_spec(cfg: CampaignConfig):
@@ -113,35 +117,3 @@ def campaign_spec(cfg: CampaignConfig):
                             comm_s_per_stop=cfg.comm_s_per_stop),
         global_rounds=cfg.global_rounds, local_steps=cfg.local_steps,
         batch_size=cfg.batch_size, lr=cfg.lr, seed=cfg.seed)
-
-
-def run_campaign(cfg: CampaignConfig, *, data=None, mesh=None) -> CampaignResult:
-    """Run one fleet campaign (deprecated shim over ``compile_experiment``).
-    ``data`` is an optional ``(x_train, y_train, x_test, y_test)`` tuple
-    (synthetic pests when omitted); ``mesh`` an optional ('data','model')
-    fleet mesh — the client axis shards over ``data``."""
-    from ..api.plan import compile_experiment
-    spec = campaign_spec(cfg)
-    if data is not None:
-        spec = dataclasses.replace(spec, data=dataclasses.replace(
-            spec.data, kind="arrays"))
-    plan = compile_experiment(spec, mesh=mesh, data=data)
-    state, records = plan.run()
-    metrics = (state.last_metrics if state.last_metrics is not None
-               else plan.evaluate(state))   # budget afforded zero rounds
-    return CampaignResult(config=cfg, tour=plan.tour,
-                          rounds_budget=plan.rounds_budget,
-                          records=records, metrics=metrics,
-                          cut_of_client=plan.cut_of_client)
-
-
-def run_link_sweep(cfg: CampaignConfig, *, data=None,
-                   mesh=None) -> dict[str, CampaignResult]:
-    """The fp32-vs-int8 link comparison on one scenario: same fleet, same
-    tour, same seeds — only the link boundary and its wire bytes change."""
-    out = {}
-    for mode in ("none", "int8"):
-        link = dataclasses.replace(cfg.link, compress=mode)
-        out[mode] = run_campaign(dataclasses.replace(cfg, link=link),
-                                 data=data, mesh=mesh)
-    return out

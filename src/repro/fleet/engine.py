@@ -2,33 +2,56 @@
 
 PR 1's round builders carry every per-client quantity (params, Adam moments,
 minibatches) on a leading client axis but walk that axis with ``lax.scan`` —
-sequential by construction. Here the client axis becomes a *batch* axis:
+sequential by construction. Here the client axis becomes a *batch* axis, in
+one of two layouts (``client_axis=``):
 
-  * FL — ``make_fleet_fl_round``: ``jax.vmap`` over clients of the local-step
-    scan (clients are fully independent until FedAvg), i.e.
-    ``make_fl_round(..., client_axis='vmap')`` plus sharding constraints.
-  * SL — ``make_fleet_sl_round``: Efficient *Parallel* Split Learning (Lin et
-    al., arXiv:2303.15991): every client's prefix fwd/bwd runs batched via
-    vmap against the shared server suffix, and the server applies ONE update
-    per local step on the client-mean gradient, instead of Algorithm 3's
+  * ``'vmap'`` — ``jax.vmap`` over clients plus ``with_sharding_constraint``
+    hints: XLA's GSPMD partitioner infers the collective schedule (FedAvg
+    and the server's client-mean gradient lower to all-reduces over
+    ``data``). One-host friendly; layout is advisory.
+  * ``'shard_map'`` — the per-client step runs INSIDE ``jax.shard_map`` over
+    the ``data`` mesh axis: every device owns ``clients/data`` rows of the
+    stack, FedAvg is the explicit ``core.fedavg.fedavg_pmean`` family
+    (masked variants included, so dropout semantics survive the
+    collective), and the parallel-SL server gradient is an in-map
+    ``lax.pmean``. The collective schedule is pinned in the program — the
+    prerequisite for multi-host meshes, where GSPMD inference can differ
+    per host. The non-``data`` mesh axes (``fsdp``, ``tp``) stay
+    GSPMD-``auto``.
+
+The 2D (clients x server-model) layout: ``launch.mesh.make_fleet_mesh``
+builds the ``('data','fsdp','tp')`` mesh, ``launch.steps
+.fleet_server_pspecs`` derives the server suffix's tier specs (the same
+DESIGN.md §3 rule ``build_step`` applies), and ``server_pspecs=`` wires
+them into the SL round — server params/optimizer state shard fsdp x tp
+(place live state with ``shard_server_state``) while the client stack
+shards over ``data``. The combination with ``shard_map`` is gated to
+fsdp = tp = 1 on this repo's XLA:CPU toolchain (partitioner abort, see
+``make_fleet_sl_round``); the vmap engine runs the full 2D layout today.
+
+Round semantics per engine:
+
+  * FL — ``make_fleet_fl_round``: clients are fully independent until
+    FedAvg, i.e. ``make_fl_round(..., client_axis='vmap')`` per shard.
+  * SL — ``make_fleet_sl_round``: Efficient *Parallel* Split Learning (Lin
+    et al., arXiv:2303.15991): every client's prefix fwd/bwd runs batched
+    against the shared server suffix, and the server applies ONE update per
+    local step on the client-mean gradient, instead of Algorithm 3's
     sequential per-client server updates. This is a deliberate semantic
     variant (the UAV relays all clients' smashed data per hover window); it
     is NOT numerically equivalent to ``make_multi_client_round`` — its
     reference is the parallel host loop in ``tests/test_fleet.py``.
-
-With a ``('data','model')`` mesh the leading client axis is
-sharding-constrained to ``data``, so XLA partitions the fleet across
-devices and FedAvg / the server's client-mean gradient lower to all-reduces
-over ``data`` — N clients, one SPMD program, zero host round-trips.
 
 Equivalence tolerance
 ---------------------
 ``FLEET_EQUIV_ATOL`` is the documented loosened bound for fleet-vs-scan
 comparisons. The scanned engine matches the per-client host loop to 1e-4;
 vmapping the client axis batches the convolutions and reassociates their
-fp32 reductions (and sharding re-tiles them again), which drifts losses by
-up to ~1e-3 after a few Adam steps on the tiny test models. Independent
-clients make this pure arithmetic reassociation, not a semantic change.
+fp32 reductions (and sharding/shard_map re-tiles them again), which drifts
+losses by up to ~1e-3 after a few Adam steps on the tiny test models.
+Independent clients make this pure arithmetic reassociation, not a semantic
+change. The shard_map engines are gated against the vmap engines by the
+same bound (``tests/test_fleet.py``, forced multi-device host mesh).
 """
 from __future__ import annotations
 
@@ -36,9 +59,12 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core.fedavg import (fedavg_mean_masked, fedavg_stack,
+from ..core.fedavg import (fedavg_mean, fedavg_mean_masked, fedavg_pmean,
+                           fedavg_pmean_masked, fedavg_pmean_stack,
+                           fedavg_pmean_stack_masked, fedavg_stack,
                            fedavg_stack_masked)
 from ..core.split import SplitStep, make_fl_round
 from ..optim.optimizers import apply_updates
@@ -47,17 +73,25 @@ from ..optim.optimizers import apply_updates
 # (see module docstring; tests and benches assert against this bound).
 FLEET_EQUIV_ATOL = 1e-3
 
+# the mesh axis the stacked client dimension shards over — every other
+# fleet-mesh axis belongs to the server suffix (fsdp x tp) and stays
+# GSPMD-auto inside the shard_map engines
+CLIENT_AXIS_NAME = "data"
+
+CLIENT_AXES = ("vmap", "shard_map")
+
 
 def fleet_sharding(mesh) -> NamedSharding:
     """Sharding of a client-stacked leaf: leading axis over ``data``."""
-    return NamedSharding(mesh, P("data"))
+    return NamedSharding(mesh, P(CLIENT_AXIS_NAME))
 
 
 def validate_fleet_mesh(mesh, num_clients: int) -> None:
     """The client axis must divide evenly over ``data`` — no silent padding."""
     if mesh is None:
         return
-    data = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+    data = dict(zip(mesh.axis_names,
+                    mesh.devices.shape)).get(CLIENT_AXIS_NAME, 1)
     if num_clients % data:
         raise ValueError(
             f"{num_clients} clients do not divide over data={data}; pick a "
@@ -81,28 +115,136 @@ def _constrain(tree, mesh):
         lambda x: jax.lax.with_sharding_constraint(x, s), tree)
 
 
+def _resolve_shard_map_mesh(mesh):
+    """A shard_map engine always needs a concrete mesh: default to the
+    degenerate single-device fleet mesh (collectives become no-ops) so the
+    explicit-collective path compiles anywhere."""
+    if mesh is None:
+        from ..launch.mesh import single_device_fleet_mesh
+        return single_device_fleet_mesh()
+    if CLIENT_AXIS_NAME not in mesh.axis_names:
+        raise ValueError(f"fleet shard_map mesh needs a '{CLIENT_AXIS_NAME}' "
+                         f"axis, got {mesh.axis_names}")
+    return mesh
+
+
+def _client_shard_map(body, mesh, in_specs, out_specs):
+    """shard_map manual over ``data`` only; every other mesh axis (fsdp/tp)
+    is left to GSPMD (``auto``) so in-map sharding constraints can lay out
+    the server suffix."""
+    auto = frozenset(mesh.axis_names) - {CLIENT_AXIS_NAME}
+    return shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False, auto=auto)
+
+
+def server_mesh_sizes(mesh) -> tuple[int, int]:
+    """(fsdp, tp) sizes of the fleet mesh's server sub-mesh (1, 1 when the
+    axes are absent — e.g. the legacy ('data','model') mesh)."""
+    if mesh is None:
+        return 1, 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("fsdp", 1), sizes.get("tp", 1)
+
+
+def shard_server_state(tree, mesh, server_pspecs):
+    """Host-side placement of the server suffix (params, or a matching
+    state tree such as ``OptState(step=P(), mu=specs, nu=specs)``) onto the
+    fleet mesh's ``fsdp`` x ``tp`` server sub-mesh — the counterpart of
+    ``shard_client_stack`` for the 2D (clients x server-model) layout."""
+    if mesh is None or server_pspecs is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, server_pspecs)
+
+
+def _server_constrainer(mesh, server_pspecs) -> Optional[Callable]:
+    """tree -> tree applying the fsdp x tp tier specs to the server suffix
+    at round/map-body entry; GSPMD propagates the layout through the
+    round's scan carry. Trivial spec trees (every dim replicated — fsdp =
+    tp = 1) collapse to None so the shard_map body stays constraint-free
+    on 1D meshes. (Inside a manual-over-``data`` body the constraint must
+    also stay OUTSIDE the scan: this toolchain's SPMD partitioner aborts
+    on auto-axis resharding inside a while-loop of a manual computation —
+    see ``api.plan`` for the backend gate.)"""
+    if mesh is None or server_pspecs is None:
+        return None
+    if all(all(ax is None for ax in s)
+           for s in jax.tree_util.tree_leaves(
+               server_pspecs, is_leaf=lambda s: isinstance(s, P))):
+        return None
+    def constrain(tree):
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)),
+            tree, server_pspecs)
+    return constrain
+
+
+def _check_client_axis(client_axis: str) -> None:
+    if client_axis not in CLIENT_AXES:
+        raise ValueError(f"fleet client_axis must be one of {CLIENT_AXES}, "
+                         f"got {client_axis!r} (the sequential engine is "
+                         f"core.split's client_axis='scan')")
+
+
+# ---------------------------------------------------------------------------
+# FL rounds
+# ---------------------------------------------------------------------------
+
 def make_fleet_fl_round(grad_fn: Callable, opt, *, mesh=None,
-                        client_dropout: bool = False):
-    """FL baseline round with the client axis vmapped and (optionally)
+                        client_dropout: bool = False,
+                        client_axis: str = "vmap"):
+    """FL baseline round with the client axis batched and (optionally)
     sharded over ``data``. Same signature/returns as ``make_fl_round``:
     ``f(global_params, batches) -> (new_global_params, losses[C, S])``.
+
+    ``client_axis='vmap'`` leaves layout to GSPMD via sharding constraints
+    (``mesh`` optional); ``client_axis='shard_map'`` runs the per-client
+    local scan inside ``jax.shard_map`` over ``data`` and aggregates with
+    the explicit ``fedavg_pmean`` collective (``mesh`` defaults to the
+    single-device fleet mesh).
 
     With ``client_dropout`` the round takes a trailing ``client_mask``
     (clients,) 0/1 argument: masked clients still execute (the program is
     shape-static) but are excluded from FedAvg — stragglers that missed
-    the round contribute nothing to the new global model. All-masked
-    rounds leave the global params unchanged.
+    the round contribute nothing to the new global model (the shard_map
+    path psums the masked sums and active count: ``fedavg_pmean_masked``).
+    All-masked rounds leave the global params unchanged.
     """
+    _check_client_axis(client_axis)
     vmapped = make_fl_round(grad_fn, opt, client_axis="vmap",
-                            aggregate=not client_dropout)
+                            aggregate=False)
+
+    if client_axis == "shard_map":
+        mesh = _resolve_shard_map_mesh(mesh)
+        spec_c = P(CLIENT_AXIS_NAME)
+
+        if not client_dropout:
+            def body(global_params, batches):
+                client_stack, losses = vmapped(global_params, batches)
+                return fedavg_pmean(client_stack, CLIENT_AXIS_NAME), losses
+
+            return _client_shard_map(body, mesh, in_specs=(P(), spec_c),
+                                     out_specs=(P(), spec_c))
+
+        def body_masked(global_params, batches, client_mask):
+            client_stack, losses = vmapped(global_params, batches)
+            new_params = fedavg_pmean_masked(client_stack, client_mask,
+                                             global_params, CLIENT_AXIS_NAME)
+            return new_params, losses
+
+        return _client_shard_map(body_masked, mesh,
+                                 in_specs=(P(), spec_c, spec_c),
+                                 out_specs=(P(), spec_c))
 
     if not client_dropout:
         def global_round(global_params, batches):
             batches = _constrain(batches, mesh)
-            new_params, losses = vmapped(global_params, batches)
-            # FedAvg already reduced the client axis (all-reduce over `data`
+            client_stack, losses = vmapped(global_params, batches)
+            # FedAvg reduces the client axis (an all-reduce over `data`
             # when sharded); losses keep the client-sharded layout.
-            return new_params, _constrain(losses, mesh)
+            return fedavg_mean(client_stack), _constrain(losses, mesh)
 
         return global_round
 
@@ -116,9 +258,14 @@ def make_fleet_fl_round(grad_fn: Callable, opt, *, mesh=None,
     return global_round_masked
 
 
+# ---------------------------------------------------------------------------
+# parallel-SL rounds
+# ---------------------------------------------------------------------------
+
 def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
                         mesh=None, server_reduce: str = "mean",
-                        client_dropout: bool = False):
+                        client_dropout: bool = False,
+                        client_axis: str = "vmap", server_pspecs=None):
     """One global round of *parallel* split learning over a sharded fleet.
 
     Per local step: every client's prefix runs fwd/bwd batched (vmap over
@@ -127,6 +274,25 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
     the ``server_reduce`` ('mean' | 'sum') of the per-client server
     gradients. After ``local_rounds`` steps the client prefixes are
     FedAvg'd, all inside the one compiled program.
+
+    ``client_axis='shard_map'`` runs the whole round body inside
+    ``jax.shard_map`` over ``data``: the server gradient is reduced with an
+    in-map ``lax.pmean`` (``lax.psum`` of masked sums under dropout), the
+    closing FedAvg is ``fedavg_pmean_stack(_masked)``, and the server
+    update — fed the identical all-reduced gradient on every shard — stays
+    replicated over ``data``.
+
+    ``server_pspecs`` (a PartitionSpec tree from
+    ``launch.steps.fleet_server_pspecs``) constrains the server suffix over
+    the mesh's ``fsdp`` x ``tp`` axes at round entry, giving the 2D
+    (clients x server-model) layout; ``shard_server_state`` places the live
+    state to match. Fully supported under ``client_axis='vmap'`` (pure
+    GSPMD). Under ``shard_map`` those axes are GSPMD-``auto`` and the
+    combination is the intended multi-host layout, but this repo's pinned
+    XLA:CPU toolchain aborts on fsdp/tp-sharded operands entering the
+    manual body's scan — ``api.plan`` gates the CPU backend to fsdp = tp =
+    1 for shard_map (see ROADMAP, re-test when the toolchain moves past
+    jax 0.5).
 
     Signature matches ``make_multi_client_round``:
     ``f(params_c_stack, params_s, oc_stack, os_, batches)`` with ``batches``
@@ -142,15 +308,34 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
     """
     if server_reduce not in ("mean", "sum"):
         raise ValueError(server_reduce)
+    _check_client_axis(client_axis)
+    if client_axis == "shard_map":
+        mesh = _resolve_shard_map_mesh(mesh)
+        axis = CLIENT_AXIS_NAME
+        # the body is manual over `data`: no host-level constraints inside
+        constrain_mesh = None
+    else:
+        axis = None
+        constrain_mesh = mesh
+    constrain_server = _server_constrainer(mesh, server_pspecs)
+
+    def allreduce_sum(x):
+        return jax.lax.psum(x, axis) if axis is not None else x
 
     def _run_round(params_c_stack, params_s, oc_stack, os_, batches, mask):
-        params_c_stack = _constrain(params_c_stack, mesh)
-        oc_stack = _constrain(oc_stack, mesh)
-        batches = _constrain(batches, mesh)
+        params_c_stack = _constrain(params_c_stack, constrain_mesh)
+        oc_stack = _constrain(oc_stack, constrain_mesh)
+        batches = _constrain(batches, constrain_mesh)
+        if constrain_server is not None:
+            params_s = constrain_server(params_s)
         # (clients, local_rounds, ...) -> (local_rounds, clients, ...)
         batches_rm = jax.tree_util.tree_map(
             lambda x: jnp.swapaxes(x, 0, 1), batches)
-        n_active = None if mask is None else jnp.maximum(mask.sum(), 1.0)
+        # round constants hoisted above the local-step scan: under shard_map
+        # each is ONE psum per round, not one per step
+        n_active = (None if mask is None
+                    else jnp.maximum(allreduce_sum(mask.sum()), 1.0))
+        any_active = None if mask is None else allreduce_sum(mask.sum()) > 0
 
         def per_client_grads(pc, batch, ps):
             loss, _aux, g_c, g_s = step.grads(pc, ps, batch)
@@ -175,15 +360,20 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
                 pc_new = masked_rows(pc_new, params_c_stack)
                 oc_new = masked_rows(oc_new, oc_stack)
             params_c_stack, oc_stack = pc_new, oc_new
-            # server: ONE update on the fleet-reduced gradient (all-reduce
-            # over `data` when the client axis is sharded)
+            # server: ONE update on the fleet-reduced gradient — under
+            # shard_map an explicit in-map lax.pmean/psum over `data`, under
+            # vmap an all-reduce GSPMD infers when the client axis is sharded
             def reduce_g(g):
                 g32 = g.astype(jnp.float32)
                 if mask is None:
-                    r = jnp.mean if server_reduce == "mean" else jnp.sum
-                    return r(g32, axis=0).astype(g.dtype)
+                    if server_reduce == "mean":
+                        m = jnp.mean(g32, axis=0)
+                        if axis is not None:
+                            m = jax.lax.pmean(m, axis)
+                        return m.astype(g.dtype)
+                    return allreduce_sum(jnp.sum(g32, axis=0)).astype(g.dtype)
                 w = mask.reshape((g.shape[0],) + (1,) * (g.ndim - 1))
-                s = (g32 * w).sum(axis=0)
+                s = allreduce_sum((g32 * w).sum(axis=0))
                 if server_reduce == "mean":
                     s = s / n_active
                 return s.astype(g.dtype)
@@ -192,7 +382,6 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
             ps_new = apply_updates(params_s, up_s)
             if mask is not None:
                 # zero active clients -> the server also sits the round out
-                any_active = mask.sum() > 0
                 ps_new = jax.tree_util.tree_map(
                     lambda n, o: jnp.where(any_active, n, o), ps_new, params_s)
                 os_new = jax.tree_util.tree_map(
@@ -202,10 +391,37 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
         carry = (params_c_stack, oc_stack, params_s, os_)
         carry, losses = jax.lax.scan(round_body, carry, batches_rm)
         params_c_stack, oc_stack, params_s, os_ = carry
-        agg = (fedavg_stack(params_c_stack) if mask is None
-               else fedavg_stack_masked(params_c_stack, mask))
-        params_c_stack = _constrain(agg, mesh)
+        if axis is not None:
+            agg = (fedavg_pmean_stack(params_c_stack, axis) if mask is None
+                   else fedavg_pmean_stack_masked(params_c_stack, mask, axis))
+        else:
+            agg = (fedavg_stack(params_c_stack) if mask is None
+                   else fedavg_stack_masked(params_c_stack, mask))
+        params_c_stack = _constrain(agg, constrain_mesh)
         return params_c_stack, params_s, oc_stack, os_, losses
+
+    if client_axis == "shard_map":
+        spec_c = P(CLIENT_AXIS_NAME)
+        # losses carry the client axis SECOND: (local_rounds, clients)
+        out_specs = (spec_c, P(), spec_c, P(), P(None, CLIENT_AXIS_NAME))
+
+        if client_dropout:
+            def body_masked(params_c_stack, params_s, oc_stack, os_, batches,
+                            client_mask):
+                mask = jnp.asarray(client_mask, jnp.float32)
+                return _run_round(params_c_stack, params_s, oc_stack, os_,
+                                  batches, mask)
+            return _client_shard_map(
+                body_masked, mesh,
+                in_specs=(spec_c, P(), spec_c, P(), spec_c, spec_c),
+                out_specs=out_specs)
+
+        def body(params_c_stack, params_s, oc_stack, os_, batches):
+            return _run_round(params_c_stack, params_s, oc_stack, os_,
+                              batches, None)
+        return _client_shard_map(
+            body, mesh, in_specs=(spec_c, P(), spec_c, P(), spec_c),
+            out_specs=out_specs)
 
     if client_dropout:
         def global_round_masked(params_c_stack, params_s, oc_stack, os_,

@@ -218,6 +218,20 @@ def _stack_replicas(tree, n: int):
         lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), tree)
 
 
+def _server_only_mesh(mesh):
+    """The fleet mesh with its ``data`` axis collapsed to 1: same
+    ``fsdp``/``tp`` server sub-mesh, no client-axis sharding. Used by
+    buckets whose size does not divide ``data``."""
+    if mesh is None or "data" not in mesh.axis_names:
+        return None
+    i = mesh.axis_names.index("data")
+    if mesh.devices.shape[i] == 1:
+        return mesh
+    sl = [slice(None)] * mesh.devices.ndim
+    sl[i] = slice(0, 1)
+    return jax.sharding.Mesh(mesh.devices[tuple(sl)], mesh.axis_names)
+
+
 class HeteroFleet:
     """Per-cut-bucket fleet engines over one shared client population.
 
@@ -232,11 +246,19 @@ class HeteroFleet:
     def __init__(self, build_program: Callable[[int], SplitProgram],
                  cut_indices: Sequence[int], opt_c, opt_s, *,
                  local_rounds: int, mesh=None, client_dropout: bool = False,
-                 server_reduce: str = "mean"):
+                 server_reduce: str = "mean", client_axis: str = "vmap",
+                 server_pspecs_fn: Optional[Callable] = None):
+        """``client_axis`` ('vmap' | 'shard_map') and ``server_pspecs_fn``
+        (``lambda params_s, mesh: pspecs`` — e.g. wrapping
+        ``launch.steps.fleet_server_pspecs``) pass through to each bucket's
+        ``make_fleet_sl_round``; a bucket whose size does not divide the
+        mesh's data axis falls back to its unsharded (single-device for
+        shard_map) engine rather than padding."""
         self.buckets = bucket_by_cut(cut_indices)
         self.local_rounds = local_rounds
         self.num_clients = len(cut_indices)
         self.client_dropout = client_dropout
+        self.client_axis = client_axis
         self._ids: list[np.ndarray] = []
         self._engines = []
         self._init_states = []
@@ -246,18 +268,25 @@ class HeteroFleet:
             if prog.cut_index != bucket.cut_index:
                 raise ValueError("build_program returned a different cut")
             n = len(bucket.client_ids)
-            # shard a bucket only when its size divides the data axis
+            # shard a bucket's CLIENT axis only when its size divides the
+            # data axis; a non-dividing bucket keeps the server fsdp x tp
+            # sub-mesh (data collapsed to 1) rather than silently dropping
+            # the requested server sharding
             b_mesh = mesh
             try:
                 validate_fleet_mesh(b_mesh, n)
             except ValueError:
-                b_mesh = None
+                b_mesh = _server_only_mesh(mesh)
+            pspecs = (server_pspecs_fn(prog.params_s0, b_mesh)
+                      if server_pspecs_fn is not None and b_mesh is not None
+                      else None)
             # donate the bucket's stacked state round-over-round (batches
             # and the dropout mask are fresh each round and not donated)
             engine = jax.jit(make_fleet_sl_round(
                 prog.step, opt_c, opt_s, local_rounds=local_rounds,
                 mesh=b_mesh, client_dropout=client_dropout,
-                server_reduce=server_reduce),
+                server_reduce=server_reduce, client_axis=client_axis,
+                server_pspecs=pspecs),
                 donate_argnums=(0, 1, 2, 3))
             state = (_stack_replicas(prog.params_c0, n), prog.params_s0,
                      init_stacked(opt_c, prog.params_c0, n),

@@ -36,22 +36,40 @@ def make_host_mesh(*, data: int = 1, model: int = 1):
     return _mesh_from((data, model), ("data", "model"))
 
 
-def make_fleet_mesh(num_clients: int, *, max_data: int | None = None):
-    """('data', 'model') mesh for the fleet engine: the largest ``data`` size
-    that divides ``num_clients`` and fits the available devices (model=1 —
-    the client tier never tensor-parallelizes, DESIGN.md §3). Returns None
-    when only one device is usable, so callers can fall back to the
-    unsharded path."""
-    limit = len(jax.devices())
+def make_fleet_mesh(num_clients: int, *, max_data: int | None = None,
+                    fsdp: int = 1, tp: int = 1):
+    """``('data', 'fsdp', 'tp')`` mesh for the fleet engine.
+
+    The ``data`` axis carries the stacked client axis (the largest size
+    that divides ``num_clients`` and fits the devices left after the server
+    axes) — the client tier never tensor-parallelizes (DESIGN.md §3), so
+    clients only ever shard over ``data``. ``fsdp`` x ``tp`` is the server
+    suffix's 2D sub-mesh: the shard_map engines leave those axes to GSPMD
+    (``auto``) and constrain the server params/gradients with the
+    ``launch.steps.fleet_server_pspecs`` tier specs, mirroring
+    ``build_step``'s server-tier rule. Returns None when the layout needs
+    more devices than exist or collapses to a single device (data = fsdp =
+    tp = 1), so callers can fall back to the unsharded path."""
+    navail = len(jax.devices())
+    if fsdp * tp > navail:
+        return None
+    limit = navail // (fsdp * tp)
     if max_data is not None:
         limit = min(limit, max_data)
     data = 1
     for d in range(1, min(limit, num_clients) + 1):
         if num_clients % d == 0:
             data = d
-    if data <= 1:
+    if data * fsdp * tp <= 1:
         return None
-    return _mesh_from((data, 1), ("data", "model"))
+    return _mesh_from((data, fsdp, tp), ("data", "fsdp", "tp"))
+
+
+def single_device_fleet_mesh():
+    """Degenerate (1, 1, 1) fleet mesh: lets the explicit-collective
+    shard_map engines compile and train on a one-device host (the
+    collectives become no-ops) with the same code path as a real fleet."""
+    return _mesh_from((1, 1, 1), ("data", "fsdp", "tp"))
 
 
 def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):

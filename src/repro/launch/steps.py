@@ -27,8 +27,8 @@ from ..models.transformer import (build_groups, decode_state_init,
                                   default_cut_layer, lm_loss, model_decode_step,
                                   model_forward, model_init, vocab_padded)
 from ..optim import adamw, apply_updates
-from ..parallel.sharding import (ShardingPolicy, param_pspecs, set_policy,
-                                 FSDP_AXIS, TP_AXIS)
+from ..parallel.sharding import (ShardingPolicy, mesh_axis_sizes,
+                                 param_pspecs, set_policy, FSDP_AXIS, TP_AXIS)
 
 # long-context variant for full-attention archs: block-sparse sliding window
 LONG_CONTEXT_WINDOW = 8192
@@ -349,6 +349,40 @@ def build_decode_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
                      meta={"cut_layer": cut, "window": window,
                            "kind": "decode"},
                      donate_argnums=(1,) if opts.donate else ())
+
+
+def fleet_server_pspecs(server_params: Any, mesh: Mesh) -> Any:
+    """Server-tier specs for the fleet engines, on the ``('data','fsdp','tp')``
+    fleet mesh (``launch.mesh.make_fleet_mesh``).
+
+    The same DESIGN.md §3 tier rule ``build_step`` applies through
+    ``param_pspecs`` — client tier never tensor-parallelizes, server tier is
+    fully 2D-sharded — mapped onto the fleet mesh's literal ``fsdp``/``tp``
+    axes for arbitrary param trees (the fleet's CNN stage lists have no
+    transformer name rules to match): matrix-like leaves shard their last
+    two dims ``(fsdp, tp)``, vectors follow their output-channel dim over
+    ``tp``, every dim divisibility-guarded against its axis size exactly as
+    ``parallel.sharding._spec_for`` guards the launch-layer specs. The
+    shard_map fleet rounds constrain the server suffix's params and
+    gradients with these specs inside the map body (the ``fsdp``/``tp``
+    axes are GSPMD-``auto`` there), so the server model scales over its 2D
+    sub-mesh while the client axis stays manual over ``data``.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    f, t = sizes.get("fsdp", 1), sizes.get("tp", 1)
+
+    def spec(leaf) -> P:
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        axes = [None] * len(shape)
+        if t > 1 and shape[-1] % t == 0:
+            axes[-1] = "tp"
+        if len(shape) >= 2 and f > 1 and shape[-2] % f == 0:
+            axes[-2] = "fsdp"
+        return P(*axes)
+
+    return jax.tree_util.tree_map(spec, server_params)
 
 
 def build_step(cfg: ArchConfig, shape_name: str, mesh: Mesh, *,

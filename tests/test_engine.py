@@ -11,9 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import compile_experiment
 from repro.core.fedavg import fedavg, fedavg_stack
 from repro.core.paper_train import (PaperTrainConfig, count_fl_step_flops,
-                                    count_sl_step_flops, train_fl, train_sl)
+                                    count_sl_step_flops, paper_spec)
 from repro.core.split import (SplitStep, apply_stages, init_stages,
                               make_fl_round, make_multi_client_round,
                               partition_stages)
@@ -140,9 +141,10 @@ def test_symmetric_flop_accounting(tiny_setup):
     assert 0.5 * full < client_fl + server_fl < 1.5 * full
 
 
-def test_trainers_energy_ratio_and_keys():
-    """End-to-end: both trainers run on the tiny backbone, preserve their
-    public return keys, and a shallow split spends less client energy than
+def test_paper_spec_energy_ratio_and_records():
+    """End-to-end via the spec layer (``paper_spec`` — the mapping the
+    dropped ``train_fl``/``train_sl`` shims used): both pipelines run on
+    the tiny backbone and a shallow split spends less client energy than
     FL under the symmetric accounting (the paper's headline direction)."""
     rng = np.random.RandomState(0)
     n = 96
@@ -151,18 +153,20 @@ def test_trainers_energy_ratio_and_keys():
     cfg = PaperTrainConfig(model="tinycnn", num_clients=3, global_rounds=2,
                            local_steps=2, batch_size=4, image_size=16,
                            client_fraction=0.4)
-    fl = train_fl(cfg, x, y, x[:24], y[:24])
-    sl = train_sl(cfg, x, y, x[:24], y[:24])
-
-    assert {"params", "history", "client_energy", "server_energy", "metrics",
-            "step_flops"} <= set(fl)
-    assert {"client_params", "server_params", "history", "metrics",
-            "client_energy", "server_energy", "link_bytes", "link_time_s",
-            "cut_index", "client_flops", "server_flops"} <= set(sl)
-    assert len(fl["history"]) == len(sl["history"]) == cfg.global_rounds
+    data = (x, y, x[:24], y[:24])
+    plan_fl = compile_experiment(paper_spec(cfg, "fl"), data=data)
+    plan_sl = compile_experiment(paper_spec(cfg, "sl"), data=data)
+    _, rec_fl = plan_fl.run()
+    _, rec_sl = plan_sl.run()
+    assert len(rec_fl) == len(rec_sl) == cfg.global_rounds
 
     # symmetric accounting: the SL client runs a strict subset of the FL
     # client's per-step work, so its energy must be strictly smaller
-    assert sl["client_flops"] < fl["step_flops"]
-    assert (sl["client_energy"].energy_j < fl["client_energy"].energy_j)
-    assert sl["link_bytes"] > 0
+    k = plan_sl.cut_of_client[0]
+    client_flops, server_flops, _smashed = plan_sl.flops[k]
+    assert client_flops > 0 and server_flops > 0
+    assert client_flops < plan_fl.flops["full"]
+    assert (sum(r.client_energy_j for r in rec_sl)
+            < sum(r.client_energy_j for r in rec_fl))
+    assert sum(r.link_bytes for r in rec_sl) > 0
+    assert sum(r.link_bytes for r in rec_fl) == 0

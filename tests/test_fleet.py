@@ -6,6 +6,7 @@ documented loosened tolerance: vmapping/sharding the client axis
 reassociates fp32 reductions vs the sequential scan reference (the scanned
 engine itself holds a 1e-4 bound vs the host loop — see test_engine.py).
 """
+import dataclasses
 import json
 import os
 import subprocess
@@ -17,14 +18,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import compile_experiment
 from repro.core.energy import HardwareProfile, JETSON_AGX_ORIN
 from repro.core.link import LinkConfig
 from repro.core.split import (SplitStep, apply_stages, init_stages,
                               make_fl_round, partition_stages)
 from repro.fleet import (CampaignConfig, FleetLink, HeteroFleet,
                          FLEET_EQUIV_ATOL, assign_cuts_cnn, bucket_by_cut,
-                         cnn_split_program, make_fleet_fl_round,
-                         make_fleet_sl_round, run_campaign, run_link_sweep,
+                         campaign_spec, campaign_totals, cnn_split_program,
+                         make_fleet_fl_round, make_fleet_sl_round,
                          stack_split_program)
 from repro.kernels.quant.ref import roundtrip_error_bound
 from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss
@@ -139,8 +141,12 @@ def test_fleet_sl_round_matches_parallel_reference(tiny_setup):
 
 
 def test_sharded_round_matches_unsharded_host_mesh():
-    """8 clients on a (data=4, model=1) host mesh: the sharded fleet FL and
-    SL rounds match the unsharded engine within FLEET_EQUIV_ATOL. Runs in a
+    """8 clients on a forced 4-device host mesh: the sharded fleet FL and
+    SL rounds — GSPMD-constrained vmap AND explicit-collective shard_map —
+    match the unsharded engine within FLEET_EQUIV_ATOL; the shard_map
+    dropout masks (fedavg_pmean_masked, psum'd active counts) match the
+    vmap masked-FedAvg result at the same gate; the vmap engine also runs
+    the 2D (data=2, fsdp=2) layout with fleet_server_pspecs. Runs in a
     subprocess because forcing 4 host devices must precede jax init."""
     script = textwrap.dedent("""
         import os
@@ -149,12 +155,15 @@ def test_sharded_round_matches_unsharded_host_mesh():
             "--xla_cpu_use_thunk_runtime=false")
         import json
         import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding
         from repro.core.split import (SplitStep, apply_stages, init_stages,
                                       partition_stages)
         from repro.fleet.engine import (FLEET_EQUIV_ATOL, make_fleet_fl_round,
                                         make_fleet_sl_round,
-                                        shard_client_stack)
+                                        shard_client_stack,
+                                        shard_server_state)
         from repro.launch.mesh import make_fleet_mesh
+        from repro.launch.steps import fleet_server_pspecs
         from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss
         from repro.optim import adamw, init_stacked
 
@@ -165,24 +174,38 @@ def test_sharded_round_matches_unsharded_host_mesh():
         bx = jax.random.uniform(jax.random.fold_in(key, 1),
                                 (C, S, B, 16, 16, 3))
         by = jax.random.randint(jax.random.fold_in(key, 2), (C, S, B), 0, 4)
+        mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], jnp.float32)
         mesh = make_fleet_mesh(C)
-        assert mesh is not None and dict(zip(
-            mesh.axis_names, mesh.devices.shape))["data"] == 4
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        assert sizes == {"data": 4, "fsdp": 1, "tp": 1}, sizes
 
         def tree_diff(a, b):
             return max(float(jnp.abs(x - y).max()) for x, y in zip(
                 jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
 
+        diffs = {}
         opt = adamw(1e-3)
         def grad_fn(p, batch):
             xx, yy = batch
             return jax.value_and_grad(lambda q: cross_entropy_loss(
                 apply_stages(stages, q, xx), yy))(p)
         plain = jax.jit(make_fleet_fl_round(grad_fn, opt))(params, (bx, by))
-        shard = jax.jit(make_fleet_fl_round(grad_fn, opt, mesh=mesh))(
-            params, shard_client_stack((bx, by), mesh))
-        fl_loss = float(jnp.abs(plain[1] - shard[1]).max())
-        fl_par = tree_diff(plain[0], shard[0])
+        for name, axis in (("fl_vmap", "vmap"), ("fl_smap", "shard_map")):
+            out = jax.jit(make_fleet_fl_round(
+                grad_fn, opt, mesh=mesh, client_axis=axis))(
+                    params, shard_client_stack((bx, by), mesh))
+            diffs[name + "_loss"] = float(jnp.abs(plain[1] - out[1]).max())
+            diffs[name + "_par"] = tree_diff(plain[0], out[0])
+        # dropout: shard_map masked FedAvg (fedavg_pmean_masked) == vmap
+        plain_m = jax.jit(make_fleet_fl_round(
+            grad_fn, opt, client_dropout=True))(params, (bx, by), mask)
+        smap_m = jax.jit(make_fleet_fl_round(
+            grad_fn, opt, mesh=mesh, client_axis="shard_map",
+            client_dropout=True))(
+                params, shard_client_stack((bx, by), mesh),
+                shard_client_stack(mask, mesh))
+        diffs["fl_mask_loss"] = float(jnp.abs(plain_m[1] - smap_m[1]).max())
+        diffs["fl_mask_par"] = tree_diff(plain_m[0], smap_m[0])
 
         cs, cp0, ss, sp, _ = partition_stages(stages, params, 0.4)
         opt_c, opt_s = adamw(1e-3), adamw(1e-3)
@@ -193,21 +216,91 @@ def test_sharded_round_matches_unsharded_host_mesh():
         stack = jax.tree_util.tree_map(
             lambda v: jnp.broadcast_to(v[None], (C,) + v.shape), cp0)
         batches = {"inputs": bx, "targets": by}
+
+        def sl_state():
+            return (stack, sp, init_stacked(opt_c, cp0, C), opt_s.init(sp))
+
+        def sl_sharded_state(m):
+            return (shard_client_stack(stack, m), sp,
+                    shard_client_stack(init_stacked(opt_c, cp0, C), m),
+                    opt_s.init(sp))
+
         plain_sl = jax.jit(make_fleet_sl_round(
-            step, opt_c, opt_s, local_rounds=S))(
-                stack, sp, init_stacked(opt_c, cp0, C), opt_s.init(sp),
-                batches)
-        shard_sl = jax.jit(make_fleet_sl_round(
-            step, opt_c, opt_s, local_rounds=S, mesh=mesh))(
-                shard_client_stack(stack, mesh), sp,
-                shard_client_stack(init_stacked(opt_c, cp0, C), mesh),
-                opt_s.init(sp), shard_client_stack(batches, mesh))
-        sl_loss = float(jnp.abs(plain_sl[4] - shard_sl[4]).max())
-        sl_par = max(tree_diff(plain_sl[0], shard_sl[0]),
-                     tree_diff(plain_sl[1], shard_sl[1]))
-        print(json.dumps({"fl_loss": fl_loss, "fl_par": fl_par,
-                          "sl_loss": sl_loss, "sl_par": sl_par,
-                          "atol": FLEET_EQUIV_ATOL}))
+            step, opt_c, opt_s, local_rounds=S))(*sl_state(), batches)
+        for name, axis in (("sl_vmap", "vmap"), ("sl_smap", "shard_map")):
+            out = jax.jit(make_fleet_sl_round(
+                step, opt_c, opt_s, local_rounds=S, mesh=mesh,
+                client_axis=axis))(*sl_sharded_state(mesh),
+                                   shard_client_stack(batches, mesh))
+            diffs[name + "_loss"] = float(jnp.abs(plain_sl[4] - out[4]).max())
+            diffs[name + "_par"] = max(tree_diff(plain_sl[0], out[0]),
+                                       tree_diff(plain_sl[1], out[1]))
+        # dropout through the in-map collectives: masked clients frozen,
+        # psum'd server reduction, fedavg_pmean_stack_masked closing agg
+        plain_ms = jax.jit(make_fleet_sl_round(
+            step, opt_c, opt_s, local_rounds=S, client_dropout=True))(
+                *sl_state(), batches, mask)
+        smap_ms = jax.jit(make_fleet_sl_round(
+            step, opt_c, opt_s, local_rounds=S, mesh=mesh,
+            client_axis="shard_map", client_dropout=True))(
+                *sl_sharded_state(mesh), shard_client_stack(batches, mesh),
+                shard_client_stack(mask, mesh))
+        diffs["sl_mask_loss"] = float(
+            jnp.abs(plain_ms[4] - smap_ms[4]).max())
+        diffs["sl_mask_par"] = max(tree_diff(plain_ms[0], smap_ms[0]),
+                                   tree_diff(plain_ms[1], smap_ms[1]))
+
+        # 2D layout: (data=2, fsdp=2) mesh, server suffix sharded with the
+        # build_step tier specs, vmap engine (GSPMD; shard_map x fsdp>1 is
+        # gated off XLA:CPU — see fleet.engine)
+        mesh2d = make_fleet_mesh(C, fsdp=2)
+        sizes2d = dict(zip(mesh2d.axis_names, mesh2d.devices.shape))
+        assert sizes2d == {"data": 2, "fsdp": 2, "tp": 1}, sizes2d
+        sps = fleet_server_pspecs(sp, mesh2d)
+        assert any(any(ax == "fsdp" for ax in s)
+                   for s in jax.tree_util.tree_leaves(sps))
+        out2d = jax.jit(make_fleet_sl_round(
+            step, opt_c, opt_s, local_rounds=S, mesh=mesh2d,
+            server_pspecs=sps))(
+                shard_client_stack(stack, mesh2d),
+                shard_server_state(sp, mesh2d, sps),
+                shard_client_stack(init_stacked(opt_c, cp0, C), mesh2d),
+                opt_s.init(shard_server_state(sp, mesh2d, sps)),
+                shard_client_stack(batches, mesh2d))
+        diffs["sl_2d_loss"] = float(jnp.abs(plain_sl[4] - out2d[4]).max())
+        diffs["sl_2d_par"] = max(tree_diff(plain_sl[0], out2d[0]),
+                                 tree_diff(plain_sl[1], out2d[1]))
+        server_specs_out = {str(l.sharding.spec)
+                            for l in jax.tree_util.tree_leaves(out2d[1])}
+
+        # the same layout through the SPEC layer: EngineSpec(server_mesh=)
+        # auto-builds the ('data','fsdp','tp') mesh and plan.init() places
+        # the live server params + Adam moments with shard_server_state
+        # (incl. the OptState(step=P(), mu=specs, nu=specs) spec tree)
+        from repro.api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                               ExperimentSpec, ModelSpec, compile_experiment)
+        spec = ExperimentSpec(
+            model=ModelSpec(name="tinycnn", num_classes=4),
+            data=DataSpec(kind="synthetic", image_size=16,
+                          classes_per_client=2),
+            clients=ClientSpec(num_clients=C),
+            cut_policy=CutPolicy(mode="fraction", fraction=0.4),
+            engine=EngineSpec(kind="sl", client_axis="vmap",
+                              server_mesh=(2, 1)),
+            global_rounds=1, local_steps=S, batch_size=2)
+        plan = compile_experiment(spec)
+        ms = dict(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
+        assert ms == {"data": 2, "fsdp": 2, "tp": 1}, ms
+        state = plan.init()
+        init_specs = {str(l.sharding.spec) for l in
+                      jax.tree_util.tree_leaves(state.engine_state[1])}
+        assert any("fsdp" in s for s in init_specs), init_specs
+        state, rec = plan.run_round(state)
+        assert rec.loss == rec.loss and rec.active_clients == C
+
+        diffs["atol"] = FLEET_EQUIV_ATOL
+        diffs["server_specs_out"] = sorted(server_specs_out)
+        print(json.dumps(diffs))
     """)
     env = dict(os.environ, PYTHONPATH=SRC)
     env.pop("XLA_FLAGS", None)
@@ -215,8 +308,11 @@ def test_sharded_round_matches_unsharded_host_mesh():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])
-    for k in ("fl_loss", "fl_par", "sl_loss", "sl_par"):
-        assert rec[k] < rec["atol"], rec
+    for k, v in rec.items():
+        if k.endswith("_loss") or k.endswith("_par"):
+            assert v < rec["atol"], (k, rec)
+    # the 2D run's server suffix really lives on the fsdp axis
+    assert any("fsdp" in s for s in rec["server_specs_out"]), rec
 
 
 # ---------------------------------------------------------------------------
@@ -381,35 +477,47 @@ def test_int8_wire_bytes_ratio():
 def test_campaign_link_sweep_records():
     """>=8 simulated clients produce per-round energy/accuracy/link-bytes
     records for both fp32 and int8 link modes; int8 moves ~4x fewer bytes
-    on the same scenario; the UAV budget caps the rounds."""
+    on the same scenario; the UAV budget caps the rounds. The sweep is two
+    campaign specs differing only in the link policy (the shape the dropped
+    ``run_link_sweep`` shim used to package)."""
     cfg = CampaignConfig(model="tinycnn", num_clients=8, global_rounds=2,
                          local_steps=2, batch_size=4, image_size=16,
                          num_classes=NUM_CLASSES, classes_per_client=2)
-    results = run_link_sweep(cfg)
-    assert set(results) == {"none", "int8"}
-    for mode, res in results.items():
-        assert res.rounds_budget >= len(res.records) > 0
-        assert len(res.cut_of_client) == 8
-        for rec in res.records:
+    results = {}
+    for mode in ("none", "int8"):
+        spec = campaign_spec(dataclasses.replace(
+            cfg, link=dataclasses.replace(cfg.link, compress=mode)))
+        plan = compile_experiment(spec)
+        _, records = plan.run()
+        results[mode] = (plan, records)
+    for mode, (plan, records) in results.items():
+        assert plan.rounds_budget >= len(records) > 0
+        assert len(plan.cut_of_client) == 8
+        for rec in records:
             d = rec.to_dict()
             assert d["link_bytes"] > 0 and d["client_energy_j"] > 0
             assert d["server_energy_j"] > 0 and d["uav_energy_j"] > 0
             assert d["link_energy_j"] > 0
             assert 0.0 <= d["accuracy"] <= 1.0
             assert np.isfinite(d["loss"])
-        assert {"rounds_run", "link_bytes", "link_energy_j",
-                "client_energy_j", "uav_energy_j",
-                "final_accuracy"} <= set(res.totals())
-    ratio = (results["none"].totals()["link_bytes"]
-             / results["int8"].totals()["link_bytes"])
+
+    totals = {mode: campaign_totals(records, plan.tour)
+              for mode, (plan, records) in results.items()}
+    for mode, (plan, records) in results.items():
+        # mission totals include the return-to-base leg no record bills
+        assert totals[mode]["uav_energy_j"] == pytest.approx(
+            sum(r.uav_energy_j for r in records) + plan.tour.e_return)
+        assert totals[mode]["rounds_run"] == len(records)
+
+    ratio = totals["none"]["link_bytes"] / totals["int8"]["link_bytes"]
     # 4/(1 + 4/last_dim): narrow CNN smashed tensors pay more scale overhead
     assert 2.5 < ratio < 4.0, ratio
     # the compressed link also cuts radio transmit energy by the same factor
-    e_ratio = (results["none"].totals()["link_energy_j"]
-               / results["int8"].totals()["link_energy_j"])
+    e_ratio = (totals["none"]["link_energy_j"]
+               / totals["int8"]["link_energy_j"])
     np.testing.assert_allclose(e_ratio, ratio, rtol=1e-6)
     # same seed + fleet -> identical tours; only the link differs
-    assert results["none"].tour.order == results["int8"].tour.order
+    assert results["none"][0].tour.order == results["int8"][0].tour.order
 
 
 def test_campaign_adaptive_cuts():
@@ -422,22 +530,75 @@ def test_campaign_adaptive_cuts():
                          num_classes=NUM_CLASSES, classes_per_client=2,
                          adaptive_cuts=True,
                          edge_profiles=(JETSON_AGX_ORIN, mcu))
-    res = run_campaign(cfg)
-    assert len(res.cut_of_client) == 8
-    assert all(k >= 1 for k in res.cut_of_client)
-    assert len(res.records) == 1 and np.isfinite(res.records[0].loss)
+    plan = compile_experiment(campaign_spec(cfg))
+    _, records = plan.run()
+    assert len(plan.cut_of_client) == 8
+    assert all(k >= 1 for k in plan.cut_of_client)
+    assert len(records) == 1 and np.isfinite(records[0].loss)
 
 
 def test_fleet_mesh_divisible_or_none():
-    """make_fleet_mesh picks a data axis dividing the fleet (model=1), or
-    returns None when only one device is usable (device count varies with
-    test order — earlier tests may force extra host devices)."""
-    from repro.launch.mesh import make_fleet_mesh
+    """make_fleet_mesh picks a ('data','fsdp','tp') layout whose data axis
+    divides the fleet, or returns None when only one device is usable
+    (device count varies with test order — earlier tests may force extra
+    host devices)."""
+    from repro.launch.mesh import make_fleet_mesh, single_device_fleet_mesh
     mesh = make_fleet_mesh(8)
     if len(jax.devices()) == 1:
         assert mesh is None
     else:
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        assert 8 % sizes["data"] == 0 and sizes["model"] == 1
+        assert 8 % sizes["data"] == 0
+        assert sizes["fsdp"] == sizes["tp"] == 1    # server axes default off
     assert make_fleet_mesh(8, max_data=1) is None   # capped to one device
     assert make_fleet_mesh(1) is None               # one client, no mesh
+    # the server sub-mesh consumes devices before the client axis
+    n = len(jax.devices())
+    assert make_fleet_mesh(8, fsdp=n + 1) is None   # over budget
+    if n > 1:
+        mesh2d = make_fleet_mesh(8, fsdp=n)
+        sizes = dict(zip(mesh2d.axis_names, mesh2d.devices.shape))
+        assert sizes == {"data": 1, "fsdp": n, "tp": 1}
+    sd = single_device_fleet_mesh()
+    assert dict(zip(sd.axis_names, sd.devices.shape)) == {
+        "data": 1, "fsdp": 1, "tp": 1}
+
+
+def test_server_only_mesh_keeps_server_axes():
+    """A bucket whose size does not divide `data` falls back to the mesh
+    with data collapsed to 1 — the fsdp/tp server sub-mesh survives
+    instead of being silently dropped."""
+    from repro.fleet.hetero import _server_only_mesh
+    assert _server_only_mesh(None) is None
+    if len(jax.devices()) >= 2:
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(8, fsdp=len(jax.devices()) // 1, tp=1)
+        # build a (data=1, fsdp=n) mesh directly: collapse is identity
+        assert _server_only_mesh(mesh) is mesh
+        mesh_d = make_fleet_mesh(8)          # data>1, fsdp=tp=1
+        sub = _server_only_mesh(mesh_d)
+        sizes = dict(zip(sub.axis_names, sub.devices.shape))
+        assert sizes["data"] == 1
+        assert sizes["fsdp"] == mesh_d.devices.shape[1]
+        assert sizes["tp"] == mesh_d.devices.shape[2]
+
+
+def test_fleet_server_pspecs_divisibility_guard():
+    """fleet_server_pspecs mirrors build_step's server tier rule on the
+    fleet mesh: matrix last-two dims (fsdp, tp), vectors over tp, every
+    dim guarded — a non-dividing dim falls back to replicated."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import abstract_mesh
+    from repro.launch.steps import fleet_server_pspecs
+    mesh = abstract_mesh((1, 2, 4), ("data", "fsdp", "tp"))
+    params = {"w": jnp.zeros((3, 3, 8, 16)),   # conv kernel: cin/fsdp, cout/tp
+              "v": jnp.zeros((6, 16)),         # dense: 6%2==0 -> fsdp
+              "odd": jnp.zeros((5, 7)),        # nothing divides -> replicated
+              "b": jnp.zeros((16,)),           # bias follows cout -> tp
+              "s": jnp.zeros(())}              # scalar -> replicated
+    specs = fleet_server_pspecs(params, mesh)
+    assert specs["w"] == P(None, None, "fsdp", "tp")
+    assert specs["v"] == P("fsdp", "tp")
+    assert specs["odd"] == P(None, None)
+    assert specs["b"] == P("tp")
+    assert specs["s"] == P()

@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in the repo's markdown files.
+
+    python tools/check_md_links.py [root]
+
+Checks every ``[text](target)`` and ``[text]: target`` reference in
+tracked ``*.md`` files (skipping dot-directories and caches):
+
+  * external schemes (http/https/mailto) are ignored — CI must not depend
+    on the network;
+  * pure-anchor targets (``#section``) are resolved against the SAME
+    file's headings (GitHub slug rules: lowercase, punctuation stripped,
+    spaces -> dashes);
+  * everything else is a repo path, resolved relative to the referencing
+    file (or the root for ``/``-prefixed targets); an optional
+    ``#anchor`` suffix is checked against that file's headings when it is
+    markdown.
+
+Exit status: 0 = every link resolves, 1 = at least one broken link
+(listed on stdout). Used by the CI docs job next to
+``python -m doctest docs/ARCHITECTURE.md``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", ".github", ".pytest_cache", "__pycache__", ".claude",
+             "node_modules", ".venv"}
+# inline [text](target) — target ends at the first unescaped ')';
+# reference defs [label]: target
+INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s{0,3}\[[^\]]+\]:\s+(\S+)", re.M)
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        out += [os.path.join(dirpath, f) for f in filenames
+                if f.endswith(".md")]
+    return sorted(out)
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code blocks — example links in code are not contracts."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (close enough for intra-repo use)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    try:
+        text = open(path, encoding="utf-8").read()
+    except OSError:
+        return set()
+    return {slugify(m.group(1)) for m in HEADING.finditer(text)}
+
+
+def check(root: str) -> list[str]:
+    errors = []
+    for path in md_files(root):
+        text = strip_fences(open(path, encoding="utf-8").read())
+        targets = INLINE.findall(text) + REFDEF.findall(text)
+        for target in targets:
+            if target.startswith(EXTERNAL) or target.startswith("<"):
+                continue
+            rel = os.path.relpath(path, root)
+            if target.startswith("#"):
+                if slugify(target[1:]) not in anchors_of(path):
+                    errors.append(f"{rel}: broken anchor {target!r}")
+                continue
+            dest, _, frag = target.partition("#")
+            base = root if dest.startswith("/") else os.path.dirname(path)
+            full = os.path.normpath(os.path.join(base, dest.lstrip("/")))
+            if not os.path.exists(full):
+                errors.append(f"{rel}: broken link {target!r} "
+                              f"(resolved {os.path.relpath(full, root)})")
+            elif frag and full.endswith(".md") and \
+                    slugify(frag) not in anchors_of(full):
+                errors.append(f"{rel}: broken anchor {target!r}")
+    return errors
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")
+    errors = check(root)
+    if errors:
+        print(f"check_md_links: {len(errors)} broken link(s):")
+        for e in errors:
+            print(f"  !! {e}")
+        return 1
+    print(f"check_md_links: ok ({len(md_files(root))} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
