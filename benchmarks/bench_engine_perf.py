@@ -21,6 +21,13 @@ hand-wired as the historical baseline:
                  measured steps/s delta bought by the loosened
                  FLEET_EQUIV_ATOL equivalence bound.
   fl_shard_map : spec ``fl/shard_map`` — explicit ``fedavg_pmean`` FedAvg.
+  mc_vmap      : ``repro.sim.run_monte_carlo(mode='vmap')`` — one jitted
+                 vmap-over-seeds scenario rollout (stochastic channel +
+                 markov availability, 16 seeds).
+  mc_loop      : the same rollout dispatched per (seed, round) from Python
+                 — the idealized-campaign execution model. The
+                 mc_vmap/mc_loop ratio is the vectorization win the
+                 acceptance gate holds at >= 3x on XLA:CPU.
 
 Results append to ``results/engine_perf.json`` as a per-PR log — one row
 per (commit, model, case, variant):
@@ -143,9 +150,37 @@ def bench_sl_host_loop(spec: ExperimentSpec, *, rounds: int) -> float:
     return rounds * steps * clients / (time.time() - t0)
 
 
+def bench_monte_carlo(model: str, *, clients: int = 4, steps: int = 2,
+                      batch: int = 8, image: int = 16, seeds: int = 16,
+                      mc_rounds: int = 20) -> dict[str, float]:
+    """steps/sec of the vectorized vs per-seed-looped Monte-Carlo scenario
+    rollout (``repro.sim.run_monte_carlo``) on a stochastic campaign —
+    a2g channel + markov availability over a UAV mission. Both modes run
+    the identical per-round program; only the dispatch differs."""
+    from repro.api import MissionSpec
+    from repro.sim import (AvailabilityParams, ChannelParams, ScenarioSpec,
+                           run_monte_carlo)
+    spec = dataclasses.replace(
+        _base_spec(model, clients, steps, batch, image),
+        engine=EngineSpec(kind="sl", client_axis="vmap"),
+        mission=MissionSpec(farm_acres=100.0),
+        scenario=ScenarioSpec(
+            channel=ChannelParams(kind="a2g"),
+            availability=AvailabilityParams(kind="markov", p_drop=0.3,
+                                            p_recover=0.5)))
+    plan = compile_experiment(spec)
+    total = seeds * mc_rounds * clients * steps
+    out = {}
+    for mode in ("vmap", "loop"):
+        mc = run_monte_carlo(plan, seeds, rounds=mc_rounds, mode=mode)
+        out[f"mc_{mode}"] = total / mc.wall_s
+    return out
+
+
 def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         batch: int = 16, image: int = 32, rounds: int = 10,
-        print_csv: bool = True, commit: str | None = None) -> list[dict]:
+        print_csv: bool = True, commit: str | None = None,
+        mc_seeds: int = 16) -> list[dict]:
     base = _base_spec(model, clients, steps, batch, image)
     variants = {
         "sl_host_loop": bench_sl_host_loop(base, rounds=rounds),
@@ -171,6 +206,14 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
     rows = [{"commit": commit, "bench": "engine_perf", "model": model,
              "case": case, "variant": v, "steps_per_s": round(sps, 2)}
             for v, sps in variants.items()]
+    # the MC workload is its own fixed case (c4s2b8x<seeds>) independent of
+    # this invocation's engine case; pass --mc-seeds 0 to skip it when
+    # benching several engine cases in one session (avoids duplicate rows)
+    mc = bench_monte_carlo(model, seeds=mc_seeds) if mc_seeds > 0 else {}
+    mc_case = f"c4s2b8x{mc_seeds}"
+    rows += [{"commit": commit, "bench": "engine_perf", "model": model,
+              "case": mc_case, "variant": v, "steps_per_s": round(sps, 2)}
+             for v, sps in mc.items()]
     os.makedirs("results", exist_ok=True)
     log = []
     if os.path.exists(CACHE):
@@ -184,12 +227,15 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         fl_delta = variants["fl_vmap"] / max(variants["fl_scan"], 1e-9)
         sm_delta = variants["sl_shard_map"] / max(variants["sl_fleet"], 1e-9)
         for r in rows:
-            print(f"{r['bench']},{r['model']}/{case}/{r['variant']},0,"
+            print(f"{r['bench']},{r['model']}/{r['case']}/{r['variant']},0,"
                   f"{r['steps_per_s']}steps/s")
-        print(f"engine_perf,{model}/{case}/summary,0,"
-              f"scanned_vs_host={sl_speed:.2f}x;"
-              f"fl_vmap_vs_scan={fl_delta:.2f}x;"
-              f"sl_shard_map_vs_vmap={sm_delta:.2f}x")
+        summary = (f"scanned_vs_host={sl_speed:.2f}x;"
+                   f"fl_vmap_vs_scan={fl_delta:.2f}x;"
+                   f"sl_shard_map_vs_vmap={sm_delta:.2f}x")
+        if mc:
+            summary += (f";mc_vmap_vs_loop="
+                        f"{mc['mc_vmap'] / max(mc['mc_loop'], 1e-9):.2f}x")
+        print(f"engine_perf,{model}/{case}/summary,0,{summary}")
     return rows
 
 
@@ -201,6 +247,9 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--image", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--mc-seeds", type=int, default=16,
+                    help="Monte-Carlo sweep width for the mc_vmap/mc_loop "
+                         "rows (acceptance gate: >=3x at 16 seeds)")
     ap.add_argument("--commit", default=None,
                     help="override the logged commit label (used to append "
                          "same-machine re-measured baseline rows next to a "
@@ -209,7 +258,7 @@ def main():
     args = ap.parse_args()
     run(model=args.model, clients=args.clients, steps=args.steps,
         batch=args.batch, image=args.image, rounds=args.rounds,
-        commit=args.commit)
+        commit=args.commit, mc_seeds=args.mc_seeds)
 
 
 if __name__ == "__main__":

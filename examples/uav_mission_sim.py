@@ -4,7 +4,13 @@ fleet under the UAV's energy budget, with fp32 vs int8 link modes compared
 per round (energy / accuracy / wire bytes).
 
     PYTHONPATH=src python examples/uav_mission_sim.py
+
+``--monte-carlo N`` additionally sweeps N stochastic scenario seeds (a2g
+channel fading/shadowing + markov client availability, 2 relay UAVs) in one
+vectorized rollout (``repro.sim.run_monte_carlo``) and prints the spread of
+mission energy and final loss across realizations.
 """
+import argparse
 import os
 import sys
 
@@ -21,6 +27,11 @@ import numpy as np  # noqa: E402
 from repro.api import (ClientSpec, DataSpec, EngineSpec, ExperimentSpec,  # noqa: E402
                        LinkPolicy, MissionSpec, ModelSpec,
                        compile_experiment)
+
+args = argparse.ArgumentParser()
+args.add_argument("--monte-carlo", type=int, default=0, metavar="N",
+                  help="also sweep N stochastic scenario seeds")
+args = args.parse_args()
 from repro.core.deployment import (deploy_edge_devices, deploy_gasbac,  # noqa: E402
                                    deploy_kmeans, uniform_grid_sensors)
 from repro.core.trajectory import greedy_tour_plan, plan_tour  # noqa: E402
@@ -76,3 +87,29 @@ b_none, b_int8 = (sum(r.link_bytes for r in results[m])
 print(f"\nint8 link moves {b_none/b_int8:.2f}x "
       f"fewer wire bytes than fp32 on the same campaign "
       f"({b_none/1e6:.2f} MB -> {b_int8/1e6:.2f} MB)")
+
+# ---- Monte-Carlo scenario sweep (--monte-carlo N) -------------------------
+# The campaign above is ONE realization with an idealized constant-rate
+# link. A ScenarioSpec attaches the stochastic environment; run_monte_carlo
+# sweeps seeds in one jitted vmapped rollout.
+if args.monte_carlo > 0:
+    from repro.sim import (AvailabilityParams, ChannelParams, ScenarioSpec,
+                           run_monte_carlo)
+
+    scn = ScenarioSpec(
+        channel=ChannelParams(kind="a2g"),
+        availability=AvailabilityParams(kind="markov", p_drop=0.25,
+                                        p_recover=0.5),
+        num_uavs=2, serve_mode="relay")
+    plan = compile_experiment(dataclasses.replace(base, scenario=scn))
+    mc = run_monte_carlo(plan, args.monte_carlo)
+    s = mc.summary()
+    print(f"\nmonte-carlo: {mc.num_seeds} scenario seeds x {mc.rounds} "
+          f"rounds (a2g channel, markov availability, "
+          f"{scn.num_uavs} relay UAVs) in {mc.wall_s*1e3:.0f} ms vectorized")
+    print(f"{'metric':>22} {'mean':>10} {'std':>9} {'p10':>10} {'p90':>10}")
+    for name in ("final_loss", "mean_active_clients", "total_link_time_s",
+                 "total_link_energy_j", "total_energy_j"):
+        st = s[name]
+        print(f"{name:>22} {st['mean']:>10.3g} {st['std']:>9.3g} "
+              f"{st['p10']:>10.3g} {st['p90']:>10.3g}")

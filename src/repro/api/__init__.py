@@ -17,7 +17,8 @@ from .runtime import (classification_metrics, client_coords,
                       count_sl_step_flops, mission_max_link_s, round_batches,
                       stack_replicas)
 from .spec import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
-                   ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec)
+                   ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec,
+                   ScenarioSpec)
 from .plan import Plan, PlanState, compile_experiment
 
 __all__ = [n for n in dir() if not n.startswith("_")]

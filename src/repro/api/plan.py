@@ -27,25 +27,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.energy import RTX_A5000
+from ..core.link import LinkConfig
 from ..core.split import (SplitStep, apply_stages, cut_index_for_fraction,
                           init_stages, make_fl_round,
-                          make_multi_client_round)
+                          make_multi_client_round, stack_cut_index)
 from ..core.trajectory import TourPlan, plan_tour
-from ..data.partition import partition_non_iid
-from ..data.synthetic import SyntheticPestImages
+from ..data.partition import (partition_dirichlet, partition_iid,
+                              partition_non_iid)
+from ..data.synthetic import SyntheticPestImages, synthetic_tokens
 from ..fleet.engine import (make_fleet_fl_round, make_fleet_sl_round,
                             server_mesh_sizes, shard_server_state,
                             validate_fleet_mesh)
 from ..launch.mesh import make_fleet_mesh, single_device_fleet_mesh
-from ..fleet.hetero import HeteroFleet, assign_cuts_cnn, cnn_split_program
+from ..fleet.hetero import (HeteroFleet, assign_cuts_cnn, cnn_split_program,
+                            lm_split_program)
 from ..fleet.link import FleetLink
 from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
 from ..optim import adamw, init_stacked
+from ..sim.channel import deterministic_rate_bps, sample_rates_bps
+from ..sim.mission import MissionTimeline, rollout_mission
+from ..sim.scenario import availability_init, availability_step
 from .records import RoundRecord
 from .runtime import (classification_metrics, client_coords,
                       client_step_time_s, count_fl_step_flops,
-                      count_sl_step_flops, mission_max_link_s, roofline_s,
-                      round_batches, stack_replicas)
+                      count_sl_step_flops, count_split_step_flops,
+                      mission_max_link_s, roofline_s, round_batches,
+                      stack_replicas)
 from .spec import ExperimentSpec
 
 # time billed to the FL server per round: aggregation only (negligible
@@ -61,6 +68,8 @@ class PlanState:
     rng: np.random.RandomState      # minibatch sampling stream
     dropout_rng: np.random.RandomState
     last_metrics: Optional[dict] = None   # full metric dict of the last eval
+    avail_up: Optional[np.ndarray] = None  # scenario availability (clients,)
+    #                                        up/down state carried per round
 
 
 class Plan:
@@ -70,7 +79,9 @@ class Plan:
 
     def __init__(self, spec: ExperimentSpec, *, mesh, arrays, parts, stages,
                  params0, tour: Optional[TourPlan], cut_of_client,
-                 flops: dict, edges, consts, engine_fns):
+                 flops: dict, edges, consts, engine_fns,
+                 timeline: Optional[MissionTimeline] = None,
+                 serve_dist_m=None, rate_nominal=None):
         self.spec = spec
         self.mesh = mesh
         self.engine_label = f"{spec.engine.kind}/{spec.engine.client_axis}"
@@ -79,17 +90,34 @@ class Plan:
         self.stages = stages
         self.params0 = params0
         self.tour = tour
-        self.rounds_budget = tour.rounds if tour is not None else None
-        self.num_rounds = (min(spec.global_rounds, tour.rounds)
-                           if tour is not None else spec.global_rounds)
+        self.timeline = timeline      # scenario missions (sim.rollout_mission)
+        budget = (timeline.rounds if timeline is not None
+                  else tour.rounds if tour is not None else None)
+        self.rounds_budget = budget
+        self.num_rounds = (min(spec.global_rounds, budget)
+                           if budget is not None else spec.global_rounds)
         self.cut_of_client = list(cut_of_client)
         self.flops = flops            # {"full": f} | {cut: (client, server, sd)}
         self.edges = edges
+        n = spec.clients.num_clients
+        # scenario runtime: serving distances + the nominal (deterministic)
+        # per-client rates the link constants were hoisted at
+        self.serve_dist_m = (np.zeros(n) if serve_dist_m is None
+                             else np.asarray(serve_dist_m))
+        self.rate_nominal = (np.full(n, spec.link_policy.rate_bps)
+                             if rate_nominal is None
+                             else np.asarray(rate_nominal))
+        scn = spec.scenario
+        self._channel = scn.channel if scn is not None else None
+        self._scn_key = (jax.random.PRNGKey(scn.seed)
+                         if scn is not None else None)
+        self._mask_in_engine = _needs_mask(spec)
         # hoisted per-client constants (np arrays over the client axis)
         (self._t_client, self._t_server, self._link_bytes, self._link_time,
          self._link_energy, self._server_base_s) = consts
-        # engine closures: (init_state, run, eval)
-        self._init_state, self._run, self._eval = engine_fns
+        # engine closures: (init_state, run, eval, raw unjitted run —
+        # None for hetero plans, which have no single jittable round)
+        (self._init_state, self._run, self._eval, self._run_raw) = engine_fns
 
     # ---- lifecycle --------------------------------------------------------
 
@@ -97,10 +125,14 @@ class Plan:
         """Fresh run state (per-client model/optimizer stacks, RNG streams).
         The batch stream matches the legacy trainers' (one RandomState
         seeded with ``spec.seed``, one ``choice`` per client per round)."""
+        scn = self.spec.scenario
+        avail_up = (np.asarray(availability_init(self.spec.clients.num_clients))
+                    if scn is not None and scn.needs_mask else None)
         return PlanState(
             round=0, engine_state=self._init_state(),
             rng=np.random.RandomState(self.spec.seed),
-            dropout_rng=np.random.RandomState(self.spec.seed + 1))
+            dropout_rng=np.random.RandomState(self.spec.seed + 1),
+            avail_up=avail_up)
 
     def round_batches(self, state: PlanState):
         """Pre-gathered (clients, local_steps, ...) stacks for one round, in
@@ -113,6 +145,16 @@ class Plan:
         return {"inputs": bx, "targets": by}
 
     def _round_mask(self, state: PlanState) -> Optional[np.ndarray]:
+        scn = self.spec.scenario
+        if scn is not None and scn.needs_mask:
+            # scenario availability trace: jax-native + key-folded per round,
+            # bit-identical to the Monte-Carlo rollout's mask stream
+            key = jax.random.fold_in(
+                jax.random.fold_in(self._scn_key, state.round), 1)
+            mask, up = availability_step(key, jnp.asarray(state.avail_up),
+                                         scn.availability)
+            state.avail_up = np.asarray(up)
+            return np.asarray(mask, np.float32)
         rate = self.spec.clients.dropout_rate
         if rate <= 0.0:
             return None
@@ -121,6 +163,18 @@ class Plan:
         if mask.sum() == 0:          # never drop the whole fleet
             mask[state.dropout_rng.randint(n)] = 1.0
         return mask
+
+    def _round_rate_ratio(self, round_index: int) -> Optional[np.ndarray]:
+        """nominal/sampled channel rate per client for one round (None when
+        no channel is attached — keep the hoisted constants verbatim)."""
+        if self._channel is None:
+            return None
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._scn_key, round_index), 2)
+        rates = sample_rates_bps(key, self._channel,
+                                 jnp.asarray(self.serve_dist_m),
+                                 self.spec.link_policy.rate_bps)
+        return np.asarray(self.rate_nominal / np.asarray(rates))
 
     def run_round(self, state: PlanState, batches=None, *,
                   with_eval: bool = True) -> tuple[PlanState, RoundRecord]:
@@ -145,7 +199,9 @@ class Plan:
             accuracy = float("nan")
         steps = self.spec.local_steps
         uav = 0.0
-        if self.tour is not None:
+        if self.timeline is not None:
+            uav = self.timeline.uav_energy_j(state.round)
+        elif self.tour is not None:
             uav = float(self.tour.e_first if state.round == 0
                         else self.tour.e_per_round)
         t_cli = float(self._t_client[active].sum() * steps)
@@ -153,11 +209,18 @@ class Plan:
                           for c in active))
         t_srv = float(self._t_server[active].sum() * steps
                       + self._server_base_s)
+        # channel-attached scenarios re-bill link time/energy per round at
+        # the sampled rates (constants x nominal/sampled ratio); otherwise
+        # the hoisted constants stand verbatim
+        ratio = self._round_rate_ratio(state.round)
+        l_time, l_energy = self._link_time, self._link_energy
+        if ratio is not None:
+            l_time, l_energy = l_time * ratio, l_energy * ratio
         rec = RoundRecord(
             round=state.round, loss=loss, accuracy=accuracy,
             link_bytes=float(self._link_bytes[active].sum() * steps),
-            link_time_s=float(self._link_time[active].sum() * steps),
-            link_energy_j=float(self._link_energy[active].sum() * steps),
+            link_time_s=float(l_time[active].sum() * steps),
+            link_energy_j=float(l_energy[active].sum() * steps),
             client_time_s=t_cli, client_energy_j=e_cli,
             server_time_s=t_srv,
             server_energy_j=t_srv * RTX_A5000.power_w,
@@ -200,9 +263,22 @@ def _resolve_data(spec: ExperimentSpec, data):
             raise ValueError("DataSpec(kind='arrays') needs data=(x_train, "
                              "y_train, x_test, y_test) at compile time")
         return tuple(np.asarray(a) for a in data)
+    key = jax.random.PRNGKey(spec.seed)
+    if spec.data.kind == "tokens":
+        # synthetic LM stream: inputs are tokens[:, :-1], targets the next
+        # token — the transformer family's data pipeline
+        vocab = spec.model.arch.vocab
+        n_train = spec.data.n_train or max(24 * spec.clients.num_clients, 96)
+        n_test = spec.data.n_test or max(n_train // 4, 32)
+        seq = spec.data.seq_len
+        toks_tr = synthetic_tokens(jax.random.fold_in(key, 0), n_train,
+                                   seq + 1, vocab)
+        toks_te = synthetic_tokens(jax.random.fold_in(key, 1), n_test,
+                                   seq + 1, vocab)
+        return (np.asarray(toks_tr[:, :-1]), np.asarray(toks_tr[:, 1:]),
+                np.asarray(toks_te[:, :-1]), np.asarray(toks_te[:, 1:]))
     gen = SyntheticPestImages(num_classes=spec.model.num_classes,
                               image_size=spec.data.image_size, seed=spec.seed)
-    key = jax.random.PRNGKey(spec.seed)
     n_train = spec.data.n_train or max(24 * spec.clients.num_clients,
                                        12 * spec.model.num_classes)
     n_test = spec.data.n_test or max(n_train // 4, 48)
@@ -212,6 +288,28 @@ def _resolve_data(spec: ExperimentSpec, data):
             np.asarray(x_test), np.asarray(y_test))
 
 
+def _resolve_parts(spec: ExperimentSpec, y_train: np.ndarray) -> list:
+    """Client data partition per ``DataSpec.partition``."""
+    n = spec.clients.num_clients
+    if spec.data.partition == "dirichlet":
+        return partition_dirichlet(y_train, n, alpha=spec.data.dirichlet_alpha,
+                                   seed=spec.seed, min_size=1)
+    if spec.data.partition == "iid":
+        return partition_iid(len(y_train), n, seed=spec.seed)
+    return partition_non_iid(y_train, n, spec.data.classes_per_client,
+                             num_classes=spec.model.num_classes,
+                             seed=spec.seed)
+
+
+def _needs_mask(spec: ExperimentSpec) -> bool:
+    """Whether the compiled engine must accept a per-round client mask
+    (i.i.d. dropout policy, or a stochastic scenario availability trace)."""
+    if spec.clients.dropout_rate > 0:
+        return True
+    scn = spec.scenario
+    return scn is not None and scn.needs_mask
+
+
 def _validate(spec: ExperimentSpec):
     eng = spec.engine
     if eng.kind not in ("fl", "sl"):
@@ -219,12 +317,47 @@ def _validate(spec: ExperimentSpec):
     if eng.client_axis not in ("scan", "vmap", "shard_map"):
         raise ValueError(f"engine.client_axis must be 'scan', 'vmap' or "
                          f"'shard_map', got {eng.client_axis!r}")
-    if spec.model.family != "cnn":
-        raise ValueError(f"unknown model family {spec.model.family!r}; "
-                         "transformer stacks enter via "
-                         "fleet.hetero.arch_split_program (see api/README)")
-    if spec.model.name not in CNN_BUILDERS:
+    if spec.model.family not in ("cnn", "transformer"):
+        raise ValueError(f"unknown model family {spec.model.family!r}")
+    if spec.model.family == "transformer":
+        if spec.model.arch is None:
+            raise ValueError("ModelSpec(family='transformer') needs arch="
+                             "ArchConfig (the stacked attention blocks to "
+                             "split)")
+        if spec.model.arch.n_experts:
+            raise ValueError("MoE stacks can't split through the stacked-"
+                             "block interface (see transformer_block_apply)")
+        if eng.kind != "sl":
+            raise ValueError("the transformer family trains split (sl); the "
+                             "full-model FL baseline is a CNN-family path")
+        if spec.cut_policy.mode != "fraction":
+            raise ValueError("transformer cuts are fraction-placed "
+                             "(stack_cut_index); adaptive per-client cuts "
+                             "are a CNN-stage path for now")
+        if spec.data.kind not in ("tokens",):
+            raise ValueError("transformer specs train on DataSpec("
+                             "kind='tokens')")
+        if spec.data.partition != "iid":
+            raise ValueError("token streams carry no label classes to skew; "
+                             "use DataSpec(partition='iid')")
+        if eng.server_mesh is not None:
+            raise ValueError("server_mesh tier specs are wired for the CNN "
+                             "stage path only; the transformer family would "
+                             "silently replicate the server suffix (plumb "
+                             "fleet_server_pspecs through _compile_sl_stack "
+                             "to lift this)")
+    elif spec.model.name not in CNN_BUILDERS:
         raise ValueError(f"unknown CNN {spec.model.name!r}")
+    if spec.data.kind not in ("synthetic", "arrays", "tokens"):
+        raise ValueError(f"DataSpec.kind must be 'synthetic', 'arrays' or "
+                         f"'tokens', got {spec.data.kind!r}")
+    if spec.data.kind == "tokens" and spec.model.family != "transformer":
+        raise ValueError("DataSpec(kind='tokens') is the transformer "
+                         "family's pipeline; CNN specs train on 'synthetic' "
+                         "or 'arrays'")
+    if spec.data.partition not in ("classes", "dirichlet", "iid"):
+        raise ValueError(f"DataSpec.partition must be 'classes', 'dirichlet' "
+                         f"or 'iid', got {spec.data.partition!r}")
     if spec.cut_policy.mode not in ("fraction", "adaptive"):
         raise ValueError(spec.cut_policy.mode)
     if spec.cut_policy.mode == "adaptive" and not (
@@ -235,6 +368,19 @@ def _validate(spec: ExperimentSpec):
     if spec.clients.dropout_rate > 0 and not eng.is_fleet:
         raise ValueError("client dropout is a fleet policy; use a vmap or "
                          "shard_map client axis")
+    if spec.scenario is not None:
+        spec.scenario.validate(has_mission=spec.mission is not None)
+        if spec.scenario.needs_mask and not eng.is_fleet:
+            raise ValueError("availability traces mask clients per round; "
+                             "they need a fleet engine (vmap or shard_map "
+                             "client axis)")
+        if spec.scenario.needs_mask and spec.clients.dropout_rate > 0:
+            raise ValueError("pick ONE straggler process: ClientSpec."
+                             "dropout_rate (i.i.d.) or the scenario's "
+                             "availability trace")
+        if spec.scenario.num_uavs > spec.clients.num_clients:
+            raise ValueError(f"{spec.scenario.num_uavs} UAVs for "
+                             f"{spec.clients.num_clients} clients")
     if eng.server_mesh is not None:
         if eng.kind != "sl" or not eng.is_fleet:
             raise ValueError("server_mesh shards the SL server suffix; it "
@@ -301,27 +447,48 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
     mesh = _resolve_mesh(spec, mesh)
     arrays = _resolve_data(spec, data)
     x_train, y_train, x_test, y_test = arrays
-    parts = partition_non_iid(y_train, n, spec.data.classes_per_client,
-                              num_classes=spec.model.num_classes,
-                              seed=spec.seed)
+    parts = _resolve_parts(spec, y_train)
     edges = [spec.clients.edge_profiles[i % len(spec.clients.edge_profiles)]
              for i in range(n)]
     link = FleetLink(config=spec.link_policy.config())
+    scn = spec.scenario
 
-    # ---- mission: placement, tour, round budget --------------------------
+    # ---- mission: placement, tour/timeline, round budget -----------------
     tour = None
+    timeline = None
     if spec.mission is not None:
         coords = client_coords(spec.mission.farm_acres, n, seed=spec.seed)
-        tour = plan_tour(coords, np.zeros(2), params=spec.mission.uav,
-                         hover_s_per_stop=spec.mission.hover_s_per_stop,
-                         comm_s_per_stop=spec.mission.comm_s_per_stop)
+        if scn is not None:
+            # scenario missions roll out in time (multi-UAV dispatch, serve
+            # geometry); single-UAV hover is the verbatim plan_tour plan
+            timeline = rollout_mission(
+                coords, np.zeros(2), params=spec.mission.uav,
+                hover_s_per_stop=spec.mission.hover_s_per_stop,
+                comm_s_per_stop=spec.mission.comm_s_per_stop,
+                num_uavs=scn.num_uavs, serve_mode=scn.serve_mode)
+            if scn.num_uavs == 1:
+                tour = timeline.routes[0].tour
+        else:
+            tour = plan_tour(coords, np.zeros(2), params=spec.mission.uav,
+                             hover_s_per_stop=spec.mission.hover_s_per_stop,
+                             comm_s_per_stop=spec.mission.comm_s_per_stop)
 
-    # ---- model + params ---------------------------------------------------
-    stages = CNN_BUILDERS[spec.model.name](spec.model.num_classes)
-    params0 = init_stages(jax.random.PRNGKey(spec.seed), stages)
-    sample_x = jnp.asarray(x_train[:spec.batch_size])
-    sample_y = jnp.asarray(y_train[:spec.batch_size])
-    x_test_j = jnp.asarray(x_test)
+    # ---- channel: nominal per-client rates -------------------------------
+    # link constants are hoisted at the channel's *deterministic* rate; the
+    # per-round stochastic draw scales them by nominal/sampled
+    serve_dist = (timeline.serve_dist_m if timeline is not None
+                  else np.zeros(n))
+    rate_nominal = np.full(n, spec.link_policy.rate_bps)
+    if scn is not None and scn.channel is not None:
+        rate_nominal = np.asarray(deterministic_rate_bps(
+            scn.channel, jnp.asarray(serve_dist),
+            spec.link_policy.rate_bps), dtype=np.float64)
+
+    def client_link(cid: int) -> FleetLink:
+        lp = spec.link_policy
+        return FleetLink(config=LinkConfig(rate_bps=float(rate_nominal[cid]),
+                                           compress=lp.compress,
+                                           radio_power_w=lp.radio_power_w))
 
     # ---- per-client constants (filled per engine below) ------------------
     t_client = np.zeros(n)
@@ -331,6 +498,41 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
     link_energy = np.zeros(n)
     server_base_s = 0.0
     flops: dict = {}
+
+    if spec.model.family == "transformer":
+        cfg = spec.model.arch
+        k = stack_cut_index(cfg.n_layers, spec.cut_policy.fraction)
+        cut_of_client = [k] * n
+        prog = lm_split_program(cfg, jax.random.PRNGKey(spec.seed), k,
+                                link_boundary=link.boundary())
+        sample_bx = jnp.asarray(x_train[:spec.batch_size])
+        sample_by = jnp.asarray(y_train[:spec.batch_size])
+        fl_client, fl_server, smashed_sd = count_split_step_flops(
+            prog.step, prog.params_c0, prog.params_s0, sample_bx, sample_by)
+        flops[k] = (fl_client, fl_server, smashed_sd)
+        for cid in range(n):
+            lc = client_link(cid)
+            t_client[cid] = client_step_time_s(fl_client, edges[cid])
+            t_server[cid] = roofline_s(fl_server, RTX_A5000)
+            link_bytes[cid] = lc.step_wire_bytes(smashed_sd)
+            link_time[cid] = lc.step_time_s(smashed_sd)
+            link_energy[cid] = lc.step_energy_j(smashed_sd)
+        engine_fns = _compile_sl_stack(spec, mesh, prog,
+                                       jnp.asarray(x_test), y_test)
+        consts = (t_client, t_server, link_bytes, link_time, link_energy,
+                  server_base_s)
+        return Plan(spec, mesh=mesh, arrays=arrays, parts=parts, stages=None,
+                    params0=(prog.params_c0, prog.params_s0), tour=tour,
+                    cut_of_client=cut_of_client, flops=flops, edges=edges,
+                    consts=consts, engine_fns=engine_fns, timeline=timeline,
+                    serve_dist_m=serve_dist, rate_nominal=rate_nominal)
+
+    # ---- model + params ---------------------------------------------------
+    stages = CNN_BUILDERS[spec.model.name](spec.model.num_classes)
+    params0 = init_stages(jax.random.PRNGKey(spec.seed), stages)
+    sample_x = jnp.asarray(x_train[:spec.batch_size])
+    sample_y = jnp.asarray(y_train[:spec.batch_size])
+    x_test_j = jnp.asarray(x_test)
 
     if spec.engine.kind == "fl":
         cut_of_client: list[int] = []
@@ -343,7 +545,8 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
                                  y_test)
     else:
         # cut assignment: one fraction-derived cut, or per-client adaptive
-        # cuts under the (optionally mission-derived) link deadline
+        # cuts under the (optionally mission-derived) link deadline checked
+        # against each client's nominal channel rate
         max_link_s = spec.cut_policy.max_link_s
         if max_link_s is None and spec.mission is not None:
             max_link_s = mission_max_link_s(spec.mission.hover_s_per_stop,
@@ -352,7 +555,7 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
         if spec.cut_policy.mode == "adaptive":
             cut_of_client = assign_cuts_cnn(
                 stages, params0, sample_x, edges=edges,
-                links=[spec.link_policy.config()] * n,
+                links=[client_link(c).config for c in range(n)],
                 min_client_layers=spec.cut_policy.min_client_layers,
                 max_link_s=max_link_s)
         else:
@@ -369,11 +572,12 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
                 cs, cp, ss, sp, sample_x, sample_y)
             flops[k] = (fl_client, fl_server, smashed_sd)
             for cid in ids:
+                lc = client_link(cid)
                 t_client[cid] = client_step_time_s(fl_client, edges[cid])
                 t_server[cid] = roofline_s(fl_server, RTX_A5000)
-                link_bytes[cid] = link.step_wire_bytes(smashed_sd)
-                link_time[cid] = link.step_time_s(smashed_sd)
-                link_energy[cid] = link.step_energy_j(smashed_sd)
+                link_bytes[cid] = lc.step_wire_bytes(smashed_sd)
+                link_time[cid] = lc.step_time_s(smashed_sd)
+                link_energy[cid] = lc.step_energy_j(smashed_sd)
         if spec.engine.client_axis == "scan":
             engine_fns = _compile_sl_scan(spec, stages, params0,
                                           cut_of_client[0], link, x_test_j,
@@ -388,12 +592,29 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
     return Plan(spec, mesh=mesh, arrays=arrays, parts=parts, stages=stages,
                 params0=params0, tour=tour, cut_of_client=cut_of_client,
                 flops=flops, edges=edges, consts=consts,
-                engine_fns=engine_fns)
+                engine_fns=engine_fns, timeline=timeline,
+                serve_dist_m=serve_dist, rate_nominal=rate_nominal)
 
 
 # ---------------------------------------------------------------------------
 # per-engine lowering: (init_state, run(state, batches, mask), eval(state))
 # ---------------------------------------------------------------------------
+
+def _mask_runner(round_fn, masked: bool, n: int):
+    """Uniform ``run(state, batches, mask)`` closure over a round builder
+    that takes a trailing mask only when built mask-aware."""
+    def run(engine_state, batches, mask):
+        if masked:
+            m = (jnp.ones(n, jnp.float32) if mask is None
+                 else jnp.asarray(mask))
+            *state, losses = round_fn(*engine_state, batches, m)
+        else:
+            assert mask is None, \
+                "mask fed to a mask-free engine (validated at compile)"
+            *state, losses = round_fn(*engine_state, batches)
+        return tuple(state), losses
+    return run
+
 
 def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
     opt = adamw(spec.lr)
@@ -404,24 +625,28 @@ def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
             lambda p: cross_entropy_loss(apply_stages(stages, p, bx), by))(
                 params)
 
-    dropout = spec.clients.dropout_rate > 0
+    masked = _needs_mask(spec)
     if spec.engine.is_fleet:
-        round_fn = jax.jit(make_fleet_fl_round(
-            grad_fn, opt, mesh=mesh, client_dropout=dropout,
-            client_axis=spec.engine.client_axis), donate_argnums=(0,))
+        raw_fn = make_fleet_fl_round(grad_fn, opt, mesh=mesh,
+                                     client_dropout=masked,
+                                     client_axis=spec.engine.client_axis)
     else:
-        round_fn = jax.jit(make_fl_round(grad_fn, opt, client_axis="scan"),
-                           donate_argnums=(0,))
+        raw_fn = make_fl_round(grad_fn, opt, client_axis="scan")
+    round_fn = jax.jit(raw_fn, donate_argnums=(0,))
 
     def init_state():
         return jax.tree_util.tree_map(jnp.copy, params0)
 
-    def run(engine_state, batches, mask):
-        if dropout:
-            m = (jnp.ones(spec.clients.num_clients, jnp.float32)
-                 if mask is None else jnp.asarray(mask))
-            return round_fn(engine_state, batches, m)
-        return round_fn(engine_state, batches)
+    def make_run(fn):
+        def run(engine_state, batches, mask):
+            if masked:
+                m = (jnp.ones(spec.clients.num_clients, jnp.float32)
+                     if mask is None else jnp.asarray(mask))
+                return fn(engine_state, batches, m)
+            assert mask is None, \
+                "mask fed to a mask-free engine (validated at compile)"
+            return fn(engine_state, batches)
+        return run
 
     eval_logits = jax.jit(lambda p: apply_stages(stages, p, x_test_j))
 
@@ -429,7 +654,7 @@ def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
         return classification_metrics(eval_logits(engine_state), y_test,
                                       spec.model.num_classes)
 
-    return init_state, run, evaluate
+    return init_state, make_run(round_fn), evaluate, make_run(raw_fn)
 
 
 def _eval_prefix(client_stack, dropout: bool):
@@ -461,20 +686,14 @@ def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test):
     cs, cp0, ss, sp, step = _split_step(stages, params0, k, link)
     opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
     n = spec.clients.num_clients
-    round_fn = jax.jit(
-        make_multi_client_round(step, opt_c, opt_s,
-                                local_rounds=spec.local_steps),
-        donate_argnums=(0, 1, 2, 3))
+    raw_fn = make_multi_client_round(step, opt_c, opt_s,
+                                     local_rounds=spec.local_steps)
+    round_fn = jax.jit(raw_fn, donate_argnums=(0, 1, 2, 3))
 
     def init_state():
         state = (stack_replicas(cp0, n), sp, init_stacked(opt_c, cp0, n),
                  opt_s.init(sp))
         return jax.tree_util.tree_map(jnp.copy, state)
-
-    def run(engine_state, batches, mask):
-        assert mask is None, "dropout is fleet-only (validated at compile)"
-        *state, losses = round_fn(*engine_state, batches)
-        return tuple(state), losses
 
     eval_logits = jax.jit(
         lambda cp, sp_: apply_stages(ss, sp_, apply_stages(cs, cp, x_test_j)))
@@ -485,7 +704,8 @@ def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test):
         return classification_metrics(eval_logits(prefix, sp_), y_test,
                                       spec.model.num_classes)
 
-    return init_state, run, evaluate
+    return (init_state, _mask_runner(round_fn, False, n), evaluate,
+            _mask_runner(raw_fn, False, n))
 
 
 def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
@@ -498,7 +718,7 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
     specs shard the server suffix (params + optimizer moments) fsdp x tp
     while the client axis shards over ``data``."""
     opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
-    dropout = spec.clients.dropout_rate > 0
+    dropout = _needs_mask(spec)
     n = spec.clients.num_clients
     client_axis = spec.engine.client_axis
     fsdp, tp = server_mesh_sizes(mesh)
@@ -512,14 +732,13 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
         cs, cp0, ss, sp, step = _split_step(stages, params0, k, link)
         sps_specs = (server_pspecs_fn(sp, mesh)
                      if server_pspecs_fn is not None else None)
-        round_fn = jax.jit(
-            make_fleet_sl_round(step, opt_c, opt_s,
-                                local_rounds=spec.local_steps, mesh=mesh,
-                                server_reduce=spec.engine.server_reduce,
-                                client_dropout=dropout,
-                                client_axis=client_axis,
-                                server_pspecs=sps_specs),
-            donate_argnums=(0, 1, 2, 3))
+        raw_fn = make_fleet_sl_round(step, opt_c, opt_s,
+                                     local_rounds=spec.local_steps, mesh=mesh,
+                                     server_reduce=spec.engine.server_reduce,
+                                     client_dropout=dropout,
+                                     client_axis=client_axis,
+                                     server_pspecs=sps_specs)
+        round_fn = jax.jit(raw_fn, donate_argnums=(0, 1, 2, 3))
 
         def init_state():
             state = (stack_replicas(cp0, n), sp,
@@ -536,15 +755,6 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
                 state = (pc, ps, oc, os_)
             return state
 
-        def run(engine_state, batches, mask):
-            if dropout:
-                m = (jnp.ones(n, jnp.float32) if mask is None
-                     else jnp.asarray(mask))
-                *state, losses = round_fn(*engine_state, batches, m)
-            else:
-                *state, losses = round_fn(*engine_state, batches)
-            return tuple(state), losses
-
         eval_logits = jax.jit(
             lambda cp, sp_: apply_stages(ss, sp_,
                                          apply_stages(cs, cp, x_test_j)))
@@ -555,7 +765,8 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
             return classification_metrics(eval_logits(prefix, sp_), y_test,
                                           spec.model.num_classes)
 
-        return init_state, run, evaluate
+        return (init_state, _mask_runner(round_fn, dropout, n), evaluate,
+                _mask_runner(raw_fn, dropout, n))
 
     def build_program(k):
         return cnn_split_program(stages, params0, k,
@@ -598,4 +809,46 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
         return classification_metrics(logits / n, y_test,
                                       spec.model.num_classes)
 
-    return init_state, run, evaluate
+    # hetero rounds dispatch per bucket on the host: no single jittable
+    # round exists, so Monte-Carlo vectorization is unsupported (raw=None)
+    return init_state, run, evaluate, None
+
+
+def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
+    """Transformer-family lowering: the ``lm_split_program`` step through
+    the sequential (scan) or fleet (vmap/shard_map) SL engines — same
+    wiring as the CNN paths, token logits evaluated over all positions."""
+    opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
+    masked = _needs_mask(spec)
+    n = spec.clients.num_clients
+    vocab = spec.model.arch.vocab
+    if spec.engine.client_axis == "scan":
+        raw_fn = make_multi_client_round(prog.step, opt_c, opt_s,
+                                         local_rounds=spec.local_steps)
+    else:
+        raw_fn = make_fleet_sl_round(prog.step, opt_c, opt_s,
+                                     local_rounds=spec.local_steps, mesh=mesh,
+                                     server_reduce=spec.engine.server_reduce,
+                                     client_dropout=masked,
+                                     client_axis=spec.engine.client_axis)
+    round_fn = jax.jit(raw_fn, donate_argnums=(0, 1, 2, 3))
+
+    def init_state():
+        state = (stack_replicas(prog.params_c0, n), prog.params_s0,
+                 init_stacked(opt_c, prog.params_c0, n),
+                 opt_s.init(prog.params_s0))
+        return jax.tree_util.tree_map(jnp.copy, state)
+
+    eval_logits = jax.jit(
+        lambda cp, sp_: prog.server_logits(
+            sp_, prog.step.client_fwd(cp, x_test_j)))
+
+    def evaluate(engine_state):
+        client_stack, sp_, _, _ = engine_state
+        prefix = _eval_prefix(client_stack, masked)
+        logits = eval_logits(prefix, sp_)
+        return classification_metrics(logits.reshape(-1, vocab),
+                                      np.asarray(y_test).reshape(-1), vocab)
+
+    return (init_state, _mask_runner(round_fn, masked, n), evaluate,
+            _mask_runner(raw_fn, masked, n))

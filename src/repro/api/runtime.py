@@ -144,6 +144,28 @@ def count_sl_step_flops(cs, cp, ss, sp, bx, by):
     return client_fl, server_fl, smashed_sd
 
 
+def count_split_step_flops(step, cp, sp, bx, by):
+    """``count_sl_step_flops`` generalized to any ``SplitStep`` (transformer
+    stacks included): same symmetric accounting, driven through the step's
+    own ``client_fwd`` / ``server_loss`` instead of CNN stage lists. The
+    link boundary is excluded on both sides (byte accounting prices it).
+    Returns (client_flops, server_flops, smashed_shape_dtype_struct)."""
+    smashed_sd = jax.eval_shape(step.client_fwd, cp, bx)
+    cut_grad = jnp.zeros(smashed_sd.shape, smashed_sd.dtype)
+
+    def client_step(p, xx, ct):
+        smashed, vjp = jax.vjp(lambda q: step.client_fwd(q, xx), p)
+        return smashed, vjp(ct)
+
+    def server_step(p, sm, yy):
+        return jax.grad(
+            lambda q, s: step.server_loss(q, s, yy)[0], argnums=(0, 1))(p, sm)
+
+    client_fl = flops_of(client_step, cp, bx, cut_grad)
+    server_fl = flops_of(server_step, sp, cut_grad, by)
+    return client_fl, server_fl, smashed_sd
+
+
 # ---------------------------------------------------------------------------
 # metrics (paper Fig. 3 radar: Acc / Precision / Recall / F1 / MCC)
 # ---------------------------------------------------------------------------

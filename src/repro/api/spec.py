@@ -43,29 +43,52 @@ Policies, not code paths:
   * ``ClientSpec.dropout_rate`` — EPSL/P3SL-style straggler masking: each
     round a Bernoulli mask drops clients from training, aggregation and
     energy billing (fleet engines only).
+  * ``ExperimentSpec.scenario`` (``repro.sim.ScenarioSpec``) — the
+    stochastic environment: A2G channel draws re-bill the link per round,
+    availability traces drive the dropout masks, multi-UAV dispatch and
+    serve geometry reshape the mission. The degenerate scenario reproduces
+    the idealized records exactly (see ``repro.sim``).
+
+``ModelSpec(family="transformer", arch=ArchConfig)`` swaps the CNN stage
+lists for a split LM over real stacked attention blocks
+(``fleet.hetero.lm_split_program``) trained on ``DataSpec(kind="tokens")``
+streams; ``DataSpec.partition`` picks the client skew (classes /
+dirichlet / iid).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
 
+from ..configs.base import ArchConfig
 from ..core.energy import HardwareProfile, JETSON_AGX_ORIN
 from ..core.link import LinkConfig
 from ..core.uav_energy import DEFAULT_UAV, UAVParams
+from ..sim.scenario import ScenarioSpec  # noqa: F401  (re-exported field type)
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelSpec:
-    family: str = "cnn"          # "cnn" (Stage lists) — see api/README.md
-    name: str = "tinycnn"        # key into models.cnn.CNN_BUILDERS
-    num_classes: int = 12
+    family: str = "cnn"          # "cnn" (Stage lists) | "transformer"
+    name: str = "tinycnn"        # cnn: key into models.cnn.CNN_BUILDERS
+    num_classes: int = 12        # cnn label space (transformers use arch.vocab)
+    # transformer family: the ArchConfig whose stacked attention blocks are
+    # split at the CutPolicy fraction (fleet.hetero.lm_split_program — embed
+    # + prefix blocks on the client, suffix blocks + LM head on the server)
+    arch: Optional[ArchConfig] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class DataSpec:
-    kind: str = "synthetic"      # "synthetic" | "arrays" (pass data= at compile)
+    kind: str = "synthetic"      # "synthetic" | "arrays" (pass data= at
+    #                              compile) | "tokens" (synthetic LM stream)
     image_size: int = 32
     classes_per_client: int = 3  # non-IID shards (paper §IV-C)
+    # client partition: "classes" (paper §IV-C fixed classes-per-client) |
+    # "dirichlet" (label-skew, Dirichlet(alpha) per class) | "iid"
+    partition: str = "classes"
+    dirichlet_alpha: float = 0.5
+    seq_len: int = 32            # tokens kind: sequence length per sample
     n_train: int = 0             # 0 -> heuristic from fleet size/classes
     n_test: int = 0
     shrink_batches: bool = False  # cap batch at smallest partition (legacy
@@ -140,6 +163,10 @@ class ExperimentSpec:
     link_policy: LinkPolicy = LinkPolicy()
     engine: EngineSpec = EngineSpec()
     mission: Optional[MissionSpec] = None   # None -> no tour/budget/UAV terms
+    # stochastic environment (repro.sim): A2G channel draws, availability
+    # traces, multi-UAV dispatch. None keeps the idealized constants; the
+    # degenerate scenario reproduces them exactly (sim.degenerate_scenario)
+    scenario: Optional[ScenarioSpec] = None
     global_rounds: int = 4       # cap; a mission's UAV budget may cut it short
     local_steps: int = 2
     batch_size: int = 8

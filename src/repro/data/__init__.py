@@ -1,7 +1,7 @@
 from .synthetic import (SyntheticPestImages, synthetic_tokens, PEST_CLASSES)
-from .partition import partition_non_iid, partition_dirichlet
+from .partition import partition_non_iid, partition_dirichlet, partition_iid
 from .pipeline import BatchIterator, shard_batch
 
 __all__ = ["SyntheticPestImages", "synthetic_tokens", "PEST_CLASSES",
-           "partition_non_iid", "partition_dirichlet", "BatchIterator",
-           "shard_batch"]
+           "partition_non_iid", "partition_dirichlet", "partition_iid",
+           "BatchIterator", "shard_batch"]

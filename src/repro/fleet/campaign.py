@@ -65,6 +65,10 @@ class CampaignConfig:
     edge_profiles: tuple[HardwareProfile, ...] = (JETSON_AGX_ORIN,)
     # P3SL-style straggler masking: per-round client dropout probability
     dropout_rate: float = 0.0
+    # stochastic environment (repro.sim.ScenarioSpec): A2G channel draws,
+    # availability traces, multi-UAV dispatch; None keeps the idealized
+    # constant-rate / always-available campaign
+    scenario: object = None
     seed: int = 0
 
 
@@ -115,5 +119,6 @@ def campaign_spec(cfg: CampaignConfig):
         mission=MissionSpec(farm_acres=cfg.farm_acres, uav=cfg.uav,
                             hover_s_per_stop=cfg.hover_s_per_stop,
                             comm_s_per_stop=cfg.comm_s_per_stop),
+        scenario=cfg.scenario,
         global_rounds=cfg.global_rounds, local_steps=cfg.local_steps,
         batch_size=cfg.batch_size, lr=cfg.lr, seed=cfg.seed)

@@ -181,6 +181,76 @@ def arch_split_program(cfg, key, k: int, *, loss_fn: Callable,
                                loss_fn=loss_fn, link_boundary=link_boundary)
 
 
+@dataclasses.dataclass(frozen=True)
+class LMSplitProgram:
+    """A trainable split *language model*: embed + block stack + LM head.
+
+    Extends ``SplitProgram``'s contract with the pieces a real token
+    pipeline needs — the client tier owns the embedding (raw tokens never
+    cross the link, the split-learning privacy floor), the server tier owns
+    its block slice plus the output head, and ``server_logits`` exposes the
+    full forward for held-out evaluation.
+    """
+    step: SplitStep
+    params_c0: object             # {"embed": (V, d), "blocks": client stack}
+    params_s0: object             # {"blocks": server stack, "head": (d, V)}
+    cut_index: int
+    server_logits: Callable       # (params_s, smashed) -> (B, S, V)
+
+
+def lm_split_program(cfg, key, k: int, *,
+                     link_boundary: Optional[Callable] = None,
+                     window="cfg") -> LMSplitProgram:
+    """Split a next-token LM built on a real transformer ``ArchConfig``
+    stack (``models.transformer.group_apply`` blocks) at layer ``k``.
+
+    The differentiable program is: client = embed + first ``k`` blocks
+    (smashed tensor: the (B, S, d_model) residual stream at the cut);
+    server = remaining blocks + output head + next-token cross entropy.
+    Batches are ``{"inputs": tokens (B, S), "targets": next tokens (B, S)}``
+    — what ``repro.api``'s token data pipeline feeds (``ModelSpec(family=
+    "transformer")``).
+    """
+    from ..models.transformer import GroupSpec, group_init
+
+    if not 1 <= k <= cfg.n_layers - 1:
+        raise ValueError(f"cut {k} outside (0, {cfg.n_layers})")
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    stacked = group_init(k_blocks, cfg, GroupSpec("attn", cfg.n_layers, 0))
+    blocks_c, blocks_s = split_stack(stacked, k)
+    scale = 0.02
+    embed = scale * jax.random.normal(k_embed, (cfg.vocab, cfg.d_model),
+                                      jnp.float32)
+    head = scale * jax.random.normal(k_head, (cfg.d_model, cfg.vocab),
+                                     jnp.float32)
+    block_apply = transformer_block_apply(cfg, window=window)
+
+    def run_blocks(stack, h):
+        def body(h, blk):
+            return block_apply(blk, h), None
+        h, _ = jax.lax.scan(body, h, stack)
+        return h
+
+    def client_fwd(pc, tokens):
+        return run_blocks(pc["blocks"], pc["embed"][tokens])
+
+    def server_logits(ps, smashed):
+        return run_blocks(ps["blocks"], smashed) @ ps["head"]
+
+    def server_loss(ps, smashed, targets):
+        logits = server_logits(ps, smashed)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return jnp.mean(nll), {}
+
+    step = SplitStep(client_fwd=client_fwd, server_loss=server_loss,
+                     link_constraint=link_boundary)
+    return LMSplitProgram(step=step,
+                          params_c0={"embed": embed, "blocks": blocks_c},
+                          params_s0={"blocks": blocks_s, "head": head},
+                          cut_index=k, server_logits=server_logits)
+
+
 def stack_split_program(stacked_params, k: int, *, block_apply: Callable,
                         loss_fn: Callable,
                         link_boundary: Optional[Callable] = None) -> SplitProgram:

@@ -1,0 +1,17 @@
+"""``repro.sim`` — stochastic mission & channel scenarios over the engines.
+
+``ScenarioSpec`` (channel + availability + mission shape) rides on
+``repro.api.ExperimentSpec``; ``compile_experiment`` lowers it so channel
+draws drive the per-round link bill and availability traces drive the
+fleet dropout masks. ``run_monte_carlo`` sweeps N scenario seeds in one
+jitted vmapped rollout. The deterministic corner (``degenerate_scenario``)
+reproduces the idealized campaign records exactly.
+"""
+from .channel import (ChannelParams, deterministic_rate_bps, path_loss_db,
+                      sample_rates_bps, slant_distance_m)
+from .scenario import (AvailabilityParams, ScenarioSpec, availability_init,
+                       availability_step, degenerate_scenario)
+from .mission import MissionTimeline, UavRoute, rollout_mission
+from .monte_carlo import MonteCarloResult, run_monte_carlo
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,122 @@
+"""Stochastic air-to-ground channel — per-client per-round achievable rate.
+
+Replaces the constant ``LinkPolicy.rate_bps`` idealization with the standard
+UAV-relay link budget (Ninkovic et al., 2024 observe A2G rates vary strongly
+with UAV position and fading):
+
+    PL(d)  = PL_0 + 10 * alpha * log10(d / 1 m)          log-distance path loss
+    X_sh   ~ N(0, sigma_sh^2)  [dB]                      log-normal shadowing
+    |h|^2  ~ Exp(1)                                      Rayleigh fast fading
+    SNR    = P_tx * 10^(-(PL + X_sh)/10) * |h|^2 / N_0
+    R      = B * log2(1 + SNR)                           Shannon rate [bit/s]
+
+with ``d`` the 3D slant distance between the UAV's serving waypoint and the
+edge device. Everything is jax-native and shape-polymorphic: rates broadcast
+over a (clients,) distance vector, fold a PRNG key per round, and ``vmap``
+over Monte-Carlo seeds (``repro.sim.monte_carlo``).
+
+Two kinds:
+
+  * ``"a2g"``      — the model above. With ``shadowing_sigma_db=0`` and
+                     ``fading='none'`` it is fully deterministic (distance-
+                     dependent only) — the degenerate corner the equivalence
+                     tests pin.
+  * ``"constant"`` — every draw returns the nominal link-policy rate. This is
+                     today's idealization expressed inside the new subsystem,
+                     so existing campaign numbers are a special case.
+
+The energy accounting consumes rates as a *ratio*: per-round link time/energy
+= (hoisted per-step constant at the nominal rate) x (nominal / sampled rate).
+In the deterministic corner the ratio is exactly 1.0, so the legacy bill is
+reproduced bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelParams:
+    """A2G link-budget parameters (defaults: 2.4 GHz-ish rural low-altitude)."""
+    kind: str = "a2g"              # "a2g" | "constant"
+    ref_loss_db: float = 40.0      # PL_0 at d0 = 1 m
+    path_loss_exp: float = 2.2     # alpha (LoS-dominated air-to-ground)
+    shadowing_sigma_db: float = 4.0
+    fading: str = "rayleigh"       # "none" | "rayleigh"
+    tx_power_dbm: float = 20.0
+    noise_dbm: float = -96.0       # noise floor over `bandwidth_hz`
+    bandwidth_hz: float = 20e6
+    min_rate_bps: float = 1e4      # floor: a deep fade stalls, never divides by 0
+
+    @property
+    def is_stochastic(self) -> bool:
+        return self.kind == "a2g" and (self.shadowing_sigma_db > 0.0
+                                       or self.fading != "none")
+
+    def validate(self) -> None:
+        if self.kind not in ("a2g", "constant"):
+            raise ValueError(f"channel kind must be 'a2g' or 'constant', "
+                             f"got {self.kind!r}")
+        if self.fading not in ("none", "rayleigh"):
+            raise ValueError(f"fading must be 'none' or 'rayleigh', "
+                             f"got {self.fading!r}")
+        if self.shadowing_sigma_db < 0:
+            raise ValueError("shadowing_sigma_db must be >= 0")
+
+
+def slant_distance_m(ground_m, altitude_m):
+    """3D UAV<->device distance from ground offset + flight altitude."""
+    return jnp.sqrt(jnp.square(ground_m) + altitude_m ** 2)
+
+
+def path_loss_db(params: ChannelParams, dist_m):
+    d = jnp.maximum(jnp.asarray(dist_m, jnp.float32), 1.0)
+    return params.ref_loss_db + 10.0 * params.path_loss_exp * jnp.log10(d)
+
+
+def _shannon_rate_bps(params: ChannelParams, snr_db, fade_power):
+    snr = jnp.power(10.0, snr_db / 10.0) * fade_power
+    rate = params.bandwidth_hz * jnp.log2(1.0 + snr)
+    return jnp.maximum(rate, params.min_rate_bps)
+
+
+def deterministic_rate_bps(params: ChannelParams, dist_m,
+                           nominal_rate_bps: float):
+    """The channel's deterministic component: shadowing/fading stripped.
+
+    ``"constant"`` channels return the nominal (link-policy) rate everywhere;
+    ``"a2g"`` returns the pure log-distance Shannon rate — strictly
+    decreasing in distance. This is the rate the compile-time link constants
+    (and adaptive-cut deadlines) are hoisted at.
+    """
+    dist_m = jnp.asarray(dist_m, jnp.float32)
+    if params.kind == "constant":
+        return jnp.full(dist_m.shape, nominal_rate_bps, jnp.float32)
+    snr_db = params.tx_power_dbm - path_loss_db(params, dist_m) \
+        - params.noise_dbm
+    return _shannon_rate_bps(params, snr_db, 1.0)
+
+
+def sample_rates_bps(key, params: ChannelParams, dist_m,
+                     nominal_rate_bps: float):
+    """One draw of per-client achievable rates (same shape as ``dist_m``).
+
+    Deterministic channels (``"constant"``, or ``"a2g"`` with zero shadowing
+    and no fading) bypass the RNG entirely and return the deterministic rate
+    bit-for-bit — the degenerate-equivalence contract.
+    """
+    if not params.is_stochastic:
+        return deterministic_rate_bps(params, dist_m, nominal_rate_bps)
+    dist_m = jnp.asarray(dist_m, jnp.float32)
+    k_sh, k_fd = jax.random.split(key)
+    snr_db = params.tx_power_dbm - path_loss_db(params, dist_m) \
+        - params.noise_dbm
+    if params.shadowing_sigma_db > 0.0:
+        snr_db = snr_db - params.shadowing_sigma_db * jax.random.normal(
+            k_sh, dist_m.shape)
+    fade = (jax.random.exponential(k_fd, dist_m.shape)
+            if params.fading == "rayleigh" else 1.0)
+    return _shannon_rate_bps(params, snr_db, fade)

@@ -1,0 +1,265 @@
+"""Vectorized Monte-Carlo campaign sweeps: one jitted ``vmap`` over seeds.
+
+A compiled ``Plan`` runs ONE realization of its scenario (one channel /
+availability stream). Campaign questions are distributional — "what is the
+spread of mission energy and final loss over fading and outage draws?" —
+and answering them with a Python loop over campaigns pays per-(seed, round)
+dispatch overhead exactly like the pre-fleet host loops paid per-step.
+
+``run_monte_carlo(plan, num_seeds)`` instead lowers the whole sweep to one
+XLA program: a per-seed rollout (``lax.scan`` over rounds — engine round,
+availability mask, channel-rate draw, energy/link bill) ``vmap``-ed over
+the seed axis and jitted once. ``mode="loop"`` keeps the per-round Python
+dispatch as the measured baseline (``benchmarks/bench_engine_perf.py``
+logs the ratio; the acceptance gate is >= 3x at 16 seeds on XLA:CPU).
+
+Per-seed outputs are the numeric ``RoundRecord`` fields stacked as
+(seeds, rounds) arrays; ``records_for_seed`` re-assembles a seed's record
+stream (accuracy is NaN — held-out eval inside a vmapped sweep would
+dominate the rollout; evaluate the seeds you care about with the plan).
+
+Supported plans: any single-engine plan (fl/sl x scan/vmap/shard_map,
+homogeneous cut). Hetero-bucketed plans dispatch per bucket on the host
+and have no single jittable round — ``run_monte_carlo`` raises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .channel import sample_rates_bps
+from .scenario import (AvailabilityParams, ScenarioSpec, availability_init,
+                       availability_step)
+
+_STATS = ("mean", "std", "min", "max", "p10", "p90")
+
+
+def _stats(v: np.ndarray) -> dict:
+    return {"mean": float(v.mean()), "std": float(v.std()),
+            "min": float(v.min()), "max": float(v.max()),
+            "p10": float(np.percentile(v, 10)),
+            "p90": float(np.percentile(v, 90))}
+
+
+@dataclasses.dataclass
+class MonteCarloResult:
+    """Per-seed (seeds, rounds) stacks of the RoundRecord numeric fields."""
+    stacks: dict
+    num_seeds: int
+    rounds: int
+    engine: str
+    mode: str                   # "vmap" | "loop"
+    wall_s: float               # rollout wall time (post-compile)
+
+    def records_for_seed(self, i: int) -> list:
+        from ..api.records import RoundRecord
+        s = self.stacks
+        return [RoundRecord(
+            round=r, loss=float(s["loss"][i, r]), accuracy=float("nan"),
+            link_bytes=float(s["link_bytes"][i, r]),
+            link_time_s=float(s["link_time_s"][i, r]),
+            link_energy_j=float(s["link_energy_j"][i, r]),
+            client_time_s=float(s["client_time_s"][i, r]),
+            client_energy_j=float(s["client_energy_j"][i, r]),
+            server_time_s=float(s["server_time_s"][i, r]),
+            server_energy_j=float(s["server_energy_j"][i, r]),
+            uav_energy_j=float(s["uav_energy_j"][i, r]),
+            active_clients=int(s["active_clients"][i, r]),
+            engine=self.engine) for r in range(self.rounds)]
+
+    def summary(self) -> dict:
+        """Across-seed statistics of campaign totals + the final-round loss."""
+        s = self.stacks
+        total_energy = (s["client_energy_j"] + s["server_energy_j"]
+                        + s["link_energy_j"] + s["uav_energy_j"]).sum(axis=1)
+        return {
+            "num_seeds": self.num_seeds, "rounds": self.rounds,
+            "mode": self.mode, "engine": self.engine,
+            "final_loss": _stats(s["loss"][:, -1]),
+            "mean_active_clients": _stats(s["active_clients"].mean(axis=1)),
+            "total_link_bytes": _stats(s["link_bytes"].sum(axis=1)),
+            "total_link_time_s": _stats(s["link_time_s"].sum(axis=1)),
+            "total_link_energy_j": _stats(s["link_energy_j"].sum(axis=1)),
+            "total_client_energy_j": _stats(s["client_energy_j"].sum(axis=1)),
+            "total_energy_j": _stats(total_energy),
+        }
+
+
+def _mc_context(plan):
+    """Hoisted per-client constants + scenario knobs, as jnp arrays."""
+    if getattr(plan, "_run_raw", None) is None:
+        raise ValueError("Monte-Carlo rollouts need a single compiled engine "
+                         "round; hetero-bucketed plans dispatch per bucket "
+                         "on the host (run those seeds with plan.run())")
+    spec = plan.spec
+    scn = spec.scenario or ScenarioSpec()
+    n = spec.clients.num_clients
+    from ..core.energy import RTX_A5000
+    ctx = {
+        "n": n, "steps": spec.local_steps, "kind": spec.engine.kind,
+        "needs_mask": plan._mask_in_engine,
+        # a plain ClientSpec.dropout_rate is the i.i.d. special case of an
+        # availability trace — honor it per seed as one
+        "avail": (scn.availability if scn.needs_mask
+                  else AvailabilityParams(kind="bernoulli",
+                                          p_drop=spec.clients.dropout_rate)
+                  if spec.clients.dropout_rate > 0
+                  else AvailabilityParams(kind="full")),
+        "chan": scn.channel,
+        "dist": jnp.asarray(plan.serve_dist_m, jnp.float32),
+        "rate_nom": jnp.asarray(plan.rate_nominal, jnp.float32),
+        "t_client": jnp.asarray(plan._t_client, jnp.float32),
+        "t_server": jnp.asarray(plan._t_server, jnp.float32),
+        "l_bytes": jnp.asarray(plan._link_bytes, jnp.float32),
+        "l_time": jnp.asarray(plan._link_time, jnp.float32),
+        "l_energy": jnp.asarray(plan._link_energy, jnp.float32),
+        "p_edge": jnp.asarray([e.power_w for e in plan.edges], jnp.float32),
+        "server_base_s": float(plan._server_base_s),
+        "p_server": RTX_A5000.power_w,
+        "rate_bps": spec.link_policy.rate_bps,
+    }
+    return ctx, scn
+
+
+def _round_outputs(ctx, kr, state, up, batch, run):
+    """One round: availability mask -> engine round -> channel bill."""
+    mask, up = availability_step(jax.random.fold_in(kr, 1), up, ctx["avail"])
+    state, losses = run(state, batch, mask if ctx["needs_mask"] else None)
+    steps = ctx["steps"]
+    active = jnp.maximum(mask.sum(), 1.0)
+    w = mask[:, None] if ctx["kind"] == "fl" else mask[None, :]
+    loss = (losses * w).sum() / (active * steps)
+    if ctx["chan"] is not None:
+        rates = sample_rates_bps(jax.random.fold_in(kr, 2), ctx["chan"],
+                                 ctx["dist"], ctx["rate_bps"])
+        ratio = ctx["rate_nom"] / rates
+    else:
+        ratio = jnp.ones_like(ctx["l_time"])
+    t_srv = (ctx["t_server"] * mask).sum() * steps + ctx["server_base_s"]
+    out = {
+        "loss": loss, "active_clients": mask.sum(),
+        "link_bytes": (ctx["l_bytes"] * mask).sum() * steps,
+        "link_time_s": (ctx["l_time"] * ratio * mask).sum() * steps,
+        "link_energy_j": (ctx["l_energy"] * ratio * mask).sum() * steps,
+        "client_time_s": (ctx["t_client"] * mask).sum() * steps,
+        "client_energy_j": (ctx["t_client"] * ctx["p_edge"] * mask).sum()
+        * steps,
+        "server_time_s": t_srv, "server_energy_j": t_srv * ctx["p_server"],
+    }
+    return state, up, out
+
+
+def _stacked_batches(plan, rounds: int):
+    """``rounds`` draws of the plan's own batch stream, stacked on a leading
+    round axis (shared across seeds: MC varies the environment, not data)."""
+    st = plan.init()
+    per_round = [plan.round_batches(st) for _ in range(rounds)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_round)
+
+
+def _uav_rounds(plan, rounds: int) -> np.ndarray:
+    if plan.timeline is not None:
+        return np.asarray([plan.timeline.uav_energy_j(r)
+                           for r in range(rounds)])
+    if plan.tour is not None:
+        return np.asarray([plan.tour.e_first if r == 0
+                           else plan.tour.e_per_round for r in range(rounds)])
+    return np.zeros(rounds)
+
+
+def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
+                    mode: str = "vmap", seed: int = 0) -> MonteCarloResult:
+    """Sweep ``num_seeds`` scenario realizations of ``plan``.
+
+    ``mode="vmap"`` (default): ONE jitted program — ``lax.scan`` over
+    rounds, ``vmap`` over seeds. ``mode="loop"``: the same per-round step
+    jitted once but dispatched from Python per (seed, round) — the
+    idealized-campaign execution model, kept as the measured baseline.
+    Both modes consume identical per-seed keys, so their per-seed outputs
+    agree.
+
+    Sweep seed ``i`` IS the scenario realization ``ScenarioSpec.seed +
+    seed + i``: its per-round mask/rate streams are bit-identical to a
+    plan compiled with that scenario seed — in particular, seed 0 of a
+    ``seed=0`` sweep replays the plan's own ``run()`` realization
+    (pinned by ``tests/test_sim.py``).
+    """
+    if mode not in ("vmap", "loop"):
+        raise ValueError(f"mode must be 'vmap' or 'loop', got {mode!r}")
+    ctx, scn = _mc_context(plan)
+    rounds = plan.num_rounds if rounds is None else rounds
+    if rounds < 1:
+        raise ValueError("need at least one round")
+    run = plan._run_raw
+    batches_all = _stacked_batches(plan, rounds)
+    state0 = plan.init().engine_state
+    keys = jnp.stack([jax.random.PRNGKey(scn.seed + seed + i)
+                      for i in range(num_seeds)])
+    up0 = availability_init(ctx["n"])
+
+    if mode == "vmap":
+        def rollout(key, state0, batches_all):
+            def body(carry, xs):
+                state, up = carry
+                r, batch = xs
+                state, up, out = _round_outputs(
+                    ctx, jax.random.fold_in(key, r), state, up, batch, run)
+                return (state, up), out
+            _, outs = jax.lax.scan(body, (state0, up0),
+                                   (jnp.arange(rounds), batches_all))
+            return outs
+
+        mc = jax.jit(jax.vmap(rollout, in_axes=(0, None, None)))
+        # AOT-compile so the timed wall excludes compilation WITHOUT paying
+        # a full throwaway sweep
+        compiled = mc.lower(keys, state0, batches_all).compile()
+        t0 = time.time()
+        outs = compiled(keys, state0, batches_all)
+        jax.block_until_ready(outs)
+        wall = time.time() - t0
+        stacks = {k: np.asarray(v) for k, v in outs.items()}
+    else:
+        @jax.jit
+        def round_step(key, r, state, up, batch):
+            state, up, out = _round_outputs(
+                ctx, jax.random.fold_in(key, r), state, up, batch, run)
+            return state, up, out
+
+        def sweep():
+            rows = []
+            for key in keys:
+                state, up = state0, up0
+                per_round = []
+                for r in range(rounds):
+                    batch = jax.tree_util.tree_map(lambda x, r=r: x[r],
+                                                   batches_all)
+                    state, up, out = round_step(key, jnp.uint32(r), state,
+                                                up, batch)
+                    per_round.append(out)
+                rows.append(per_round)
+            return rows
+
+        # warm the per-round jit cache with ONE round (all later calls
+        # share shapes), then run the sweep once, timed
+        warm = jax.tree_util.tree_map(lambda x: x[0], batches_all)
+        jax.block_until_ready(round_step(keys[0], jnp.uint32(0), state0,
+                                         up0, warm))
+        t0 = time.time()
+        rows = sweep()
+        jax.block_until_ready(rows[-1][-1])
+        wall = time.time() - t0
+        stacks = {k: np.asarray([[float(out[k]) for out in per_round]
+                                 for per_round in rows])
+                  for k in rows[0][0]}
+
+    uav = np.broadcast_to(_uav_rounds(plan, rounds),
+                          (num_seeds, rounds)).copy()
+    stacks["uav_energy_j"] = uav
+    return MonteCarloResult(stacks=stacks, num_seeds=num_seeds,
+                            rounds=rounds, engine=plan.engine_label,
+                            mode=mode, wall_s=wall)

@@ -1,0 +1,137 @@
+"""Scenario specs — the stochastic mission environment as data.
+
+A ``ScenarioSpec`` names everything the idealized campaign held constant:
+the air-to-ground channel (``ChannelParams``), the per-round client
+availability process (``AvailabilityParams``), and the mission shape
+(how many UAVs, where they serve from). It rides on ``ExperimentSpec``
+as an optional field; ``api.plan.compile_experiment`` lowers it so
+
+  * channel-derived rates drive the per-round link bill (and, under
+    adaptive cuts, the per-client rates the hover-window deadline is
+    checked against), and
+  * availability traces drive the fleet engines' existing dropout masks.
+
+The *degenerate* scenario — constant channel, full availability, one UAV
+hovering overhead — reproduces today's ``campaign_spec`` records exactly
+(``degenerate_scenario()``; pinned by ``tests/test_sim.py``), so the paper
+numbers are a special case of this subsystem, not a separate code path.
+
+Availability kinds (P3SL shows availability traces change which cuts and
+schedules win — this is the knob that generates those traces):
+
+  * ``"full"``      — every client, every round (degenerate).
+  * ``"bernoulli"`` — i.i.d. per-round drop with prob ``p_drop`` (the
+                      idealization ``ClientSpec.dropout_rate`` already
+                      offers, expressed as a scenario).
+  * ``"markov"``    — a two-state Gilbert-Elliott process per client:
+                      an *up* client fails with ``p_drop``, a *down* one
+                      recovers with ``p_recover`` — bursty outages, the
+                      realistic farm-radio failure mode.
+
+All trace generation is jax-native (key-folded per round) so the compiled
+plan's host loop and the vmapped Monte-Carlo rollout draw bit-identical
+masks from the same seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .channel import ChannelParams
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityParams:
+    kind: str = "full"        # "full" | "bernoulli" | "markov"
+    p_drop: float = 0.0       # bernoulli: P(drop); markov: P(up -> down)
+    p_recover: float = 0.5    # markov: P(down -> up)
+
+    @property
+    def is_stochastic(self) -> bool:
+        return self.kind != "full"
+
+    def validate(self) -> None:
+        if self.kind not in ("full", "bernoulli", "markov"):
+            raise ValueError(f"availability kind must be 'full', 'bernoulli' "
+                             f"or 'markov', got {self.kind!r}")
+        if not (0.0 <= self.p_drop <= 1.0 and 0.0 <= self.p_recover <= 1.0):
+            raise ValueError("availability probabilities must be in [0, 1]")
+
+
+def availability_init(num_clients: int):
+    """Round-0 prior state: every client up."""
+    return jnp.ones((num_clients,), jnp.float32)
+
+
+def availability_step(key, up_prev, params: AvailabilityParams):
+    """One round of the availability process: ``(mask, new_state)``.
+
+    ``up_prev`` is the previous round's (clients,) 0/1 state (ignored for
+    memoryless kinds). At least one client is always kept up — a fleet
+    round with zero active clients is a no-op the engines support but a
+    campaign would never schedule (the UAV skips a dead round).
+    """
+    if not params.is_stochastic:
+        ones = jnp.ones_like(up_prev)
+        return ones, ones
+    u = jax.random.uniform(key, up_prev.shape)
+    if params.kind == "bernoulli":
+        up = (u >= params.p_drop).astype(jnp.float32)
+    else:  # markov (Gilbert-Elliott)
+        up = jnp.where(up_prev > 0, u >= params.p_drop,
+                       u < params.p_recover).astype(jnp.float32)
+    # keep >=1 active: the client with the luckiest draw stands in
+    guard = (jnp.arange(up.shape[0]) == jnp.argmax(u)).astype(jnp.float32)
+    up = jnp.where(up.sum() > 0, up, guard)
+    return up, up
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """The stochastic environment of one experiment.
+
+    ``channel=None`` / ``availability=None`` mean "keep today's
+    idealization" (constant link-policy rate / no availability process) —
+    a bare ``ScenarioSpec()`` changes nothing but routes the mission
+    through ``sim.mission.rollout_mission``.
+    """
+    channel: Optional[ChannelParams] = None
+    availability: Optional[AvailabilityParams] = None
+    num_uavs: int = 1
+    serve_mode: str = "hover"   # "hover" (overhead) | "relay" (partition centroid)
+    seed: int = 0               # channel + availability stream seed
+
+    @property
+    def needs_mask(self) -> bool:
+        return self.availability is not None and self.availability.is_stochastic
+
+    def validate(self, *, has_mission: bool) -> None:
+        if self.num_uavs < 1:
+            raise ValueError(f"num_uavs must be >= 1, got {self.num_uavs}")
+        if self.serve_mode not in ("hover", "relay"):
+            raise ValueError(f"serve_mode must be 'hover' or 'relay', "
+                             f"got {self.serve_mode!r}")
+        if self.channel is not None:
+            self.channel.validate()
+            if self.channel.kind == "a2g" and not has_mission:
+                raise ValueError("an 'a2g' channel needs the mission geometry "
+                                 "(client placements + UAV altitude); attach "
+                                 "a MissionSpec or use kind='constant'")
+        if self.availability is not None:
+            self.availability.validate()
+        if (self.num_uavs > 1 or self.serve_mode != "hover") \
+                and not has_mission:
+            raise ValueError("multi-UAV / relay scenarios describe a mission; "
+                             "attach a MissionSpec")
+
+
+def degenerate_scenario() -> ScenarioSpec:
+    """The deterministic corner: constant channel, full availability, one
+    UAV hovering overhead. Runs the whole sim path, reproduces the
+    idealized campaign records (pinned by ``tests/test_sim.py``)."""
+    return ScenarioSpec(channel=ChannelParams(kind="constant"),
+                        availability=AvailabilityParams(kind="full"),
+                        num_uavs=1, serve_mode="hover")

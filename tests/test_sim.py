@@ -1,0 +1,430 @@
+"""``repro.sim`` — stochastic mission & channel scenarios.
+
+The contract under test:
+
+  * the air-to-ground rate model is physically sane (monotone in distance,
+    deterministic when shadowing/fading are off),
+  * availability traces are valid masks (>=1 active; markov burstiness),
+  * the mission rollout's degenerate corner IS ``plan_tour`` (single UAV,
+    hover), and multi-UAV dispatch partitions the fleet,
+  * the degenerate scenario reproduces today's ``campaign_spec`` records —
+    the paper numbers are a pinned special case of the subsystem,
+  * Monte-Carlo rollouts are bitwise-reproducible under a fixed seed, and
+    the vectorized (vmap) rollout matches the per-seed Python loop.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                       ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec,
+                       compile_experiment)
+from repro.core.trajectory import plan_tour
+from repro.core.uav_energy import DEFAULT_UAV
+from repro.fleet import CampaignConfig, campaign_spec
+from repro.sim import (AvailabilityParams, ChannelParams, ScenarioSpec,
+                       availability_init, availability_step,
+                       degenerate_scenario, deterministic_rate_bps,
+                       rollout_mission, run_monte_carlo, sample_rates_bps)
+
+NUM_CLASSES = 4
+
+BASE = ExperimentSpec(
+    model=ModelSpec(name="tinycnn", num_classes=NUM_CLASSES),
+    data=DataSpec(kind="synthetic", image_size=16, classes_per_client=2),
+    clients=ClientSpec(num_clients=4),
+    cut_policy=CutPolicy(mode="fraction", fraction=0.4),
+    engine=EngineSpec(kind="sl", client_axis="vmap"),
+    mission=MissionSpec(farm_acres=100.0),
+    global_rounds=2, local_steps=2, batch_size=4)
+
+STOCH = ScenarioSpec(
+    channel=ChannelParams(kind="a2g"),
+    availability=AvailabilityParams(kind="markov", p_drop=0.4,
+                                    p_recover=0.6),
+    num_uavs=2, serve_mode="relay", seed=1)
+
+
+# ---------------------------------------------------------------------------
+# channel
+# ---------------------------------------------------------------------------
+
+def test_channel_rate_monotone_in_distance():
+    p = ChannelParams(kind="a2g", shadowing_sigma_db=0.0, fading="none")
+    d = jnp.asarray([10.0, 30.0, 100.0, 300.0, 1000.0])
+    r = np.asarray(deterministic_rate_bps(p, d, 1e8))
+    assert np.all(np.diff(r) < 0)            # strictly decreasing
+    assert np.all(r >= p.min_rate_bps)
+    # the deterministic corner bypasses the RNG: sample == deterministic,
+    # any key
+    s = np.asarray(sample_rates_bps(jax.random.PRNGKey(7), p, d, 1e8))
+    np.testing.assert_array_equal(s, r)
+
+
+def test_channel_constant_kind_is_the_nominal_rate():
+    p = ChannelParams(kind="constant")
+    d = jnp.asarray([1.0, 500.0])
+    r = np.asarray(sample_rates_bps(jax.random.PRNGKey(0), p, d, 42e6))
+    np.testing.assert_array_equal(r, np.full(2, 42e6, np.float32))
+
+
+def test_channel_stochastic_draws_vary_but_reproduce():
+    p = ChannelParams(kind="a2g", shadowing_sigma_db=4.0, fading="rayleigh")
+    d = jnp.full((8,), 100.0)
+    k = jax.random.PRNGKey(3)
+    a = np.asarray(sample_rates_bps(k, p, d, 1e8))
+    b = np.asarray(sample_rates_bps(k, p, d, 1e8))
+    c = np.asarray(sample_rates_bps(jax.random.fold_in(k, 1), p, d, 1e8))
+    np.testing.assert_array_equal(a, b)      # same key -> bitwise same
+    assert np.std(a) > 0                     # fading across clients
+    assert not np.array_equal(a, c)          # fresh key -> fresh draw
+
+
+# ---------------------------------------------------------------------------
+# availability
+# ---------------------------------------------------------------------------
+
+def test_availability_masks_valid_and_bursty():
+    n, rounds = 8, 40
+    p = AvailabilityParams(kind="markov", p_drop=0.3, p_recover=0.3)
+    key = jax.random.PRNGKey(0)
+    up = availability_init(n)
+    trace = []
+    for r in range(rounds):
+        mask, up = availability_step(jax.random.fold_in(key, r), up, p)
+        assert float(mask.sum()) >= 1.0      # never a dead fleet
+        trace.append(np.asarray(mask))
+    trace = np.stack(trace)
+    assert 0.0 < trace.mean() < 1.0          # both states visited
+    # burstiness: a down client stays down with prob 1 - p_recover = 0.7,
+    # far above its ~0.45 stationary up-probability's complement persistence
+    down = trace[:-1] == 0
+    stays_down = ((trace[1:] == 0) & down).sum() / max(down.sum(), 1)
+    assert stays_down > 0.5
+
+
+def test_availability_full_is_identity():
+    p = AvailabilityParams(kind="full")
+    up = availability_init(3)
+    mask, up2 = availability_step(jax.random.PRNGKey(0), up, p)
+    np.testing.assert_array_equal(np.asarray(mask), np.ones(3))
+    np.testing.assert_array_equal(np.asarray(up2), np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# mission rollout
+# ---------------------------------------------------------------------------
+
+def test_single_uav_hover_rollout_is_plan_tour():
+    rng = np.random.RandomState(0)
+    coords = rng.uniform(0, 400, size=(6, 2))
+    base = np.zeros(2)
+    tl = rollout_mission(coords, base, hover_s_per_stop=30.0,
+                         comm_s_per_stop=10.0)
+    ref = plan_tour(coords, base, hover_s_per_stop=30.0, comm_s_per_stop=10.0)
+    r = tl.routes[0].tour
+    assert r.order == ref.order
+    assert r.e_first == ref.e_first and r.e_per_round == ref.e_per_round
+    assert tl.rounds == ref.rounds and tl.e_return_j == ref.e_return
+    assert tl.uav_energy_j(0) == ref.e_first
+    assert tl.uav_energy_j(1) == ref.e_per_round
+    # hover serves overhead: every slant distance is the flight altitude
+    np.testing.assert_allclose(tl.serve_dist_m, DEFAULT_UAV.altitude)
+    # battery decreases monotonically and never goes negative
+    assert np.all(np.diff(tl.battery_j[0]) < 0)
+    assert tl.battery_j[0, -1] >= tl.e_return_j - 1e-6  # return leg reserved
+    # serve windows are ordered along the tour and fit the round
+    starts = tl.hover_start_s[np.asarray(ref.order)]
+    assert np.all(np.diff(starts) > 0)
+    assert starts[-1] + 40.0 <= tl.round_duration_s + 1e-6
+
+
+def test_multi_uav_partitions_fleet_and_budgets():
+    rng = np.random.RandomState(1)
+    coords = rng.uniform(0, 600, size=(9, 2))
+    tl = rollout_mission(coords, np.zeros(2), num_uavs=3)
+    ids = sorted(i for r in tl.routes for i in r.client_ids)
+    assert ids == list(range(9))             # every client exactly once
+    assert len(tl.routes) == 3
+    single = rollout_mission(coords, np.zeros(2))
+    # splitting the tour shortens each UAV's cycle -> more budgeted rounds
+    assert tl.rounds >= single.rounds
+    assert tl.round_duration_s <= single.round_duration_s
+    # fleet bill is the sum of per-UAV tour energies
+    assert tl.e_per_round_j == pytest.approx(
+        sum(r.tour.e_per_round for r in tl.routes))
+
+
+def test_relay_mode_varies_serve_distance():
+    rng = np.random.RandomState(2)
+    coords = rng.uniform(0, 500, size=(6, 2))
+    tl = rollout_mission(coords, np.zeros(2), serve_mode="relay")
+    # distances vary across clients and exceed the overhead-hover slant
+    assert np.std(tl.serve_dist_m) > 0
+    assert np.all(tl.serve_dist_m >= DEFAULT_UAV.altitude - 1e-9)
+    # the parked relay spends no per-round movement energy
+    assert tl.routes[0].tour.tour_length == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the degenerate-scenario equivalence gate
+# ---------------------------------------------------------------------------
+
+def test_degenerate_scenario_reproduces_campaign_spec_records():
+    """Constant channel + full availability + one hovering UAV, run through
+    the ENTIRE sim path, must reproduce the idealized campaign_spec records
+    — the paper numbers are a special case of the subsystem."""
+    cfg = CampaignConfig(model="tinycnn", num_clients=4, global_rounds=2,
+                         local_steps=2, batch_size=4,
+                         num_classes=NUM_CLASSES, classes_per_client=2,
+                         image_size=16)
+    plan_ref = compile_experiment(campaign_spec(cfg))
+    _, recs_ref = plan_ref.run()
+    plan_sim = compile_experiment(campaign_spec(
+        dataclasses.replace(cfg, scenario=degenerate_scenario())))
+    _, recs_sim = plan_sim.run()
+    assert plan_sim.timeline is not None     # the sim path actually ran
+    assert plan_sim.tour.order == plan_ref.tour.order
+    assert len(recs_sim) == len(recs_ref) > 0
+    for a, b in zip(recs_ref, recs_sim):
+        da, db = a.to_dict(), b.to_dict()
+        for field, va in da.items():
+            if isinstance(va, float) and np.isfinite(va):
+                assert db[field] == pytest.approx(va, rel=1e-12), field
+            else:
+                assert db[field] == va, field
+
+
+def test_stochastic_scenario_changes_bill_not_bytes():
+    """An a2g channel re-bills link time/energy per round; wire bytes and
+    compute energy are rate-independent and must not move."""
+    plan0 = compile_experiment(BASE)
+    _, recs0 = plan0.run()
+    scn = ScenarioSpec(channel=ChannelParams(kind="a2g"), seed=3)
+    plan1 = compile_experiment(dataclasses.replace(BASE, scenario=scn))
+    _, recs1 = plan1.run()
+    times0 = [r.link_time_s for r in recs0]
+    times1 = [r.link_time_s for r in recs1]
+    assert times0 != times1                  # the channel moved the bill
+    for a, b in zip(recs0, recs1):
+        assert a.link_bytes == b.link_bytes
+        assert a.client_energy_j == b.client_energy_j
+        assert b.link_time_s > 0
+
+
+def test_availability_trace_drives_dropout_masks():
+    spec = dataclasses.replace(
+        BASE, global_rounds=4,
+        scenario=ScenarioSpec(availability=AvailabilityParams(
+            kind="markov", p_drop=0.6, p_recover=0.4), seed=5))
+    plan = compile_experiment(spec)
+    _, recs = plan.run()
+    actives = [r.active_clients for r in recs]
+    assert min(actives) < 4 and min(actives) >= 1
+    full = compile_experiment(BASE)
+    _, frecs = full.run()
+    for r, fr in zip(recs, frecs):
+        if r.active_clients < 4:
+            assert r.client_energy_j < fr.client_energy_j
+
+
+def test_scenario_validation_errors():
+    with pytest.raises(ValueError):          # a2g channel needs a mission
+        compile_experiment(dataclasses.replace(
+            BASE, mission=None,
+            scenario=ScenarioSpec(channel=ChannelParams(kind="a2g"))))
+    with pytest.raises(ValueError):          # multi-UAV needs a mission
+        compile_experiment(dataclasses.replace(
+            BASE, mission=None, scenario=ScenarioSpec(num_uavs=2)))
+    with pytest.raises(ValueError):          # availability needs a fleet
+        compile_experiment(dataclasses.replace(
+            BASE, engine=EngineSpec(kind="sl", client_axis="scan"),
+            scenario=ScenarioSpec(availability=AvailabilityParams(
+                kind="bernoulli", p_drop=0.5))))
+    with pytest.raises(ValueError):          # one straggler process only
+        compile_experiment(dataclasses.replace(
+            BASE, clients=ClientSpec(num_clients=4, dropout_rate=0.5),
+            scenario=ScenarioSpec(availability=AvailabilityParams(
+                kind="bernoulli", p_drop=0.5))))
+    with pytest.raises(ValueError):          # more UAVs than clients
+        compile_experiment(dataclasses.replace(
+            BASE, scenario=ScenarioSpec(num_uavs=9)))
+    with pytest.raises(ValueError):
+        ChannelParams(kind="fso").validate()
+    with pytest.raises(ValueError):
+        AvailabilityParams(kind="weather").validate()
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo rollouts
+# ---------------------------------------------------------------------------
+
+def _stoch_plan(rounds=2):
+    return compile_experiment(dataclasses.replace(
+        BASE, global_rounds=rounds, scenario=STOCH))
+
+
+def test_monte_carlo_bitwise_reproducible():
+    plan = _stoch_plan()
+    a = run_monte_carlo(plan, 3, rounds=2, seed=11)
+    b = run_monte_carlo(plan, 3, rounds=2, seed=11)
+    for k in a.stacks:
+        np.testing.assert_array_equal(a.stacks[k], b.stacks[k], err_msg=k)
+    c = run_monte_carlo(plan, 3, rounds=2, seed=12)
+    assert any(not np.array_equal(a.stacks[k], c.stacks[k])
+               for k in a.stacks)            # a different sweep seed differs
+
+
+def test_monte_carlo_vmap_matches_python_loop():
+    plan = _stoch_plan()
+    v = run_monte_carlo(plan, 4, rounds=2, mode="vmap", seed=0)
+    l = run_monte_carlo(plan, 4, rounds=2, mode="loop", seed=0)
+    assert v.stacks["loss"].shape == (4, 2)
+    for k in v.stacks:
+        np.testing.assert_allclose(v.stacks[k], l.stacks[k], rtol=1e-5,
+                                   atol=1e-6, err_msg=k)
+    # seeds genuinely differ (channel/availability draws are per seed)
+    assert np.std(v.stacks["link_time_s"].sum(axis=1)) > 0
+
+
+def test_monte_carlo_seed_zero_replays_the_plan():
+    """Sweep seed i IS scenario realization scn.seed + base + i: seed 0 of
+    a base-0 sweep draws the exact mask/rate streams plan.run() draws, so
+    one MC outlier can be replayed through the plan for inspection."""
+    plan = _stoch_plan(rounds=3)
+    _, recs = plan.run(with_eval=False)
+    mc = run_monte_carlo(plan, 2, rounds=3, seed=0)
+    for r, rec in enumerate(recs):
+        assert int(mc.stacks["active_clients"][0, r]) == rec.active_clients
+        np.testing.assert_allclose(mc.stacks["loss"][0, r], rec.loss,
+                                   rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(mc.stacks["link_time_s"][0, r],
+                                   rec.link_time_s, rtol=1e-5)
+        np.testing.assert_allclose(mc.stacks["client_energy_j"][0, r],
+                                   rec.client_energy_j, rtol=1e-5)
+    # ... and a replaced scenario seed shifts which realization seed 0 is
+    plan2 = compile_experiment(dataclasses.replace(
+        BASE, global_rounds=3,
+        scenario=dataclasses.replace(STOCH, seed=STOCH.seed + 1)))
+    mc2 = run_monte_carlo(plan2, 1, rounds=3, seed=0)
+    np.testing.assert_allclose(mc.stacks["link_time_s"][1],
+                               mc2.stacks["link_time_s"][0], rtol=1e-6)
+
+
+def test_monte_carlo_records_and_summary():
+    plan = _stoch_plan()
+    mc = run_monte_carlo(plan, 3, rounds=2)
+    recs = mc.records_for_seed(1)
+    assert len(recs) == 2
+    assert recs[0].engine == plan.engine_label
+    assert recs[0].uav_energy_j == pytest.approx(plan.timeline.e_first_j)
+    assert np.isnan(recs[0].accuracy)        # no held-out eval inside vmap
+    s = mc.summary()
+    assert s["num_seeds"] == 3
+    assert s["final_loss"]["min"] <= s["final_loss"]["mean"] \
+        <= s["final_loss"]["max"]
+    assert s["total_energy_j"]["mean"] > 0
+
+
+def test_monte_carlo_rejects_hetero_plans():
+    from repro.core.energy import HardwareProfile, JETSON_AGX_ORIN
+    mcu = HardwareProfile("mcu", fp32_tflops=0.02, mem_bw_gbs=2.0,
+                          tensor_tflops=0.04, cpu_passmark=400.0, power_w=2.0)
+    plan = compile_experiment(dataclasses.replace(
+        BASE, cut_policy=CutPolicy(mode="adaptive"),
+        clients=ClientSpec(num_clients=4,
+                           edge_profiles=(JETSON_AGX_ORIN, mcu))))
+    if len(set(plan.cut_of_client)) > 1:     # hetero buckets actually formed
+        with pytest.raises(ValueError, match="hetero"):
+            run_monte_carlo(plan, 2, rounds=1)
+    else:                                    # degenerate profiles: still runs
+        run_monte_carlo(plan, 1, rounds=1)
+
+
+# ---------------------------------------------------------------------------
+# spec-reachable satellites: dirichlet partition + transformer family
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_partition_spec_reachable():
+    spec = dataclasses.replace(
+        BASE, mission=None,
+        data=DataSpec(kind="synthetic", image_size=16, partition="dirichlet",
+                      dirichlet_alpha=0.2))
+    plan = compile_experiment(spec)
+    sizes = [len(p) for p in plan.parts]
+    assert sum(sizes) == len(plan.y_train)
+    assert all(s >= 1 for s in sizes)        # min_size floor held
+    assert np.std(sizes) > 0                 # alpha=0.2 actually skews
+    _, recs = plan.run()
+    assert all(np.isfinite(r.loss) for r in recs)
+    # alpha sweeps are one-field edits
+    smooth = compile_experiment(dataclasses.replace(
+        spec, data=dataclasses.replace(spec.data, dirichlet_alpha=100.0)))
+    assert np.std([len(p) for p in smooth.parts]) <= np.std(sizes)
+
+
+def test_dirichlet_min_size_floor():
+    from repro.data.partition import partition_dirichlet
+    labels = np.repeat(np.arange(4), 25)
+    parts = partition_dirichlet(labels, 10, alpha=0.05, seed=0, min_size=2)
+    assert all(len(p) >= 2 for p in parts)
+    assert sorted(np.concatenate(parts).tolist()) == list(range(100))
+    with pytest.raises(ValueError):
+        partition_dirichlet(labels, 10, alpha=0.05, min_size=11)
+
+
+def _tf_spec(**kw):
+    from repro.configs.base import ArchConfig
+    arch = ArchConfig(name="tiny-attn", family="dense", n_layers=4,
+                      d_model=16, n_heads=2, n_kv_heads=2, d_ff=32, vocab=64)
+    base = ExperimentSpec(
+        model=ModelSpec(family="transformer", arch=arch),
+        data=DataSpec(kind="tokens", seq_len=16, partition="iid"),
+        clients=ClientSpec(num_clients=4),
+        cut_policy=CutPolicy(mode="fraction", fraction=0.5),
+        engine=EngineSpec(kind="sl", client_axis="vmap"),
+        global_rounds=3, local_steps=2, batch_size=4)
+    return dataclasses.replace(base, **kw)
+
+
+def test_transformer_spec_trains_and_bills():
+    plan = compile_experiment(_tf_spec())
+    assert plan.cut_of_client == [2] * 4
+    _, recs = plan.run()
+    assert recs[-1].loss < recs[0].loss      # the LM actually trains
+    assert recs[0].link_bytes > 0 and recs[0].client_energy_j > 0
+    assert 0.0 <= recs[-1].accuracy <= 1.0
+    # int8 residual-stream link: ~3.2x fewer wire bytes at d_model=16
+    plan8 = compile_experiment(_tf_spec(
+        link_policy=LinkPolicy(compress="int8")))
+    _, recs8 = plan8.run()
+    assert recs8[0].link_bytes < recs[0].link_bytes / 3
+
+
+def test_transformer_scan_engine_and_validation():
+    _, recs = compile_experiment(_tf_spec(
+        engine=EngineSpec(kind="sl", client_axis="scan"),
+        global_rounds=2)).run()
+    assert all(np.isfinite(r.loss) for r in recs)
+    with pytest.raises(ValueError):          # needs an ArchConfig
+        compile_experiment(_tf_spec(model=ModelSpec(family="transformer")))
+    with pytest.raises(ValueError):          # FL is a CNN-family path
+        compile_experiment(_tf_spec(
+            engine=EngineSpec(kind="fl", client_axis="vmap")))
+    with pytest.raises(ValueError):          # tokens carry no label classes
+        compile_experiment(_tf_spec(
+            data=DataSpec(kind="tokens", partition="classes")))
+    with pytest.raises(ValueError):          # tokens are transformer-only
+        compile_experiment(dataclasses.replace(
+            BASE, mission=None,
+            data=DataSpec(kind="tokens", partition="iid")))
+    with pytest.raises(ValueError):          # unknown data kind
+        compile_experiment(dataclasses.replace(
+            BASE, mission=None, data=DataSpec(kind="token")))
+    with pytest.raises(ValueError, match="server_mesh"):
+        compile_experiment(_tf_spec(
+            engine=EngineSpec(kind="sl", client_axis="vmap",
+                              server_mesh=(2, 1))))

@@ -86,3 +86,55 @@ def test_two_opt_no_worse():
     order, nn_len = nearest_neighbor_tour(pts)
     _, opt_len = two_opt(pts, order)
     assert opt_len <= nn_len + 1e-9
+
+
+def test_held_karp_exact_at_eight():
+    """Deterministic pin of the exact solver at the paper's fleet scale
+    (complements the hypothesis property, which may be skipped)."""
+    for seed in range(4):
+        pts = np.random.RandomState(seed).uniform(0, 1000, size=(8, 2))
+        _, hk = held_karp(pts)
+        bf = brute_force_tsp(pts)
+        assert abs(hk - bf) < 1e-6 * max(bf, 1.0)
+
+
+def test_fallback_beyond_exact_limit():
+    """solve_tsp's M>16 NN+2opt fallback: a valid cycle whose reported
+    length is true, never longer than ANY single-start greedy tour."""
+    for m, seed in ((17, 0), (18, 3), (20, 7), (24, 11), (40, 2)):
+        pts = np.random.RandomState(seed).uniform(0, 1000, size=(m, 2))
+        order, length = solve_tsp(pts)
+        assert sorted(order) == list(range(m))
+        d = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+        true = sum(d[order[i], order[(i + 1) % m]] for i in range(m))
+        assert abs(true - length) < 1e-9
+        for start in range(m):
+            _, nn_len = nearest_neighbor_tour(pts, start=start)
+            assert length <= nn_len + 1e-9
+
+
+def test_two_opt_never_longer_than_greedy_fleetwide():
+    """2-opt over the greedy seed is monotone at every scale the mission
+    planner can hit (small farms through M>16 fallback territory)."""
+    improved_somewhere = False
+    for m in (6, 10, 17, 25, 33):
+        for seed in range(5):
+            pts = np.random.RandomState(1000 + 31 * m + seed).uniform(
+                0, 800, size=(m, 2))
+            order, nn_len = nearest_neighbor_tour(pts)
+            o2, l2 = two_opt(pts, order)
+            assert sorted(o2) == list(range(m))
+            assert l2 <= nn_len + 1e-9
+            improved_somewhere |= l2 < nn_len - 1e-6
+    assert improved_somewhere
+
+
+def test_plan_tour_uses_fallback_past_exact_limit():
+    pts = np.random.RandomState(9).uniform(0, 2000, size=(18, 2))
+    plan = plan_tour(pts, np.zeros(2))
+    assert sorted(plan.order) == list(range(18))
+    assert plan.rounds >= 1
+    assert plan.total_energy <= DEFAULT_UAV.beta + 1e-6
+    # the multi-start seeded fallback is at least as good as the greedy plan
+    greedy = greedy_tour_plan(pts, np.zeros(2))
+    assert plan.tour_length <= greedy.tour_length + 1e-9
