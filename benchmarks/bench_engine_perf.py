@@ -28,6 +28,13 @@ hand-wired as the historical baseline:
                  — the idealized-campaign execution model. The
                  mc_vmap/mc_loop ratio is the vectorization win the
                  acceptance gate holds at >= 3x on XLA:CPU.
+  fl_cohort    : spec ``fl/vmap`` with ``ClientSpec.population=M`` — one
+                 round trains a sampled cohort of 8 from M registered
+                 clients (stateless FL rounds). Logged per M (1e4/1e5/1e6
+                 by default) with the engine-state byte size, which must
+                 NOT grow with M (the O(cohort) claim).
+  sl_cohort    : the same over ``sl/vmap`` — the EPSL shared client tier
+                 (one client model broadcast across the cohort axis).
 
 Results append to ``results/engine_perf.json`` as a per-PR log — one row
 per (commit, model, case, variant):
@@ -177,10 +184,46 @@ def bench_monte_carlo(model: str, *, clients: int = 4, steps: int = 2,
     return out
 
 
+def bench_cohort(model: str, population: int, *, clients: int = 8,
+                 steps: int = 2, batch: int = 8, image: int = 16,
+                 rounds: int = 10) -> dict[str, dict]:
+    """steps/sec + engine-state bytes of one cohort round sampled from a
+    ``population``-client fleet (fl/vmap stateless rounds; sl/vmap EPSL
+    shared client tier). The byte size is the O(cohort) acceptance bar:
+    it must not move across populations."""
+    out = {}
+    for kind in ("fl", "sl"):
+        spec = dataclasses.replace(
+            _base_spec(model, clients, steps, batch, image),
+            clients=ClientSpec(num_clients=clients, population=population),
+            engine=EngineSpec(kind, "vmap"))
+        plan = compile_experiment(spec)
+        state = plan.init()
+        es = state.engine_state
+        state_bytes = sum(x.size * x.dtype.itemsize
+                          for x in jax.tree_util.tree_leaves(es)
+                          if hasattr(x, "dtype"))
+        # one representative cohort gather; the compiled round is the same
+        # program whichever population ids the rows came from
+        batches = plan.round_batches(state,
+                                     cohort=plan._round_cohort(state))
+        es, losses = plan.raw_round(es, batches)      # warmup / compile
+        jax.block_until_ready(losses)
+        t0 = time.time()
+        for _ in range(rounds):
+            es, losses = plan.raw_round(es, batches)
+        jax.block_until_ready(losses)
+        sps = rounds * clients * steps / (time.time() - t0)
+        out[f"{kind}_cohort"] = {"steps_per_s": sps,
+                                 "state_bytes": state_bytes}
+    return out
+
+
 def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         batch: int = 16, image: int = 32, rounds: int = 10,
         print_csv: bool = True, commit: str | None = None,
-        mc_seeds: int = 16) -> list[dict]:
+        mc_seeds: int = 16,
+        populations: tuple[int, ...] | None = None) -> list[dict]:
     base = _base_spec(model, clients, steps, batch, image)
     variants = {
         "sl_host_loop": bench_sl_host_loop(base, rounds=rounds),
@@ -214,6 +257,19 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
     rows += [{"commit": commit, "bench": "engine_perf", "model": model,
               "case": mc_case, "variant": v, "steps_per_s": round(sps, 2)}
              for v, sps in mc.items()]
+    # population cohort rounds: one fixed case per M (c8s2b8m<M>), each
+    # trend-gated on steps/s like every other variant; state_bytes rides
+    # along so the log pins the O(cohort) claim per commit. Pass
+    # --population 0 to skip.
+    if populations is None:
+        populations = (10_000, 100_000, 1_000_000)
+    for pop in [p for p in populations if p > 0]:
+        cres = bench_cohort(model, pop, rounds=rounds)
+        rows += [{"commit": commit, "bench": "engine_perf", "model": model,
+                  "case": f"c8s2b8m{pop}", "variant": v,
+                  "steps_per_s": round(r["steps_per_s"], 2),
+                  "state_bytes": r["state_bytes"]}
+                 for v, r in cres.items()]
     os.makedirs("results", exist_ok=True)
     log = []
     if os.path.exists(CACHE):
@@ -250,6 +306,11 @@ def main():
     ap.add_argument("--mc-seeds", type=int, default=16,
                     help="Monte-Carlo sweep width for the mc_vmap/mc_loop "
                          "rows (acceptance gate: >=3x at 16 seeds)")
+    ap.add_argument("--population", type=int, action="append", default=None,
+                    dest="populations", metavar="M",
+                    help="log fl_cohort/sl_cohort rows (steps/s + engine-"
+                         "state bytes, cohort of 8 sampled from M); "
+                         "repeatable; default 1e4/1e5/1e6; 0 skips")
     ap.add_argument("--commit", default=None,
                     help="override the logged commit label (used to append "
                          "same-machine re-measured baseline rows next to a "
@@ -258,7 +319,9 @@ def main():
     args = ap.parse_args()
     run(model=args.model, clients=args.clients, steps=args.steps,
         batch=args.batch, image=args.image, rounds=args.rounds,
-        commit=args.commit, mc_seeds=args.mc_seeds)
+        commit=args.commit, mc_seeds=args.mc_seeds,
+        populations=(tuple(args.populations)
+                     if args.populations is not None else None))
 
 
 if __name__ == "__main__":

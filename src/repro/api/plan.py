@@ -33,7 +33,7 @@ from ..core.split import (SplitStep, apply_stages, cut_index_for_fraction,
                           make_multi_client_round, stack_cut_index)
 from ..core.trajectory import TourPlan, plan_tour
 from ..data.partition import (partition_dirichlet, partition_iid,
-                              partition_non_iid)
+                              partition_non_iid, population_partition_count)
 from ..data.synthetic import SyntheticPestImages, synthetic_tokens
 from ..fleet.engine import (make_fleet_fl_round, make_fleet_sl_round,
                             server_mesh_sizes, shard_server_state,
@@ -46,10 +46,11 @@ from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
 from ..optim import adamw, init_stacked
 from ..sim.channel import deterministic_rate_bps, sample_rates_bps
 from ..sim.mission import MissionTimeline, rollout_mission
-from ..sim.scenario import availability_init, availability_step
+from ..sim.scenario import (COHORT_DOWN_WEIGHT, availability_init,
+                            availability_step, sample_cohort)
 from .records import RoundRecord
-from .runtime import (classification_metrics, client_coords,
-                      client_step_time_s, count_fl_step_flops,
+from .runtime import (accuracy_from_logits, classification_metrics,
+                      client_coords, client_step_time_s, count_fl_step_flops,
                       count_sl_step_flops, count_split_step_flops,
                       mission_max_link_s, roofline_s, round_batches,
                       stack_replicas)
@@ -81,7 +82,7 @@ class Plan:
                  params0, tour: Optional[TourPlan], cut_of_client,
                  flops: dict, edges, consts, engine_fns,
                  timeline: Optional[MissionTimeline] = None,
-                 serve_dist_m=None, rate_nominal=None):
+                 serve_dist_m=None, rate_nominal=None, prof_consts=None):
         self.spec = spec
         self.mesh = mesh
         self.engine_label = f"{spec.engine.kind}/{spec.engine.client_axis}"
@@ -112,12 +113,27 @@ class Plan:
         self._scn_key = (jax.random.PRNGKey(scn.seed)
                          if scn is not None else None)
         self._mask_in_engine = _needs_mask(spec)
+        # cohort sampling (ClientSpec.population): the environment key the
+        # per-round cohort draw folds from — the scenario's stream when one
+        # is attached (so Monte-Carlo sweep seed i replays realization
+        # scn.seed + i, cohorts included), the seed-0 environment otherwise
+        # (matching run_monte_carlo's default ScenarioSpec())
+        self._population = spec.clients.population
+        self._env_key = (self._scn_key if self._scn_key is not None
+                         else jax.random.PRNGKey(0))
+        # per-PROFILE per-step constants for cohort billing (edge_profiles
+        # cycle over population ids, gathered to the sampled cohort); None
+        # when the fleet is fully materialized (per-slot consts suffice)
+        self._t_client_prof, self._p_edge_prof = (
+            prof_consts if prof_consts is not None else (None, None))
         # hoisted per-client constants (np arrays over the client axis)
         (self._t_client, self._t_server, self._link_bytes, self._link_time,
          self._link_energy, self._server_base_s) = consts
-        # engine closures: (init_state, run, eval, raw unjitted run —
-        # None for hetero plans, which have no single jittable round)
-        (self._init_state, self._run, self._eval, self._run_raw) = engine_fns
+        # engine closures: (init_state, run, eval, raw unjitted run, raw
+        # jittable held-out accuracy — the raw pair is None for hetero
+        # plans, which have no single jittable round)
+        (self._init_state, self._run, self._eval, self._run_raw,
+         self._eval_acc_raw) = engine_fns
 
     # ---- lifecycle --------------------------------------------------------
 
@@ -126,7 +142,12 @@ class Plan:
         The batch stream matches the legacy trainers' (one RandomState
         seeded with ``spec.seed``, one ``choice`` per client per round)."""
         scn = self.spec.scenario
-        avail_up = (np.asarray(availability_init(self.spec.clients.num_clients))
+        # availability runs over the POPULATION when one is declared (the
+        # trace both masks the sampled cohort and weights the next draw);
+        # O(population) scalars, never O(population) model state
+        n_avail = (self._population if self._population is not None
+                   else self.spec.clients.num_clients)
+        avail_up = (np.asarray(availability_init(n_avail))
                     if scn is not None and scn.needs_mask else None)
         return PlanState(
             round=0, engine_state=self._init_state(),
@@ -134,17 +155,48 @@ class Plan:
             dropout_rng=np.random.RandomState(self.spec.seed + 1),
             avail_up=avail_up)
 
-    def round_batches(self, state: PlanState):
+    def round_batches(self, state: PlanState, cohort=None):
         """Pre-gathered (clients, local_steps, ...) stacks for one round, in
-        the engine's batch format (FL: ``(bx, by)``; SL: dict)."""
+        the engine's batch format (FL: ``(bx, by)``; SL: dict).
+
+        Population plans draw the FULL partition pool (one leading row per
+        distinct partition, the same RNG call sequence as a materialized
+        fleet) and gather rows by ``cohort`` population ids; with
+        ``cohort=None`` the raw pool is returned — the Monte-Carlo sweeps
+        stack pools per round and gather inside the jitted rollout, where
+        the cohort is a traced value."""
         bx, by = round_batches(self.x_train, self.y_train, self.parts,
                                self.spec.batch_size, self.spec.local_steps,
                                state.rng, shrink=self.spec.data.shrink_batches)
+        if cohort is not None:
+            sel = np.asarray(cohort) % len(self.parts)
+            bx, by = bx[sel], by[sel]
         if self.spec.engine.kind == "fl":
             return bx, by
         return {"inputs": bx, "targets": by}
 
-    def _round_mask(self, state: PlanState) -> Optional[np.ndarray]:
+    def _round_cohort(self, state: PlanState) -> Optional[np.ndarray]:
+        """The round's sorted cohort population ids (None when the fleet is
+        fully materialized). Key-folded from the environment key (fold 3 —
+        mask is 1, rates 2) so Monte-Carlo sweeps replay the identical
+        cohort stream; weighted by the availability state ENTERING the
+        round when a scenario trace runs (down clients draw at
+        ``COHORT_DOWN_WEIGHT``), uniform otherwise."""
+        if self._population is None:
+            return None
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._env_key, state.round), 3)
+        weights = None
+        scn = self.spec.scenario
+        if scn is not None and scn.needs_mask:
+            up = jnp.asarray(state.avail_up)
+            weights = up + (1.0 - up) * COHORT_DOWN_WEIGHT
+        return np.asarray(sample_cohort(key, self._population,
+                                        self.spec.clients.num_clients,
+                                        weights=weights))
+
+    def _round_mask(self, state: PlanState,
+                    cohort=None) -> Optional[np.ndarray]:
         scn = self.spec.scenario
         if scn is not None and scn.needs_mask:
             # scenario availability trace: jax-native + key-folded per round,
@@ -154,7 +206,16 @@ class Plan:
             mask, up = availability_step(key, jnp.asarray(state.avail_up),
                                          scn.availability)
             state.avail_up = np.asarray(up)
-            return np.asarray(mask, np.float32)
+            mask = np.asarray(mask, np.float32)
+            if cohort is not None:
+                # population trace -> cohort slots. availability_step's
+                # >=1-active guard holds for the population, not the slice:
+                # an all-down cohort keeps slot 0 (same rule as the MC
+                # rollout's jnp.where guard)
+                mask = mask[cohort]
+                if mask.sum() == 0:
+                    mask[0] = 1.0
+            return mask
         rate = self.spec.clients.dropout_rate
         if rate <= 0.0:
             return None
@@ -181,9 +242,10 @@ class Plan:
         """Execute one global round; returns (state, RoundRecord). Batches
         default to the plan's own stream; pass them explicitly to drive the
         engine with external data (the perf benches do)."""
+        cohort = self._round_cohort(state)
         if batches is None:
-            batches = self.round_batches(state)
-        mask = self._round_mask(state)
+            batches = self.round_batches(state, cohort=cohort)
+        mask = self._round_mask(state, cohort=cohort)
         state.engine_state, losses = self._run(state.engine_state, batches,
                                                mask)
         n = self.spec.clients.num_clients
@@ -204,9 +266,19 @@ class Plan:
         elif self.tour is not None:
             uav = float(self.tour.e_first if state.round == 0
                         else self.tour.e_per_round)
-        t_cli = float(self._t_client[active].sum() * steps)
-        e_cli = float(sum(self._t_client[c] * steps * self.edges[c].power_w
-                          for c in active))
+        # compute time/energy price the SAMPLED clients' hardware: under a
+        # population, per-profile constants are gathered to the cohort's
+        # pids (profiles cycle over pids); materialized fleets keep the
+        # per-slot arrays (identical values when cohort == identity)
+        if cohort is not None and self._t_client_prof is not None:
+            prof = cohort % len(self._t_client_prof)
+            t_client, p_edge = (self._t_client_prof[prof],
+                                self._p_edge_prof[prof])
+        else:
+            t_client = self._t_client
+            p_edge = np.asarray([e.power_w for e in self.edges])
+        t_cli = float(t_client[active].sum() * steps)
+        e_cli = float(sum(t_client[c] * steps * p_edge[c] for c in active))
         t_srv = float(self._t_server[active].sum() * steps
                       + self._server_base_s)
         # channel-attached scenarios re-bill link time/energy per round at
@@ -225,7 +297,9 @@ class Plan:
             server_time_s=t_srv,
             server_energy_j=t_srv * RTX_A5000.power_w,
             uav_energy_j=uav, active_clients=len(active),
-            engine=self.engine_label)
+            engine=self.engine_label,
+            cohort_pids=(() if cohort is None
+                         else tuple(int(p) for p in cohort)))
         state.round += 1
         return state, rec
 
@@ -289,8 +363,14 @@ def _resolve_data(spec: ExperimentSpec, data):
 
 
 def _resolve_parts(spec: ExperimentSpec, y_train: np.ndarray) -> list:
-    """Client data partition per ``DataSpec.partition``."""
+    """Client data partition per ``DataSpec.partition``. With a population,
+    partitioning is by population id: ``population_partition_count`` distinct
+    shards cycled over pids (``pid % count``), gathered to the sampled
+    cohort per round — the materialized corner (population == num_clients)
+    builds exactly today's per-client partitions."""
     n = spec.clients.num_clients
+    if spec.clients.population is not None:
+        n = population_partition_count(spec.clients.population, len(y_train))
     if spec.data.partition == "dirichlet":
         return partition_dirichlet(y_train, n, alpha=spec.data.dirichlet_alpha,
                                    seed=spec.seed, min_size=1)
@@ -299,6 +379,20 @@ def _resolve_parts(spec: ExperimentSpec, y_train: np.ndarray) -> list:
     return partition_non_iid(y_train, n, spec.data.classes_per_client,
                              num_classes=spec.model.num_classes,
                              seed=spec.seed)
+
+
+def _profile_consts(spec: ExperimentSpec, client_flops):
+    """Per-PROFILE ``(t_client_s, power_w)`` arrays for cohort billing.
+    Only materialized under a population with one homogeneous per-step
+    client cost (``client_flops``): device profiles cycle over population
+    ids exactly as they cycle over materialized slots, so the per-round
+    gather ``cohort % n_profiles`` reproduces per-slot constants bit-for-bit
+    in the degenerate corner."""
+    if spec.clients.population is None or client_flops is None:
+        return None
+    profs = spec.clients.edge_profiles
+    return (np.asarray([client_step_time_s(client_flops, p) for p in profs]),
+            np.asarray([p.power_w for p in profs]))
 
 
 def _needs_mask(spec: ExperimentSpec) -> bool:
@@ -312,6 +406,35 @@ def _needs_mask(spec: ExperimentSpec) -> bool:
 
 def _validate(spec: ExperimentSpec):
     eng = spec.engine
+    cli = spec.clients
+    if cli.num_clients < 1:
+        raise ValueError(f"ClientSpec.num_clients must be >= 1, got "
+                         f"{cli.num_clients}")
+    if not 0.0 <= cli.dropout_rate < 1.0:
+        raise ValueError(f"ClientSpec.dropout_rate must be in [0, 1), got "
+                         f"{cli.dropout_rate} (1.0 would drop every client "
+                         f"every round)")
+    if cli.population is not None:
+        if cli.population < cli.num_clients:
+            raise ValueError(
+                f"ClientSpec.population={cli.population} is smaller than the "
+                f"cohort num_clients={cli.num_clients}; a round samples "
+                f"num_clients participants FROM the population (use "
+                f"population=None for a fully-materialized fleet)")
+        if cli.population > cli.num_clients:
+            if eng.kind == "sl" and not eng.is_fleet:
+                raise ValueError(
+                    "population sampling with sl/scan is unsupported: the "
+                    "sequential Algorithm 3 engine keeps per-slot client "
+                    "params + Adam moments across rounds, which would leak "
+                    "state between the different population clients a slot "
+                    "maps to; use sl/vmap or sl/shard_map (the EPSL shared "
+                    "client tier) or fl/* (stateless rounds)")
+            if spec.cut_policy.mode == "adaptive":
+                raise ValueError(
+                    "adaptive per-client cuts re-bucket (and so recompile) "
+                    "per sampled cohort; population sampling supports "
+                    "fraction cuts only")
     if eng.kind not in ("fl", "sl"):
         raise ValueError(f"engine.kind must be 'fl' or 'sl', got {eng.kind!r}")
     if eng.client_axis not in ("scan", "vmap", "shard_map"):
@@ -525,7 +648,8 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
                     params0=(prog.params_c0, prog.params_s0), tour=tour,
                     cut_of_client=cut_of_client, flops=flops, edges=edges,
                     consts=consts, engine_fns=engine_fns, timeline=timeline,
-                    serve_dist_m=serve_dist, rate_nominal=rate_nominal)
+                    serve_dist_m=serve_dist, rate_nominal=rate_nominal,
+                    prof_consts=_profile_consts(spec, fl_client))
 
     # ---- model + params ---------------------------------------------------
     stages = CNN_BUILDERS[spec.model.name](spec.model.num_classes)
@@ -589,15 +713,29 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
 
     consts = (t_client, t_server, link_bytes, link_time, link_energy,
               server_base_s)
+    # one homogeneous per-step client cost exists for FL (full model) and
+    # single-cut SL; heterogeneous adaptive cuts fall back to the per-slot
+    # constants (only reachable with population == num_clients, where the
+    # cohort is the identity and per-slot billing is exact)
+    if spec.engine.kind == "fl":
+        cli_fl = flops["full"]
+    elif len(set(cut_of_client)) == 1:
+        cli_fl = flops[cut_of_client[0]][0]
+    else:
+        cli_fl = None
     return Plan(spec, mesh=mesh, arrays=arrays, parts=parts, stages=stages,
                 params0=params0, tour=tour, cut_of_client=cut_of_client,
                 flops=flops, edges=edges, consts=consts,
                 engine_fns=engine_fns, timeline=timeline,
-                serve_dist_m=serve_dist, rate_nominal=rate_nominal)
+                serve_dist_m=serve_dist, rate_nominal=rate_nominal,
+                prof_consts=_profile_consts(spec, cli_fl))
 
 
 # ---------------------------------------------------------------------------
-# per-engine lowering: (init_state, run(state, batches, mask), eval(state))
+# per-engine lowering: (init_state, run(state, batches, mask), eval(state),
+#                       run_raw, eval_acc_raw) — the raw pair is unjitted /
+#                       jittable closures the Monte-Carlo sweeps lower into
+#                       one vmapped rollout (None, None for hetero fleets)
 # ---------------------------------------------------------------------------
 
 def _mask_runner(round_fn, masked: bool, n: int):
@@ -654,7 +792,14 @@ def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
         return classification_metrics(eval_logits(engine_state), y_test,
                                       spec.model.num_classes)
 
-    return init_state, make_run(round_fn), evaluate, make_run(raw_fn)
+    y_test_j = jnp.asarray(y_test)
+
+    def eval_acc_raw(engine_state):
+        return accuracy_from_logits(
+            apply_stages(stages, engine_state, x_test_j), y_test_j)
+
+    return (init_state, make_run(round_fn), evaluate, make_run(raw_fn),
+            eval_acc_raw)
 
 
 def _eval_prefix(client_stack, dropout: bool):
@@ -704,8 +849,17 @@ def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test):
         return classification_metrics(eval_logits(prefix, sp_), y_test,
                                       spec.model.num_classes)
 
+    y_test_j = jnp.asarray(y_test)
+
+    def eval_acc_raw(engine_state):
+        client_stack, sp_, _, _ = engine_state
+        prefix = _eval_prefix(client_stack, dropout=False)
+        return accuracy_from_logits(
+            apply_stages(ss, sp_, apply_stages(cs, prefix, x_test_j)),
+            y_test_j)
+
     return (init_state, _mask_runner(round_fn, False, n), evaluate,
-            _mask_runner(raw_fn, False, n))
+            _mask_runner(raw_fn, False, n), eval_acc_raw)
 
 
 def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
@@ -720,6 +874,14 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
     opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
     dropout = _needs_mask(spec)
     n = spec.clients.num_clients
+    pop = spec.clients.population
+    # EPSL shared client tier: a sampled cohort (population > cohort) can't
+    # keep per-slot client params/Adam moments — slot i maps to a different
+    # population client every round — so the fleet trains ONE client model
+    # broadcast across the cohort axis (state O(1) in both population and
+    # cohort). The materialized corner (population in (None, num_clients))
+    # keeps the stacked tier and its exact record stream.
+    shared = pop is not None and pop > n
     client_axis = spec.engine.client_axis
     fsdp, tp = server_mesh_sizes(mesh)
     server_pspecs_fn = None
@@ -737,12 +899,17 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
                                      server_reduce=spec.engine.server_reduce,
                                      client_dropout=dropout,
                                      client_axis=client_axis,
+                                     client_tier="shared" if shared
+                                     else "stacked",
                                      server_pspecs=sps_specs)
         round_fn = jax.jit(raw_fn, donate_argnums=(0, 1, 2, 3))
 
         def init_state():
-            state = (stack_replicas(cp0, n), sp,
-                     init_stacked(opt_c, cp0, n), opt_s.init(sp))
+            if shared:
+                state = (cp0, sp, opt_c.init(cp0), opt_s.init(sp))
+            else:
+                state = (stack_replicas(cp0, n), sp,
+                         init_stacked(opt_c, cp0, n), opt_s.init(sp))
             state = jax.tree_util.tree_map(jnp.copy, state)
             if sps_specs is not None:
                 from jax.sharding import PartitionSpec as P
@@ -755,18 +922,31 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
                 state = (pc, ps, oc, os_)
             return state
 
+        def global_prefix(client_stack):
+            return (client_stack if shared
+                    else _eval_prefix(client_stack, dropout))
+
         eval_logits = jax.jit(
             lambda cp, sp_: apply_stages(ss, sp_,
                                          apply_stages(cs, cp, x_test_j)))
 
         def evaluate(engine_state):
             client_stack, sp_, _, _ = engine_state
-            prefix = _eval_prefix(client_stack, dropout)
-            return classification_metrics(eval_logits(prefix, sp_), y_test,
-                                          spec.model.num_classes)
+            return classification_metrics(
+                eval_logits(global_prefix(client_stack), sp_), y_test,
+                spec.model.num_classes)
+
+        y_test_j = jnp.asarray(y_test)
+
+        def eval_acc_raw(engine_state):
+            client_stack, sp_, _, _ = engine_state
+            prefix = global_prefix(client_stack)
+            return accuracy_from_logits(
+                apply_stages(ss, sp_, apply_stages(cs, prefix, x_test_j)),
+                y_test_j)
 
         return (init_state, _mask_runner(round_fn, dropout, n), evaluate,
-                _mask_runner(raw_fn, dropout, n))
+                _mask_runner(raw_fn, dropout, n), eval_acc_raw)
 
     def build_program(k):
         return cnn_split_program(stages, params0, k,
@@ -811,7 +991,7 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
 
     # hetero rounds dispatch per bucket on the host: no single jittable
     # round exists, so Monte-Carlo vectorization is unsupported (raw=None)
-    return init_state, run, evaluate, None
+    return init_state, run, evaluate, None, None
 
 
 def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
@@ -821,6 +1001,9 @@ def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
     opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
     masked = _needs_mask(spec)
     n = spec.clients.num_clients
+    pop = spec.clients.population
+    shared = pop is not None and pop > n   # EPSL shared client tier (see
+    #                                        _compile_sl_fleet)
     vocab = spec.model.arch.vocab
     if spec.engine.client_axis == "scan":
         raw_fn = make_multi_client_round(prog.step, opt_c, opt_s,
@@ -830,14 +1013,23 @@ def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
                                      local_rounds=spec.local_steps, mesh=mesh,
                                      server_reduce=spec.engine.server_reduce,
                                      client_dropout=masked,
-                                     client_axis=spec.engine.client_axis)
+                                     client_axis=spec.engine.client_axis,
+                                     client_tier="shared" if shared
+                                     else "stacked")
     round_fn = jax.jit(raw_fn, donate_argnums=(0, 1, 2, 3))
 
     def init_state():
-        state = (stack_replicas(prog.params_c0, n), prog.params_s0,
-                 init_stacked(opt_c, prog.params_c0, n),
-                 opt_s.init(prog.params_s0))
+        if shared:
+            state = (prog.params_c0, prog.params_s0,
+                     opt_c.init(prog.params_c0), opt_s.init(prog.params_s0))
+        else:
+            state = (stack_replicas(prog.params_c0, n), prog.params_s0,
+                     init_stacked(opt_c, prog.params_c0, n),
+                     opt_s.init(prog.params_s0))
         return jax.tree_util.tree_map(jnp.copy, state)
+
+    def global_prefix(client_stack):
+        return client_stack if shared else _eval_prefix(client_stack, masked)
 
     eval_logits = jax.jit(
         lambda cp, sp_: prog.server_logits(
@@ -845,10 +1037,17 @@ def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
 
     def evaluate(engine_state):
         client_stack, sp_, _, _ = engine_state
-        prefix = _eval_prefix(client_stack, masked)
-        logits = eval_logits(prefix, sp_)
+        logits = eval_logits(global_prefix(client_stack), sp_)
         return classification_metrics(logits.reshape(-1, vocab),
                                       np.asarray(y_test).reshape(-1), vocab)
 
+    y_test_flat = jnp.asarray(np.asarray(y_test).reshape(-1))
+
+    def eval_acc_raw(engine_state):
+        client_stack, sp_, _, _ = engine_state
+        logits = prog.server_logits(
+            sp_, prog.step.client_fwd(global_prefix(client_stack), x_test_j))
+        return accuracy_from_logits(logits.reshape(-1, vocab), y_test_flat)
+
     return (init_state, _mask_runner(round_fn, masked, n), evaluate,
-            _mask_runner(raw_fn, masked, n))
+            _mask_runner(raw_fn, masked, n), eval_acc_raw)

@@ -27,6 +27,11 @@ class RoundRecord:
     server_time_s: float = 0.0
     active_clients: int = -1     # clients that survived dropout this round
     engine: str = ""             # "fl/scan" | "fl/vmap" | "sl/scan" | "sl/vmap"
+    # population ids behind this round's cohort slots (ClientSpec.population
+    # sampling; empty when the fleet is fully materialized). Slot i of every
+    # per-client quantity this round belonged to population client
+    # cohort_pids[i].
+    cohort_pids: tuple = ()
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -166,6 +166,14 @@ def count_split_step_flops(step, cp, sp, bx, by):
     return client_fl, server_fl, smashed_sd
 
 
+def accuracy_from_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Scalar held-out accuracy as a pure device computation — the jittable
+    core of ``classification_metrics`` the Monte-Carlo rollouts can run
+    INSIDE a vmapped sweep (the full radar metrics are host numpy)."""
+    return jnp.mean((jnp.argmax(logits, axis=-1)
+                     == jnp.asarray(labels)).astype(jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # metrics (paper Fig. 3 radar: Acc / Precision / Recall / F1 / MCC)
 # ---------------------------------------------------------------------------

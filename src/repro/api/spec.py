@@ -100,11 +100,22 @@ class DataSpec:
 class ClientSpec:
     num_clients: int = 4
     # heterogeneity source: profiles cycled across clients (Eq. 9 scaling
-    # and, under an adaptive CutPolicy, per-client cut selection)
+    # and, under an adaptive CutPolicy, per-client cut selection). With a
+    # population, profiles cycle over POPULATION ids and are gathered to
+    # the sampled cohort each round.
     edge_profiles: Tuple[HardwareProfile, ...] = (JETSON_AGX_ORIN,)
     # P3SL-style straggler masking: per-round probability a client drops
     # out of training/aggregation (fleet engines only; >=1 client kept)
     dropout_rate: float = 0.0
+    # cross-device scale: the total client population M the per-round
+    # cohort of K = num_clients participants is sampled from (uniform, or
+    # availability-weighted under a scenario trace — sim.sample_cohort).
+    # None == today's fully-materialized fleet (no sampling); population
+    # == num_clients is the degenerate corner that reproduces the
+    # materialized records exactly; population > num_clients keeps engine
+    # state O(K): FL cohorts are stateless, parallel-SL cohorts share one
+    # client tier (EPSL).
+    population: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +187,9 @@ class ExperimentSpec:
     def describe(self) -> str:
         """One-line engine label for records/logs."""
         cut = (self.cut_policy.mode if self.engine.kind == "sl" else "-")
+        pop = self.clients.population
+        cohort = ("" if pop is None
+                  else f",cohort={self.clients.num_clients}/{pop}")
         return (f"{self.engine.kind}/{self.engine.client_axis}"
                 f"[cut={cut},link={self.link_policy.compress},"
-                f"mission={'yes' if self.mission else 'no'}]")
+                f"mission={'yes' if self.mission else 'no'}{cohort}]")

@@ -250,6 +250,13 @@ def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan",
     ``aggregate=False`` the FedAvg reduction is skipped and the raw
     client-stacked models are returned instead (the fleet layer's dropout
     path aggregates with a per-round client mask).
+
+    The round is STATELESS in the client axis: every client starts from
+    ``global_params`` with a fresh optimizer state, so the leading batch
+    axis is a *cohort* axis, not a resident-fleet axis — feeding K
+    cohort-gathered batch rows sampled from a population of M >> K clients
+    (``ClientSpec.population``) runs the identical program with engine
+    state O(1) in M (just the global params).
     """
     from ..optim.optimizers import apply_updates
     from .fedavg import fedavg_mean

@@ -10,6 +10,24 @@ from __future__ import annotations
 
 import numpy as np
 
+# ceiling on DISTINCT data partitions materialized for a sampled population
+# (ClientSpec.population): partition construction is host-side Python over
+# the partition count, so a million-client population shares
+# min(population, n_samples, cap) distinct shards, cycled over population
+# ids (pid -> pid % count — the same cycling device edge_profiles use).
+# Data memory stays O(dataset); engine state stays O(cohort).
+POPULATION_PARTITION_CAP = 1024
+
+
+def population_partition_count(population: int, num_samples: int,
+                               *, cap: int = POPULATION_PARTITION_CAP) -> int:
+    """Distinct partitions to build for a ``population``-client fleet:
+    every partition must be non-empty (``<= num_samples``) and host-side
+    construction must stay cheap (``<= cap``)."""
+    if population < 1:
+        raise ValueError(f"population must be >= 1, got {population}")
+    return max(1, min(population, num_samples, cap))
+
 
 def partition_non_iid(labels: np.ndarray, num_clients: int,
                       classes_per_client: int, *, num_classes: int | None = None,

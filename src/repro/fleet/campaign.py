@@ -65,6 +65,10 @@ class CampaignConfig:
     edge_profiles: tuple[HardwareProfile, ...] = (JETSON_AGX_ORIN,)
     # P3SL-style straggler masking: per-round client dropout probability
     dropout_rate: float = 0.0
+    # population-scale rounds: total registered fleet; each round samples a
+    # cohort of num_clients from it (None == fully-materialized fleet).
+    # See ClientSpec.population.
+    population: int | None = None
     # stochastic environment (repro.sim.ScenarioSpec): A2G channel draws,
     # availability traces, multi-UAV dispatch; None keeps the idealized
     # constant-rate / always-available campaign
@@ -108,7 +112,8 @@ def campaign_spec(cfg: CampaignConfig):
                       classes_per_client=cfg.classes_per_client),
         clients=ClientSpec(num_clients=cfg.num_clients,
                            edge_profiles=cfg.edge_profiles,
-                           dropout_rate=cfg.dropout_rate),
+                           dropout_rate=cfg.dropout_rate,
+                           population=cfg.population),
         cut_policy=CutPolicy(
             mode="adaptive" if cfg.adaptive_cuts else "fraction",
             fraction=cfg.client_fraction),

@@ -265,7 +265,8 @@ def make_fleet_fl_round(grad_fn: Callable, opt, *, mesh=None,
 def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
                         mesh=None, server_reduce: str = "mean",
                         client_dropout: bool = False,
-                        client_axis: str = "vmap", server_pspecs=None):
+                        client_axis: str = "vmap", server_pspecs=None,
+                        client_tier: str = "stacked"):
     """One global round of *parallel* split learning over a sharded fleet.
 
     Per local step: every client's prefix runs fwd/bwd batched (vmap over
@@ -305,9 +306,33 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
     frozen for the round, contribute nothing to the server's reduced
     gradient, and are excluded from the closing FedAvg (they rejoin later
     from their stale prefix). A fully-masked round is a no-op on all state.
+
+    ``client_tier`` picks the client-state representation:
+
+      "stacked" — today's resident fleet: per-client params + Adam moments
+                  on the leading client axis, closing FedAvg. State is
+                  O(clients).
+      "shared"  — EPSL cohort mode (Lin et al.): ONE set of client params +
+                  opt state serves every cohort slot. Per local step the
+                  prefix fwd/bwd is vmapped over cohort batches with the
+                  shared params broadcast (``in_axes=(0, None, None)``) and
+                  the client takes one update on the masked cohort-MEAN
+                  gradient — mirroring the server's update, so there is no
+                  closing FedAvg and no per-slot state to leak between the
+                  different population clients occupying a slot across
+                  rounds. Signature/state shape changes: ``params_c`` /
+                  ``oc`` are UNSTACKED; losses stay (local_rounds, clients).
+                  Under ``shard_map`` the client state is replicated and
+                  its gradient all-reduced (psum of masked sums / active
+                  count) exactly like the server's, so every shard applies
+                  the identical update. State is O(1) in both the cohort
+                  and the population.
     """
     if server_reduce not in ("mean", "sum"):
         raise ValueError(server_reduce)
+    if client_tier not in ("stacked", "shared"):
+        raise ValueError(f"client_tier must be 'stacked' or 'shared', "
+                         f"got {client_tier!r}")
     _check_client_axis(client_axis)
     if client_axis == "shard_map":
         mesh = _resolve_shard_map_mesh(mesh)
@@ -400,39 +425,105 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
         params_c_stack = _constrain(agg, constrain_mesh)
         return params_c_stack, params_s, oc_stack, os_, losses
 
+    def _run_round_shared(params_c, params_s, oc, os_, batches, mask):
+        batches = _constrain(batches, constrain_mesh)
+        if constrain_server is not None:
+            params_s = constrain_server(params_s)
+        batches_rm = jax.tree_util.tree_map(
+            lambda x: jnp.swapaxes(x, 0, 1), batches)
+        n_active = (None if mask is None
+                    else jnp.maximum(allreduce_sum(mask.sum()), 1.0))
+        any_active = None if mask is None else allreduce_sum(mask.sum()) > 0
+
+        def per_client_grads(batch, pc, ps):
+            loss, _aux, g_c, g_s = step.grads(pc, ps, batch)
+            return loss, g_c, g_s
+
+        def reduce_g(g, reduce):
+            """Cohort reduction of a per-slot gradient stack: masked mean
+            (or sum), all-reduced over `data` under shard_map."""
+            g32 = g.astype(jnp.float32)
+            if mask is None:
+                if reduce == "mean":
+                    m = jnp.mean(g32, axis=0)
+                    if axis is not None:
+                        m = jax.lax.pmean(m, axis)
+                    return m.astype(g.dtype)
+                return allreduce_sum(jnp.sum(g32, axis=0)).astype(g.dtype)
+            w = mask.reshape((g.shape[0],) + (1,) * (g.ndim - 1))
+            s = allreduce_sum((g32 * w).sum(axis=0))
+            if reduce == "mean":
+                s = s / n_active
+            return s.astype(g.dtype)
+
+        def guard(new, old):
+            # zero active clients -> the whole round is a no-op on state
+            return jax.tree_util.tree_map(
+                lambda nw, o: jnp.where(any_active, nw, o), new, old)
+
+        def round_body(carry, batch_r):
+            params_c, oc, params_s, os_ = carry
+            losses, g_c_stack, g_s_stack = jax.vmap(
+                per_client_grads, in_axes=(0, None, None))(
+                    batch_r, params_c, params_s)
+            # the shared client tier updates like the server: one step on
+            # the masked cohort-MEAN prefix gradient (EPSL)
+            g_c = jax.tree_util.tree_map(lambda g: reduce_g(g, "mean"),
+                                         g_c_stack)
+            up_c, oc_new = opt_c.update(g_c, oc, params_c)
+            pc_new = apply_updates(params_c, up_c)
+            g_s = jax.tree_util.tree_map(lambda g: reduce_g(g, server_reduce),
+                                         g_s_stack)
+            up_s, os_new = opt_s.update(g_s, os_, params_s)
+            ps_new = apply_updates(params_s, up_s)
+            if mask is not None:
+                pc_new, oc_new = guard(pc_new, params_c), guard(oc_new, oc)
+                ps_new, os_new = guard(ps_new, params_s), guard(os_new, os_)
+            return (pc_new, oc_new, ps_new, os_new), losses
+
+        carry = (params_c, oc, params_s, os_)
+        carry, losses = jax.lax.scan(round_body, carry, batches_rm)
+        params_c, oc, params_s, os_ = carry
+        return params_c, params_s, oc, os_, losses
+
+    run_body = _run_round_shared if client_tier == "shared" else _run_round
+
     if client_axis == "shard_map":
         spec_c = P(CLIENT_AXIS_NAME)
+        # shared client state is replicated (its update is all-reduced);
+        # stacked client state shards over `data`
+        state_c = P() if client_tier == "shared" else spec_c
         # losses carry the client axis SECOND: (local_rounds, clients)
-        out_specs = (spec_c, P(), spec_c, P(), P(None, CLIENT_AXIS_NAME))
+        out_specs = (state_c, P(), state_c, P(), P(None, CLIENT_AXIS_NAME))
 
         if client_dropout:
             def body_masked(params_c_stack, params_s, oc_stack, os_, batches,
                             client_mask):
                 mask = jnp.asarray(client_mask, jnp.float32)
-                return _run_round(params_c_stack, params_s, oc_stack, os_,
-                                  batches, mask)
+                return run_body(params_c_stack, params_s, oc_stack, os_,
+                                batches, mask)
             return _client_shard_map(
                 body_masked, mesh,
-                in_specs=(spec_c, P(), spec_c, P(), spec_c, spec_c),
+                in_specs=(state_c, P(), state_c, P(), spec_c, spec_c),
                 out_specs=out_specs)
 
         def body(params_c_stack, params_s, oc_stack, os_, batches):
-            return _run_round(params_c_stack, params_s, oc_stack, os_,
-                              batches, None)
+            return run_body(params_c_stack, params_s, oc_stack, os_,
+                            batches, None)
         return _client_shard_map(
-            body, mesh, in_specs=(spec_c, P(), spec_c, P(), spec_c),
+            body, mesh, in_specs=(state_c, P(), state_c, P(), spec_c),
             out_specs=out_specs)
 
     if client_dropout:
         def global_round_masked(params_c_stack, params_s, oc_stack, os_,
                                 batches, client_mask):
             mask = jnp.asarray(client_mask, jnp.float32)
-            return _run_round(params_c_stack, params_s, oc_stack, os_,
-                              batches, mask)
+            return run_body(params_c_stack, params_s, oc_stack, os_,
+                            batches, mask)
         return global_round_masked
 
     def global_round(params_c_stack, params_s, oc_stack, os_, batches):
-        return _run_round(params_c_stack, params_s, oc_stack, os_, batches,
-                          None)
+        return run_body(params_c_stack, params_s, oc_stack, os_, batches,
+                        None)
 
     return global_round

@@ -9,8 +9,9 @@ reproduces the idealized campaign records exactly.
 """
 from .channel import (ChannelParams, deterministic_rate_bps, path_loss_db,
                       sample_rates_bps, slant_distance_m)
-from .scenario import (AvailabilityParams, ScenarioSpec, availability_init,
-                       availability_step, degenerate_scenario)
+from .scenario import (AvailabilityParams, COHORT_DOWN_WEIGHT, ScenarioSpec,
+                       availability_init, availability_step,
+                       degenerate_scenario, sample_cohort)
 from .mission import MissionTimeline, UavRoute, rollout_mission
 from .monte_carlo import MonteCarloResult, run_monte_carlo
 

@@ -14,9 +14,19 @@ dispatch as the measured baseline (``benchmarks/bench_engine_perf.py``
 logs the ratio; the acceptance gate is >= 3x at 16 seeds on XLA:CPU).
 
 Per-seed outputs are the numeric ``RoundRecord`` fields stacked as
-(seeds, rounds) arrays; ``records_for_seed`` re-assembles a seed's record
-stream (accuracy is NaN — held-out eval inside a vmapped sweep would
-dominate the rollout; evaluate the seeds you care about with the plan).
+(seeds, rounds) arrays, plus ONE held-out accuracy per seed: the rollout
+ends with the plan's jittable accuracy kernel (``accuracy_from_logits``)
+on the final engine state, vmapped with the sweep — so ``summary()``
+reports the across-seed accuracy spread without paying per-round eval.
+Intermediate rounds keep ``accuracy=NaN`` (a per-round eval would dominate
+the rollout; evaluate the seeds you care about with the plan).
+
+Population plans (``ClientSpec.population``) sample their per-round cohort
+INSIDE the rollout with the same key-folding discipline as the plan
+(fold 3 of the per-round key; mask is fold 1, channel rates fold 2), so a
+sweep's cohort stream is bit-identical to a plan compiled at that
+realization seed; batches/masks/billing constants are gathered from the
+population pools by the traced cohort ids.
 
 Supported plans: any single-engine plan (fl/sl x scan/vmap/shard_map,
 homogeneous cut). Hetero-bucketed plans dispatch per bucket on the host
@@ -33,8 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .channel import sample_rates_bps
-from .scenario import (AvailabilityParams, ScenarioSpec, availability_init,
-                       availability_step)
+from .scenario import (COHORT_DOWN_WEIGHT, AvailabilityParams, ScenarioSpec,
+                       availability_init, availability_step, sample_cohort)
 
 _STATS = ("mean", "std", "min", "max", "p10", "p90")
 
@@ -60,7 +70,12 @@ class MonteCarloResult:
         from ..api.records import RoundRecord
         s = self.stacks
         return [RoundRecord(
-            round=r, loss=float(s["loss"][i, r]), accuracy=float("nan"),
+            round=r, loss=float(s["loss"][i, r]),
+            # one held-out eval per seed: the final round carries it,
+            # intermediate rounds stay NaN (see module docstring)
+            accuracy=(float(s["final_accuracy"][i])
+                      if r == self.rounds - 1 and "final_accuracy" in s
+                      else float("nan")),
             link_bytes=float(s["link_bytes"][i, r]),
             link_time_s=float(s["link_time_s"][i, r]),
             link_energy_j=float(s["link_energy_j"][i, r]),
@@ -70,7 +85,9 @@ class MonteCarloResult:
             server_energy_j=float(s["server_energy_j"][i, r]),
             uav_energy_j=float(s["uav_energy_j"][i, r]),
             active_clients=int(s["active_clients"][i, r]),
-            engine=self.engine) for r in range(self.rounds)]
+            engine=self.engine,
+            cohort_pids=(tuple(int(p) for p in s["cohort"][i, r])
+                         if "cohort" in s else ())) for r in range(self.rounds)]
 
     def summary(self) -> dict:
         """Across-seed statistics of campaign totals + the final-round loss."""
@@ -81,6 +98,8 @@ class MonteCarloResult:
             "num_seeds": self.num_seeds, "rounds": self.rounds,
             "mode": self.mode, "engine": self.engine,
             "final_loss": _stats(s["loss"][:, -1]),
+            "final_accuracy": (_stats(s["final_accuracy"])
+                               if "final_accuracy" in s else None),
             "mean_active_clients": _stats(s["active_clients"].mean(axis=1)),
             "total_link_bytes": _stats(s["link_bytes"].sum(axis=1)),
             "total_link_time_s": _stats(s["link_time_s"].sum(axis=1)),
@@ -122,13 +141,47 @@ def _mc_context(plan):
         "server_base_s": float(plan._server_base_s),
         "p_server": RTX_A5000.power_w,
         "rate_bps": spec.link_policy.rate_bps,
+        # population cohort sampling: the availability trace runs over the
+        # POPULATION (n_avail ids); each round draws a cohort of n slots
+        # (fold 3) weighted by the up/down state entering the round when a
+        # scenario trace is attached, gathers batch pool rows (pid %
+        # n_parts) and per-profile billing constants (pid % n_profiles)
+        "pop": spec.clients.population,
+        "n_avail": (spec.clients.population
+                    if spec.clients.population is not None else n),
+        "n_parts": len(plan.parts),
+        "weighted": (spec.clients.population is not None and scn.needs_mask),
+        "t_client_prof": (None if plan._t_client_prof is None
+                          else jnp.asarray(plan._t_client_prof, jnp.float32)),
+        "p_edge_prof": (None if plan._p_edge_prof is None
+                        else jnp.asarray(plan._p_edge_prof, jnp.float32)),
     }
     return ctx, scn
 
 
 def _round_outputs(ctx, kr, state, up, batch, run):
-    """One round: availability mask -> engine round -> channel bill."""
+    """One round: cohort draw -> availability mask -> engine round ->
+    channel bill. Key folds match the plan's: 1 = mask, 2 = rates,
+    3 = cohort."""
+    if ctx["pop"] is not None:
+        # cohort weights use the availability state ENTERING the round
+        # (the plan draws its cohort before stepping the trace)
+        w = (up + (1.0 - up) * COHORT_DOWN_WEIGHT if ctx["weighted"]
+             else None)
+        cohort = sample_cohort(jax.random.fold_in(kr, 3), ctx["pop"],
+                               ctx["n"], weights=w)
+    else:
+        cohort = None
     mask, up = availability_step(jax.random.fold_in(kr, 1), up, ctx["avail"])
+    if cohort is not None:
+        # population trace -> cohort slots; availability_step's >=1-active
+        # guard holds for the population, not the slice, so an all-down
+        # cohort keeps slot 0 (same rule as Plan._round_mask)
+        mask = mask[cohort]
+        mask = jnp.where(mask.sum() > 0, mask,
+                         jnp.zeros(ctx["n"], mask.dtype).at[0].set(1))
+        batch = jax.tree_util.tree_map(
+            lambda x: x[cohort % ctx["n_parts"]], batch)
     state, losses = run(state, batch, mask if ctx["needs_mask"] else None)
     steps = ctx["steps"]
     active = jnp.maximum(mask.sum(), 1.0)
@@ -140,17 +193,26 @@ def _round_outputs(ctx, kr, state, up, batch, run):
         ratio = ctx["rate_nom"] / rates
     else:
         ratio = jnp.ones_like(ctx["l_time"])
+    # compute billing prices the SAMPLED cohort's hardware profiles;
+    # link/server constants stay per-slot (serve geometry is a slot
+    # property — the UAV visits n stops regardless of who is sampled)
+    if cohort is not None and ctx["t_client_prof"] is not None:
+        prof = cohort % ctx["t_client_prof"].shape[0]
+        t_client, p_edge = ctx["t_client_prof"][prof], ctx["p_edge_prof"][prof]
+    else:
+        t_client, p_edge = ctx["t_client"], ctx["p_edge"]
     t_srv = (ctx["t_server"] * mask).sum() * steps + ctx["server_base_s"]
     out = {
         "loss": loss, "active_clients": mask.sum(),
         "link_bytes": (ctx["l_bytes"] * mask).sum() * steps,
         "link_time_s": (ctx["l_time"] * ratio * mask).sum() * steps,
         "link_energy_j": (ctx["l_energy"] * ratio * mask).sum() * steps,
-        "client_time_s": (ctx["t_client"] * mask).sum() * steps,
-        "client_energy_j": (ctx["t_client"] * ctx["p_edge"] * mask).sum()
-        * steps,
+        "client_time_s": (t_client * mask).sum() * steps,
+        "client_energy_j": (t_client * p_edge * mask).sum() * steps,
         "server_time_s": t_srv, "server_energy_j": t_srv * ctx["p_server"],
     }
+    if cohort is not None:
+        out["cohort"] = cohort
     return state, up, out
 
 
@@ -196,11 +258,12 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
     if rounds < 1:
         raise ValueError("need at least one round")
     run = plan._run_raw
+    eval_acc = plan._eval_acc_raw
     batches_all = _stacked_batches(plan, rounds)
     state0 = plan.init().engine_state
     keys = jnp.stack([jax.random.PRNGKey(scn.seed + seed + i)
                       for i in range(num_seeds)])
-    up0 = availability_init(ctx["n"])
+    up0 = availability_init(ctx["n_avail"])
 
     if mode == "vmap":
         def rollout(key, state0, batches_all):
@@ -210,19 +273,21 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
                 state, up, out = _round_outputs(
                     ctx, jax.random.fold_in(key, r), state, up, batch, run)
                 return (state, up), out
-            _, outs = jax.lax.scan(body, (state0, up0),
-                                   (jnp.arange(rounds), batches_all))
-            return outs
+            (state, _), outs = jax.lax.scan(body, (state0, up0),
+                                            (jnp.arange(rounds), batches_all))
+            # one held-out accuracy per seed, fused into the same program
+            return outs, eval_acc(state)
 
         mc = jax.jit(jax.vmap(rollout, in_axes=(0, None, None)))
         # AOT-compile so the timed wall excludes compilation WITHOUT paying
         # a full throwaway sweep
         compiled = mc.lower(keys, state0, batches_all).compile()
         t0 = time.time()
-        outs = compiled(keys, state0, batches_all)
+        outs, accs = compiled(keys, state0, batches_all)
         jax.block_until_ready(outs)
         wall = time.time() - t0
         stacks = {k: np.asarray(v) for k, v in outs.items()}
+        stacks["final_accuracy"] = np.asarray(accs)
     else:
         @jax.jit
         def round_step(key, r, state, up, batch):
@@ -230,8 +295,10 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
                 ctx, jax.random.fold_in(key, r), state, up, batch, run)
             return state, up, out
 
+        eval_fn = jax.jit(eval_acc)
+
         def sweep():
-            rows = []
+            rows, accs = [], []
             for key in keys:
                 state, up = state0, up0
                 per_round = []
@@ -242,20 +309,25 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
                                                 up, batch)
                     per_round.append(out)
                 rows.append(per_round)
-            return rows
+                accs.append(eval_fn(state))
+            return rows, accs
 
         # warm the per-round jit cache with ONE round (all later calls
         # share shapes), then run the sweep once, timed
         warm = jax.tree_util.tree_map(lambda x: x[0], batches_all)
-        jax.block_until_ready(round_step(keys[0], jnp.uint32(0), state0,
-                                         up0, warm))
+        warm_state, _, _ = round_step(keys[0], jnp.uint32(0), state0, up0,
+                                      warm)
+        jax.block_until_ready(eval_fn(warm_state))
         t0 = time.time()
-        rows = sweep()
+        rows, accs = sweep()
         jax.block_until_ready(rows[-1][-1])
         wall = time.time() - t0
-        stacks = {k: np.asarray([[float(out[k]) for out in per_round]
+        # np.asarray (not float): population sweeps carry a (cohort,) id
+        # row per round alongside the scalar bill fields
+        stacks = {k: np.asarray([[np.asarray(out[k]) for out in per_round]
                                  for per_round in rows])
                   for k in rows[0][0]}
+        stacks["final_accuracy"] = np.asarray([float(a) for a in accs])
 
     uav = np.broadcast_to(_uav_rounds(plan, rounds),
                           (num_seeds, rounds)).copy()

@@ -89,6 +89,39 @@ def availability_step(key, up_prev, params: AvailabilityParams):
     return up, up
 
 
+# relative sampling weight of a client whose availability state is DOWN at
+# cohort-draw time: bursty (markov) farms get sampled ~20x less while in
+# their bad state, but are never excluded — they re-enter the pool as soon
+# as they recover (and with a little probability before, so the estimator
+# keeps coverage of the whole population)
+COHORT_DOWN_WEIGHT = 0.05
+
+
+def sample_cohort(key, population: int, cohort: int, weights=None):
+    """Draw ``cohort`` distinct participant ids from ``population``, sorted.
+
+    Gumbel top-k: ``argtop_k(log w + Gumbel)`` is an exact sample without
+    replacement from the normalized ``weights`` (uniform when None) — one
+    fused jax-native draw, no rejection loop, so the compiled plan's host
+    loop and the vmapped Monte-Carlo rollout replay the identical cohort
+    stream from the same folded key (PR 5 discipline; the cohort key is
+    ``fold_in(fold_in(env_key, round), 3)`` — mask is fold 1, rates fold 2).
+
+    Ids return SORTED, so ``cohort == population`` is the identity draw
+    ``[0..M)`` regardless of key or weights — the degenerate corner's
+    cohort stream is today's client ordering, bit for bit.
+    """
+    if not (1 <= cohort <= population):
+        raise ValueError(f"cohort size {cohort} must be in [1, {population}]")
+    u = jax.random.uniform(key, (population,), minval=1e-12, maxval=1.0)
+    gumbel = -jnp.log(-jnp.log(u))
+    if weights is not None:
+        gumbel = gumbel + jnp.log(jnp.maximum(
+            jnp.asarray(weights, jnp.float32), 1e-12))
+    _, ids = jax.lax.top_k(gumbel, cohort)
+    return jnp.sort(ids)
+
+
 @dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
     """The stochastic environment of one experiment.

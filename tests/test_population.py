@@ -1,0 +1,307 @@
+"""Population-scale rounds (``ClientSpec.population``).
+
+The contract under test:
+
+  * validation: malformed ClientSpecs fail loudly (population smaller than
+    the cohort, dropout_rate outside [0, 1), num_clients < 1), and the
+    engine corners population sampling cannot serve (sl/scan's persistent
+    per-slot state, adaptive per-cohort cuts) are rejected at compile time,
+  * ``sample_cohort`` is key-deterministic, sorted, in-range, the identity
+    in the K == M corner, and availability weights down-weight bad-state
+    clients,
+  * the degenerate corner (population == num_clients) runs the ENTIRE
+    cohort path — sampling, pool gather, profile gather — and reproduces
+    the population=None record stream bit-for-bit on every engine,
+  * engine state is O(cohort), not O(population): byte-identical pytrees
+    at M = 1e4 and M = 1e6,
+  * Monte-Carlo sweeps replay the plan's cohort stream (seed 0 == the
+    plan's own realization) and report held-out accuracy per seed.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                       ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec,
+                       compile_experiment)
+from repro.data.partition import (POPULATION_PARTITION_CAP,
+                                  population_partition_count)
+from repro.sim import (COHORT_DOWN_WEIGHT, AvailabilityParams, ChannelParams,
+                       ScenarioSpec, availability_init, availability_step,
+                       run_monte_carlo, sample_cohort)
+
+NUM_CLASSES = 4
+
+
+def _spec(kind="sl", axis="vmap", pop=None, n=4, scenario=None,
+          global_rounds=2):
+    return ExperimentSpec(
+        model=ModelSpec(name="tinycnn", num_classes=NUM_CLASSES),
+        data=DataSpec(kind="synthetic", image_size=16, classes_per_client=2),
+        clients=ClientSpec(num_clients=n, population=pop),
+        cut_policy=CutPolicy(mode="fraction", fraction=0.4),
+        link_policy=LinkPolicy(),
+        engine=EngineSpec(kind=kind, client_axis=axis),
+        mission=MissionSpec(farm_acres=100.0),
+        scenario=scenario,
+        global_rounds=global_rounds, local_steps=2, batch_size=4, seed=0)
+
+
+MARKOV = ScenarioSpec(
+    channel=ChannelParams(kind="a2g"),
+    availability=AvailabilityParams(kind="markov", p_drop=0.4,
+                                    p_recover=0.6),
+    seed=1)
+
+
+def _assert_records_match(recs_a, recs_b, *, expect_pids):
+    assert len(recs_a) == len(recs_b) > 0
+    for a, b in zip(recs_a, recs_b):
+        da, db = a.to_dict(), b.to_dict()
+        for field, va in da.items():
+            if field == "cohort_pids":
+                continue
+            if isinstance(va, float) and np.isfinite(va):
+                assert db[field] == pytest.approx(va, rel=1e-12), field
+            else:
+                assert db[field] == va, field
+        assert tuple(a.cohort_pids) == ()
+        assert tuple(b.cohort_pids) == expect_pids
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_rejects_population_smaller_than_cohort():
+    with pytest.raises(ValueError, match="smaller than the"):
+        compile_experiment(_spec(pop=2, n=4))
+
+
+def test_rejects_bad_dropout_rate_and_client_count():
+    with pytest.raises(ValueError, match="dropout_rate"):
+        compile_experiment(dataclasses.replace(
+            _spec(), clients=ClientSpec(num_clients=4, dropout_rate=1.0)))
+    with pytest.raises(ValueError, match="dropout_rate"):
+        compile_experiment(dataclasses.replace(
+            _spec(), clients=ClientSpec(num_clients=4, dropout_rate=-0.1)))
+    with pytest.raises(ValueError, match="num_clients"):
+        compile_experiment(dataclasses.replace(
+            _spec(), clients=ClientSpec(num_clients=0)))
+
+
+def test_rejects_population_on_sl_scan_and_adaptive_cuts():
+    # sl/scan keeps per-slot client params + Adam moments across rounds —
+    # a sampled cohort would leak one population client's state into
+    # another's slot
+    with pytest.raises(ValueError, match="sl/scan"):
+        compile_experiment(_spec(axis="scan", pop=100))
+    with pytest.raises(ValueError, match="adaptive"):
+        compile_experiment(dataclasses.replace(
+            _spec(pop=100), cut_policy=CutPolicy(mode="adaptive")))
+
+
+def test_describe_gains_cohort_tag():
+    assert _spec().describe() == \
+        "sl/vmap[cut=fraction,link=none,mission=yes]"
+    assert _spec(pop=1000, n=8).describe() == \
+        "sl/vmap[cut=fraction,link=none,mission=yes,cohort=8/1000]"
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling primitive
+# ---------------------------------------------------------------------------
+
+def test_sample_cohort_deterministic_sorted_in_range():
+    k = jax.random.PRNGKey(3)
+    a = np.asarray(sample_cohort(k, 1000, 8))
+    b = np.asarray(sample_cohort(k, 1000, 8))
+    c = np.asarray(sample_cohort(jax.random.fold_in(k, 1), 1000, 8))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert np.all(np.diff(a) > 0)            # sorted, no replacement
+    assert a.min() >= 0 and a.max() < 1000
+    with pytest.raises(ValueError, match="cohort size"):
+        sample_cohort(k, 4, 8)
+
+
+def test_sample_cohort_identity_when_cohort_equals_population():
+    for seed in range(4):
+        ids = np.asarray(sample_cohort(jax.random.PRNGKey(seed), 6, 6))
+        np.testing.assert_array_equal(ids, np.arange(6))
+        # weights cannot change a full draw
+        w = jnp.asarray([1.0, 0.05, 1.0, 0.05, 1.0, 0.05])
+        ids = np.asarray(sample_cohort(jax.random.PRNGKey(seed), 6, 6,
+                                       weights=w))
+        np.testing.assert_array_equal(ids, np.arange(6))
+
+
+def test_sample_cohort_weights_downweight_bad_clients():
+    """Half the population at COHORT_DOWN_WEIGHT must be sampled far less
+    often than the up half (Gumbel top-k == weighted sampling without
+    replacement)."""
+    pop, k = 100, 10
+    w = jnp.concatenate([jnp.ones(50), jnp.full(50, COHORT_DOWN_WEIGHT)])
+    down = 0
+    trials = 200
+    for s in range(trials):
+        ids = np.asarray(sample_cohort(jax.random.PRNGKey(s), pop, k,
+                                       weights=w))
+        down += int((ids >= 50).sum())
+    frac_down = down / (trials * k)
+    assert frac_down < 0.2                   # unweighted would be ~0.5
+
+
+# ---------------------------------------------------------------------------
+# degenerate corner: population == num_clients is bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,axis", [("fl", "scan"), ("fl", "vmap"),
+                                       ("sl", "scan"), ("sl", "vmap")])
+def test_degenerate_population_reproduces_records(kind, axis):
+    """population == num_clients runs the full cohort path (sampling, pool
+    gather, profile gather) yet must reproduce today's record stream
+    exactly — the materialized fleet is a pinned special case."""
+    _, recs0 = compile_experiment(_spec(kind, axis)).run()
+    _, recs1 = compile_experiment(_spec(kind, axis, pop=4)).run()
+    _assert_records_match(recs0, recs1, expect_pids=(0, 1, 2, 3))
+
+
+@pytest.mark.parametrize("kind", ["fl", "sl"])
+def test_degenerate_population_reproduces_records_under_scenario(kind):
+    """Same corner with a stochastic scenario attached: the availability
+    trace runs over the (equal-sized) population and the channel re-bill
+    must not move either."""
+    _, recs0 = compile_experiment(_spec(kind, "vmap", scenario=MARKOV)).run()
+    _, recs1 = compile_experiment(
+        _spec(kind, "vmap", pop=4, scenario=MARKOV)).run()
+    _assert_records_match(recs0, recs1, expect_pids=(0, 1, 2, 3))
+
+
+# ---------------------------------------------------------------------------
+# O(cohort) state
+# ---------------------------------------------------------------------------
+
+def _state_bytes(tree):
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+@pytest.mark.parametrize("kind", ["fl", "sl"])
+def test_engine_state_independent_of_population(kind):
+    """The acceptance bar: a million-client population compiles and runs
+    with engine state whose byte size does not depend on M (FL: stateless
+    cohort rounds; SL: the EPSL shared client tier)."""
+    sizes = {}
+    for pop in (10_000, 1_000_000):
+        plan = compile_experiment(_spec(kind, "vmap", pop=pop, n=8))
+        state = plan.init()
+        sizes[pop] = _state_bytes(state.engine_state)
+        state, rec = plan.run_round(state, with_eval=False)
+        assert len(rec.cohort_pids) == 8
+        assert max(rec.cohort_pids) < pop
+        # data pool stays O(dataset), capped
+        assert len(plan.parts) == population_partition_count(
+            pop, len(plan.y_train))
+        assert len(plan.parts) <= POPULATION_PARTITION_CAP
+    assert sizes[10_000] == sizes[1_000_000]
+
+
+def test_shared_tier_runs_through_shard_map():
+    """The shared client tier lowers through the explicit-collective
+    shard_map engine too (client params replicated, gradients psum'd)."""
+    plan = compile_experiment(_spec("sl", "shard_map", pop=1000, n=4))
+    _, recs = plan.run()
+    assert np.isfinite(recs[-1].loss)
+    assert len(recs[-1].cohort_pids) == 4
+
+
+# ---------------------------------------------------------------------------
+# availability-weighted sampling (plan level)
+# ---------------------------------------------------------------------------
+
+def test_cohort_sampling_follows_availability_trace():
+    """Under a bursty markov trace, sampled cohorts must be enriched in
+    up-state clients relative to the population's up fraction."""
+    scn = ScenarioSpec(
+        availability=AvailabilityParams(kind="markov", p_drop=0.6,
+                                        p_recover=0.2), seed=3)
+    pop, k, rounds = 40, 8, 12
+    plan = compile_experiment(
+        _spec("fl", "vmap", pop=pop, n=k, scenario=scn))
+    state = plan.init()
+    frac_up_pop, frac_up_cohort = [], []
+    env = jax.random.PRNGKey(scn.seed)
+    up = np.asarray(availability_init(pop))
+    for r in range(rounds):
+        # replicate the plan's trace: weights use the state ENTERING the
+        # round, the mask draw (fold 1) advances it
+        up_entering = up.copy()
+        _, up_j = availability_step(
+            jax.random.fold_in(jax.random.fold_in(env, r), 1),
+            jnp.asarray(up), scn.availability)
+        up = np.asarray(up_j)
+        state, rec = plan.run_round(state, with_eval=False)
+        if up_entering.sum() == pop:
+            continue                          # round 0: everyone up
+        frac_up_pop.append(up_entering.mean())
+        frac_up_cohort.append(
+            up_entering[list(rec.cohort_pids)].mean())
+    assert len(frac_up_cohort) > 0
+    assert np.mean(frac_up_cohort) > np.mean(frac_up_pop) + 0.1
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo: cohort replay + held-out accuracy
+# ---------------------------------------------------------------------------
+
+def test_monte_carlo_replays_plan_cohorts_and_reports_accuracy():
+    """Sweep seed 0 must replay the plan's own realization — cohort ids
+    bit-identical, bills within float tolerance — and every seed carries
+    one finite held-out accuracy on its final round."""
+    plan = compile_experiment(
+        _spec("sl", "vmap", pop=50, n=4, scenario=MARKOV,
+              global_rounds=3))
+    _, recs = plan.run()
+    res = run_monte_carlo(plan, 3, mode="vmap")
+    mc = res.records_for_seed(0)
+    for r in range(3):
+        assert mc[r].cohort_pids == recs[r].cohort_pids
+        assert mc[r].loss == pytest.approx(recs[r].loss, rel=2e-5)
+        assert mc[r].client_energy_j == pytest.approx(
+            recs[r].client_energy_j, rel=1e-5)
+        assert mc[r].active_clients == recs[r].active_clients
+    # eval satellite: accuracy spread is real, not NaN
+    acc = res.stacks["final_accuracy"]
+    assert acc.shape == (3,) and np.all(np.isfinite(acc))
+    assert np.isfinite(mc[-1].accuracy)
+    assert np.isnan(mc[0].accuracy)           # intermediate rounds stay NaN
+    stats = res.summary()["final_accuracy"]
+    assert stats is not None and np.isfinite(stats["mean"])
+
+
+def test_monte_carlo_population_vmap_matches_loop():
+    plan = compile_experiment(
+        _spec("sl", "vmap", pop=50, n=4, scenario=MARKOV,
+              global_rounds=3))
+    rv = run_monte_carlo(plan, 3, mode="vmap")
+    rl = run_monte_carlo(plan, 3, mode="loop")
+    np.testing.assert_array_equal(rv.stacks["cohort"], rl.stacks["cohort"])
+    for k in ("loss", "client_energy_j", "link_energy_j", "active_clients",
+              "final_accuracy"):
+        np.testing.assert_allclose(rv.stacks[k], rl.stacks[k],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_monte_carlo_without_population_reports_accuracy():
+    """The eval pass is population-independent: plain plans gain the
+    across-seed accuracy spread too, with no cohort stack."""
+    plan = compile_experiment(_spec("sl", "vmap"))
+    res = run_monte_carlo(plan, 2, mode="vmap")
+    assert "cohort" not in res.stacks
+    assert np.all(np.isfinite(res.stacks["final_accuracy"]))
+    assert res.records_for_seed(0)[0].cohort_pids == ()
