@@ -6,14 +6,18 @@ Reports #edge devices, TSP tour length, per-round UAV energy, load balance.
 """
 from __future__ import annotations
 
-import time
+import os
+import sys
 
 import numpy as np
 
-from repro.core.deployment import (coverage_ok, deploy_edge_devices,
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.deployment import (coverage_ok, deploy_edge_devices,  # noqa: E402
                                    deploy_gasbac, deploy_kmeans,
                                    random_sensors, uniform_grid_sensors)
-from repro.core.trajectory import greedy_tour_plan, plan_tour
+from repro.core.trajectory import greedy_tour_plan, plan_tour  # noqa: E402
+from repro.obs import fenced  # noqa: E402
 
 CR = 200.0
 LAYOUTS = [
@@ -34,10 +38,14 @@ def run(print_csv: bool = True) -> list[dict]:
     for lname, gen in LAYOUTS:
         pts = gen()
         for mname, deploy, planner in METHODS:
-            t0 = time.perf_counter()
-            dep = deploy(pts, CR)
-            plan = planner(dep.edge_coords, base)
-            us = (time.perf_counter() - t0) * 1e6
+            # fenced: blocks on device buffers before reading the clock, so
+            # the measurement is deploy+plan execution, not async dispatch
+            def deploy_and_plan(deploy=deploy, planner=planner):
+                dep = deploy(pts, CR)
+                return dep, planner(dep.edge_coords, base)
+
+            (dep, plan), wall_s = fenced(deploy_and_plan)
+            us = wall_s * 1e6
             loads = dep.loads
             rows.append({
                 "bench": "deployment(fig2)",

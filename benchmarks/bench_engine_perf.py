@@ -54,7 +54,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -69,6 +68,8 @@ from repro.api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,  # noqa: E40
                        ExperimentSpec, ModelSpec, compile_experiment)
 from repro.core.split import SplitStep, apply_stages  # noqa: E402
 from repro.models.cnn import CNN_BUILDERS, cross_entropy_loss  # noqa: E402
+from repro.obs import (NULL_OBS, Obs, ObsConfig, pytree_bytes,  # noqa: E402
+                       time_fenced)
 from repro.optim import adamw, apply_updates  # noqa: E402
 
 CACHE = "results/engine_perf.json"
@@ -95,12 +96,14 @@ def _base_spec(model: str, clients: int, steps: int, batch: int,
         local_steps=steps, batch_size=batch)
 
 
-def bench_spec_variant(spec: ExperimentSpec, *, rounds: int) -> float:
+def bench_spec_variant(spec: ExperimentSpec, *, rounds: int,
+                       obs: Obs = NULL_OBS) -> float:
     """steps/sec of one compiled plan variant (post-warmup). The same
     fixed batch stack drives every round via ``Plan.raw_round`` — rounds
-    queue back-to-back with one block at the end, like the legacy bench
-    (``run_round``'s per-round record assembly would serialize dispatch)."""
-    plan = compile_experiment(spec)
+    queue back-to-back with ONE block at the end (``obs.time_fenced``),
+    like the legacy bench (``run_round``'s per-round record assembly
+    would serialize dispatch)."""
+    plan = compile_experiment(spec, obs=obs)
     state = plan.init()
     batches = plan.round_batches(state)
     es = state.engine_state
@@ -108,17 +111,20 @@ def bench_spec_variant(spec: ExperimentSpec, *, rounds: int) -> float:
     es, losses = plan.raw_round(es, batches)
     jax.block_until_ready(losses)
 
-    t0 = time.time()
-    for _ in range(rounds):
+    def one_round():
+        nonlocal es
         es, losses = plan.raw_round(es, batches)
-    jax.block_until_ready(losses)
+        return losses
+
+    wall = time_fenced(one_round, repeats=rounds)
     n = spec.clients.num_clients * spec.local_steps
-    return rounds * n / (time.time() - t0)
+    return rounds * n / wall
 
 
-def bench_sl_host_loop(spec: ExperimentSpec, *, rounds: int) -> float:
+def bench_sl_host_loop(spec: ExperimentSpec, *, rounds: int,
+                       obs: Obs = NULL_OBS) -> float:
     """Seed-style per-step dispatch; returns steps/sec (post-warmup)."""
-    plan = compile_experiment(spec)
+    plan = compile_experiment(spec, obs=obs)
     clients, steps = spec.clients.num_clients, spec.local_steps
     k = plan.cut_of_client[0]
     stages, params = plan.stages, plan.params0
@@ -146,20 +152,23 @@ def bench_sl_host_loop(spec: ExperimentSpec, *, rounds: int) -> float:
     # warmup / compile
     split_step(cps[0], cops[0], spar, sop, bx[0, 0], by[0, 0])
 
-    t0 = time.time()
-    loss = None
-    for _ in range(rounds):
+    def one_round():
+        nonlocal spar, sop
+        loss = None
         for si in range(steps):
             for ci in range(clients):
                 cps[ci], cops[ci], spar, sop, loss = split_step(
                     cps[ci], cops[ci], spar, sop, bx[ci, si], by[ci, si])
-    jax.block_until_ready(loss)
-    return rounds * steps * clients / (time.time() - t0)
+        return loss
+
+    wall = time_fenced(one_round, repeats=rounds)
+    return rounds * steps * clients / wall
 
 
 def bench_monte_carlo(model: str, *, clients: int = 4, steps: int = 2,
                       batch: int = 8, image: int = 16, seeds: int = 16,
-                      mc_rounds: int = 20) -> dict[str, float]:
+                      mc_rounds: int = 20,
+                      obs: Obs = NULL_OBS) -> dict[str, float]:
     """steps/sec of the vectorized vs per-seed-looped Monte-Carlo scenario
     rollout (``repro.sim.run_monte_carlo``) on a stochastic campaign —
     a2g channel + markov availability over a UAV mission. Both modes run
@@ -175,7 +184,7 @@ def bench_monte_carlo(model: str, *, clients: int = 4, steps: int = 2,
             channel=ChannelParams(kind="a2g"),
             availability=AvailabilityParams(kind="markov", p_drop=0.3,
                                             p_recover=0.5)))
-    plan = compile_experiment(spec)
+    plan = compile_experiment(spec, obs=obs)
     total = seeds * mc_rounds * clients * steps
     out = {}
     for mode in ("vmap", "loop"):
@@ -186,34 +195,36 @@ def bench_monte_carlo(model: str, *, clients: int = 4, steps: int = 2,
 
 def bench_cohort(model: str, population: int, *, clients: int = 8,
                  steps: int = 2, batch: int = 8, image: int = 16,
-                 rounds: int = 10) -> dict[str, dict]:
+                 rounds: int = 10, obs: Obs = NULL_OBS) -> dict[str, dict]:
     """steps/sec + engine-state bytes of one cohort round sampled from a
     ``population``-client fleet (fl/vmap stateless rounds; sl/vmap EPSL
-    shared client tier). The byte size is the O(cohort) acceptance bar:
-    it must not move across populations."""
+    shared client tier). The byte size (``repro.obs.pytree_bytes`` — the
+    same gauge telemetry stamps per round) is the O(cohort) acceptance
+    bar: it must not move across populations."""
     out = {}
     for kind in ("fl", "sl"):
         spec = dataclasses.replace(
             _base_spec(model, clients, steps, batch, image),
             clients=ClientSpec(num_clients=clients, population=population),
             engine=EngineSpec(kind, "vmap"))
-        plan = compile_experiment(spec)
+        plan = compile_experiment(spec, obs=obs)
         state = plan.init()
         es = state.engine_state
-        state_bytes = sum(x.size * x.dtype.itemsize
-                          for x in jax.tree_util.tree_leaves(es)
-                          if hasattr(x, "dtype"))
+        state_bytes = pytree_bytes(es)
         # one representative cohort gather; the compiled round is the same
         # program whichever population ids the rows came from
         batches = plan.round_batches(state,
                                      cohort=plan._round_cohort(state))
         es, losses = plan.raw_round(es, batches)      # warmup / compile
         jax.block_until_ready(losses)
-        t0 = time.time()
-        for _ in range(rounds):
+
+        def one_round():
+            nonlocal es
             es, losses = plan.raw_round(es, batches)
-        jax.block_until_ready(losses)
-        sps = rounds * clients * steps / (time.time() - t0)
+            return losses
+
+        wall = time_fenced(one_round, repeats=rounds)
+        sps = rounds * clients * steps / wall
         out[f"{kind}_cohort"] = {"steps_per_s": sps,
                                  "state_bytes": state_bytes}
     return out
@@ -223,53 +234,74 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         batch: int = 16, image: int = 32, rounds: int = 10,
         print_csv: bool = True, commit: str | None = None,
         mc_seeds: int = 16,
-        populations: tuple[int, ...] | None = None) -> list[dict]:
+        populations: tuple[int, ...] | None = None,
+        obs: Obs | ObsConfig | None = None) -> list[dict]:
+    obs = Obs.ensure(obs)
     base = _base_spec(model, clients, steps, batch, image)
-    variants = {
-        "sl_host_loop": bench_sl_host_loop(base, rounds=rounds),
-        "sl_scanned": bench_spec_variant(base, rounds=rounds),
-        "sl_fleet": bench_spec_variant(
-            dataclasses.replace(base, engine=EngineSpec("sl", "vmap")),
-            rounds=rounds),
-        "sl_shard_map": bench_spec_variant(
-            dataclasses.replace(base, engine=EngineSpec("sl", "shard_map")),
-            rounds=rounds),
-        "fl_scan": bench_spec_variant(
-            dataclasses.replace(base, engine=EngineSpec("fl", "scan")),
-            rounds=rounds),
-        "fl_vmap": bench_spec_variant(
-            dataclasses.replace(base, engine=EngineSpec("fl", "vmap")),
-            rounds=rounds),
-        "fl_shard_map": bench_spec_variant(
-            dataclasses.replace(base, engine=EngineSpec("fl", "shard_map")),
-            rounds=rounds),
-    }
     commit = commit or _commit()
     case = f"c{clients}s{steps}b{batch}"
-    rows = [{"commit": commit, "bench": "engine_perf", "model": model,
-             "case": case, "variant": v, "steps_per_s": round(sps, 2)}
-            for v, sps in variants.items()]
-    # the MC workload is its own fixed case (c4s2b8x<seeds>) independent of
-    # this invocation's engine case; pass --mc-seeds 0 to skip it when
-    # benching several engine cases in one session (avoids duplicate rows)
-    mc = bench_monte_carlo(model, seeds=mc_seeds) if mc_seeds > 0 else {}
-    mc_case = f"c4s2b8x{mc_seeds}"
-    rows += [{"commit": commit, "bench": "engine_perf", "model": model,
-              "case": mc_case, "variant": v, "steps_per_s": round(sps, 2)}
-             for v, sps in mc.items()]
-    # population cohort rounds: one fixed case per M (c8s2b8m<M>), each
-    # trend-gated on steps/s like every other variant; state_bytes rides
-    # along so the log pins the O(cohort) claim per commit. Pass
-    # --population 0 to skip.
     if populations is None:
         populations = (10_000, 100_000, 1_000_000)
-    for pop in [p for p in populations if p > 0]:
-        cres = bench_cohort(model, pop, rounds=rounds)
+    variant_fns = [
+        ("sl_host_loop",
+         lambda: bench_sl_host_loop(base, rounds=rounds, obs=obs)),
+        ("sl_scanned",
+         lambda: bench_spec_variant(base, rounds=rounds, obs=obs)),
+        ("sl_fleet", lambda: bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("sl", "vmap")),
+            rounds=rounds, obs=obs)),
+        ("sl_shard_map", lambda: bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("sl", "shard_map")),
+            rounds=rounds, obs=obs)),
+        ("fl_scan", lambda: bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("fl", "scan")),
+            rounds=rounds, obs=obs)),
+        ("fl_vmap", lambda: bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("fl", "vmap")),
+            rounds=rounds, obs=obs)),
+        ("fl_shard_map", lambda: bench_spec_variant(
+            dataclasses.replace(base, engine=EngineSpec("fl", "shard_map")),
+            rounds=rounds, obs=obs)),
+    ]
+    variants: dict[str, float] = {}
+    rows = []
+    with obs.span("bench", model=model, case=case, commit=commit):
+        for name, fn in variant_fns:
+            with obs.span(name) as sp:
+                variants[name] = fn()
+                sp.note(steps_per_s=round(variants[name], 2))
         rows += [{"commit": commit, "bench": "engine_perf", "model": model,
-                  "case": f"c8s2b8m{pop}", "variant": v,
-                  "steps_per_s": round(r["steps_per_s"], 2),
-                  "state_bytes": r["state_bytes"]}
-                 for v, r in cres.items()]
+                  "case": case, "variant": v, "steps_per_s": round(sps, 2)}
+                 for v, sps in variants.items()]
+        # the MC workload is its own fixed case (c4s2b8x<seeds>) independent
+        # of this invocation's engine case; pass --mc-seeds 0 to skip it
+        # when benching several engine cases in one session (avoids
+        # duplicate rows)
+        mc: dict[str, float] = {}
+        if mc_seeds > 0:
+            with obs.span("monte_carlo", seeds=mc_seeds):
+                mc = bench_monte_carlo(model, seeds=mc_seeds, obs=obs)
+        mc_case = f"c4s2b8x{mc_seeds}"
+        rows += [{"commit": commit, "bench": "engine_perf", "model": model,
+                  "case": mc_case, "variant": v, "steps_per_s": round(sps, 2)}
+                 for v, sps in mc.items()]
+        # population cohort rounds: one fixed case per M (c8s2b8m<M>), each
+        # trend-gated on steps/s like every other variant; state_bytes rides
+        # along so the log pins the O(cohort) claim per commit. Pass
+        # --population 0 to skip.
+        for pop in [p for p in populations if p > 0]:
+            with obs.span(f"cohort_m{pop}", population=pop):
+                cres = bench_cohort(model, pop, rounds=rounds, obs=obs)
+            rows += [{"commit": commit, "bench": "engine_perf",
+                      "model": model, "case": f"c8s2b8m{pop}", "variant": v,
+                      "steps_per_s": round(r["steps_per_s"], 2),
+                      "state_bytes": r["state_bytes"]}
+                     for v, r in cres.items()]
+    if obs:
+        obs.manifest(bench={"bench": "engine_perf", "model": model,
+                            "case": case, "commit": commit,
+                            "rows": len(rows)})
+        obs.flush()
     os.makedirs("results", exist_ok=True)
     log = []
     if os.path.exists(CACHE):
@@ -316,12 +348,24 @@ def main():
                          "same-machine re-measured baseline rows next to a "
                          "new commit's rows, so the trend gate compares "
                          "like with like)")
+    ap.add_argument("--obs", action="store_true",
+                    help="stream telemetry (phase spans, recompile/memory "
+                         "gauges, manifest) for this bench session to "
+                         "results/runs/<run_id>/; render with "
+                         "tools/obs_report.py")
+    ap.add_argument("--obs-root", default="results/runs",
+                    help="run-dir root for --obs (default results/runs)")
     args = ap.parse_args()
+    obs = Obs(ObsConfig(run_root=args.obs_root)) if args.obs else None
     run(model=args.model, clients=args.clients, steps=args.steps,
         batch=args.batch, image=args.image, rounds=args.rounds,
         commit=args.commit, mc_seeds=args.mc_seeds,
         populations=(tuple(args.populations)
-                     if args.populations is not None else None))
+                     if args.populations is not None else None),
+        obs=obs)
+    if obs is not None:
+        obs.close()
+        print(f"obs,run_dir,0,{obs.run_dir}")
 
 
 if __name__ == "__main__":

@@ -17,14 +17,18 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
 import numpy as np
 
-from repro.api import compile_experiment
-from repro.core.paper_train import PaperTrainConfig, paper_spec
-from repro.data.synthetic import SyntheticPestImages
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import compile_experiment  # noqa: E402
+from repro.core.paper_train import PaperTrainConfig, paper_spec  # noqa: E402
+from repro.data.synthetic import SyntheticPestImages  # noqa: E402
+from repro.obs import Obs, ObsConfig, fenced  # noqa: E402
 
 CACHE = "results/sl_accuracy.json"
 
@@ -42,7 +46,8 @@ PAPER_ACC = {
 def run(models=("mobilenetv2",), settings=("FL", "SL_25_75", "SL_15_85"),
         rounds: int = 12, local_steps: int = 4, n_train: int = 1200,
         n_test: int = 240, image_size: int = 32, use_cache: bool = True,
-        print_csv: bool = True) -> list[dict]:
+        print_csv: bool = True, obs=None) -> list[dict]:
+    obs = Obs.ensure(obs)
     cached = {}
     if use_cache and os.path.exists(CACHE):
         cached = {r["case"]: r for r in json.load(open(CACHE))}
@@ -69,14 +74,16 @@ def run(models=("mobilenetv2",), settings=("FL", "SL_25_75", "SL_15_85"),
                 cfg.client_fraction = {"SL_75_25": 0.75, "SL_40_60": 0.40,
                                        "SL_25_75": 0.25,
                                        "SL_15_85": 0.15}[setting]
-            plan = compile_experiment(paper_spec(cfg, kind),
-                                      data=(x, y, xt, yt))
-            # steps/s excludes spec lowering + compile-time FLOP counting,
-            # matching the methodology of the rows already cached (the old
-            # trainers clocked from init onward); `seconds` stays total wall
-            t_train = time.time()
-            state, records = plan.run()
-            train_s = time.time() - t_train
+            with obs.span(f"accuracy/{model}_{setting}"):
+                plan = compile_experiment(paper_spec(cfg, kind),
+                                          data=(x, y, xt, yt), obs=obs)
+                # steps/s excludes spec lowering + compile-time FLOP
+                # counting, matching the methodology of the rows already
+                # cached (the old trainers clocked from init onward);
+                # `seconds` stays total wall. `fenced` blocks on device
+                # buffers before reading the clock (per-round record
+                # assembly already syncs, but the fence makes it explicit).
+                (state, records), train_s = fenced(plan.run)
             n_steps = (plan.num_rounds * cfg.num_clients * cfg.local_steps)
             if kind == "sl":
                 extra = {"link_MB": round(
@@ -117,13 +124,20 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--obs", action="store_true",
+                    help="stream telemetry to results/runs/<run_id>/ "
+                         "(render with tools/obs_report.py)")
     args = ap.parse_args()
+    obs = Obs(ObsConfig()) if args.obs else None
     if args.full:
         run(models=("resnet18", "googlenet", "mobilenetv2"),
             settings=("FL", "SL_75_25", "SL_40_60", "SL_25_75", "SL_15_85"),
-            rounds=args.rounds, use_cache=not args.no_cache)
+            rounds=args.rounds, use_cache=not args.no_cache, obs=obs)
     else:
-        run(rounds=args.rounds, use_cache=not args.no_cache)
+        run(rounds=args.rounds, use_cache=not args.no_cache, obs=obs)
+    if obs is not None:
+        obs.close()
+        print(f"obs,run_dir,0,{obs.run_dir}")
 
 
 if __name__ == "__main__":

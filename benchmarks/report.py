@@ -15,7 +15,15 @@ nonzero when any variant regressed by more than ``--threshold`` (default
 the same commit's ``sl_host_loop`` baseline before comparing: the host
 loop is the never-optimized reference, so the ratio cancels machine speed
 and isolates engine regressions — use it when the two commits' rows come
-from different machines (the committed log vs a CI runner).
+from different machines (the committed log vs a CI runner). Variants the
+previous commit logged that the latest did not are WARNED about, not
+compared (a shrunk bench invocation is not a regression).
+
+``--runs [ROOT]`` lists ``repro.obs`` telemetry run dirs (default
+``results/runs``) cross-linked to the gate: runs whose manifest commit
+matches either side of the last-two-commits comparison are tagged
+``[gate:prev]`` / ``[gate:cur]`` — render one with
+``tools/obs_report.py <run_dir>``.
 """
 from __future__ import annotations
 
@@ -202,6 +210,43 @@ def roofline_section() -> str:
 BASELINE_VARIANT = "sl_host_loop"
 
 
+def _last_two_keyed(rows: list[dict]):
+    """``(prev_commit, cur_commit, prev_keyed, cur_keyed)`` of the engine-
+    perf log, or ``None`` with fewer than two logged commits. Keys are
+    (model, case, variant); the latest row wins when a commit logged a key
+    twice."""
+    rows = [r for r in rows if r.get("bench") == "engine_perf"
+            and "steps_per_s" in r]
+    commits: list[str] = []
+    for r in rows:
+        if r["commit"] not in commits:
+            commits.append(r["commit"])
+    if len(commits) < 2:
+        return None
+    prev_c, cur_c = commits[-2], commits[-1]
+
+    def keyed(commit):
+        out = {}
+        for r in rows:
+            if r["commit"] == commit:
+                out[(r["model"], r["case"], r["variant"])] = r["steps_per_s"]
+        return out
+
+    return prev_c, cur_c, keyed(prev_c), keyed(cur_c)
+
+
+def missing_variants(rows: list[dict]) -> list[str]:
+    """Keys the previous commit logged that the latest commit did NOT —
+    usually a shrunk bench invocation (``--mc-seeds 0``, fewer
+    ``--population`` cases), not a perf regression. The gate WARNS about
+    these instead of failing (and instead of crashing on the lookup)."""
+    lt = _last_two_keyed(rows)
+    if lt is None:
+        return []
+    _, _, prev, cur = lt
+    return ["/".join(k) for k in sorted(set(prev) - set(cur))]
+
+
 def perf_trend(rows: list[dict], *, threshold: float = 0.10,
                relative: bool = False) -> tuple[list[dict], list[str]]:
     """Compare the last two logged commits of the engine-perf log.
@@ -220,24 +265,10 @@ def perf_trend(rows: list[dict], *, threshold: float = 0.10,
     speedup, not machine speed. Keys without a baseline on both sides
     (including the baseline itself) fall back to absolute steps/s.
     """
-    rows = [r for r in rows if r.get("bench") == "engine_perf"
-            and "steps_per_s" in r]
-    commits: list[str] = []
-    for r in rows:
-        if r["commit"] not in commits:
-            commits.append(r["commit"])
-    if len(commits) < 2:
+    lt = _last_two_keyed(rows)
+    if lt is None:
         return [], []
-    prev_c, cur_c = commits[-2], commits[-1]
-
-    def keyed(commit):
-        out = {}
-        for r in rows:
-            if r["commit"] == commit:
-                out[(r["model"], r["case"], r["variant"])] = r["steps_per_s"]
-        return out
-
-    prev, cur = keyed(prev_c), keyed(cur_c)
+    prev_c, cur_c, prev, cur = lt
     comparisons, regressions = [], []
     for key in sorted(set(prev) & set(cur)):
         p, c = prev[key], cur[key]
@@ -290,6 +321,9 @@ def check_perf(path: str = PERF_LOG, *, threshold: float = 0.10,
         print(f"  {c['model']}/{c['case']}/{c['variant']}: "
               f"{c['prev_steps_per_s']} -> {c['cur_steps_per_s']} "
               f"{c['unit']} ({c['delta_pct']:+}%)")
+    for m in missing_variants(rows):
+        print(f"  warning: {m} logged for {prev} but missing from {cur} "
+              f"(shrunk bench invocation?) — not compared")
     if regressions:
         print(f"perf-check: {len(regressions)} REGRESSION(S) "
               f"worse than {threshold:.0%}:")
@@ -297,6 +331,70 @@ def check_perf(path: str = PERF_LOG, *, threshold: float = 0.10,
             print(f"  !! {r}")
         return 1
     print("perf-check: ok")
+    return 0
+
+
+def runs_overview(root: str = "results/runs",
+                  perf_log: str = PERF_LOG) -> list[dict]:
+    """One row per telemetry run dir (``repro.obs``), cross-linked to the
+    perf-trend log: a run whose manifest ``git_commit`` matches one of the
+    last two logged commits is the telemetry stream behind that side of
+    the ``--check`` comparison (``gate_side`` = "prev"/"cur")."""
+    perf_commits: list[str] = []
+    if os.path.exists(perf_log):
+        try:
+            for r in json.load(open(perf_log)):
+                c = r.get("commit")
+                if c and c not in perf_commits:
+                    perf_commits.append(c)
+        except ValueError:
+            pass
+    gate = perf_commits[-2:]
+    rows = []
+    for d in sorted(glob.glob(os.path.join(root, "*"))):
+        man_path = os.path.join(d, "manifest.json")
+        if not os.path.isdir(d) or not os.path.exists(man_path):
+            continue
+        try:
+            man = json.load(open(man_path))
+        except ValueError:
+            man = {}
+        ev_path = os.path.join(d, "events.jsonl")
+        n_events = (sum(1 for _ in open(ev_path))
+                    if os.path.exists(ev_path) else 0)
+        commit = man.get("git_commit", "unknown")
+        rows.append({
+            "run_id": man.get("run_id", os.path.basename(d)),
+            "run_dir": d,
+            "created": man.get("created_utc", "?"),
+            "commit": commit,
+            "plans": len(man.get("plans", [])),
+            "sweeps": len(man.get("sweeps", [])),
+            "events": n_events,
+            "in_perf_log": commit in perf_commits,
+            "gate_side": ("cur" if gate and commit == gate[-1]
+                          else "prev" if len(gate) == 2 and commit == gate[0]
+                          else None),
+        })
+    return rows
+
+
+def show_runs(root: str = "results/runs") -> int:
+    """CLI for ``--runs``: list telemetry run dirs next to the trend gate."""
+    rows = runs_overview(root)
+    if not rows:
+        print(f"runs: no telemetry run dirs under {root} "
+              f"(produce one with bench_engine_perf.py --obs)")
+        return 0
+    print(f"runs: {len(rows)} run dir(s) under {root} "
+          f"(gate sides from {PERF_LOG}; render one with "
+          f"tools/obs_report.py <run_dir>)")
+    for r in rows:
+        side = f" [gate:{r['gate_side']}]" if r["gate_side"] else ""
+        note = "" if r["in_perf_log"] else "  (commit not in perf log)"
+        print(f"  {r['run_id']}  {r['created']}  commit={r['commit']}{side}"
+              f"  plans={r['plans']} sweeps={r['sweeps']}"
+              f" events={r['events']}  {r['run_dir']}{note}")
     return 0
 
 
@@ -320,7 +418,14 @@ def main():
                     help="normalize by each commit's sl_host_loop row "
                          "(cross-machine comparisons, e.g. CI vs the "
                          "committed log)")
+    ap.add_argument("--runs", nargs="?", const="results/runs", default=None,
+                    metavar="ROOT",
+                    help="list repro.obs telemetry run dirs under ROOT "
+                         "(default results/runs) cross-linked to the perf "
+                         "trend gate's last two commits")
     args = ap.parse_args()
+    if args.runs is not None:
+        sys.exit(show_runs(args.runs))
     if args.check:
         sys.exit(check_perf(threshold=args.threshold,
                             relative=args.relative))

@@ -43,6 +43,7 @@ from ..fleet.hetero import (HeteroFleet, assign_cuts_cnn, cnn_split_program,
                             lm_split_program)
 from ..fleet.link import FleetLink
 from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
+from ..obs import NULL_OBS, Obs
 from ..optim import adamw, init_stacked
 from ..sim.channel import deterministic_rate_bps, sample_rates_bps
 from ..sim.mission import MissionTimeline, rollout_mission
@@ -82,9 +83,14 @@ class Plan:
                  params0, tour: Optional[TourPlan], cut_of_client,
                  flops: dict, edges, consts, engine_fns,
                  timeline: Optional[MissionTimeline] = None,
-                 serve_dist_m=None, rate_nominal=None, prof_consts=None):
+                 serve_dist_m=None, rate_nominal=None, prof_consts=None,
+                 obs: Optional[Obs] = None):
         self.spec = spec
         self.mesh = mesh
+        # telemetry facade (repro.obs): the shared disabled instance unless
+        # compile_experiment was handed an ObsConfig — disabled, every
+        # hot-path touch is a branch + no-op call
+        self.obs = obs if obs is not None else NULL_OBS
         self.engine_label = f"{spec.engine.kind}/{spec.engine.client_axis}"
         self.x_train, self.y_train, self.x_test, self.y_test = arrays
         self.parts = parts
@@ -241,54 +247,92 @@ class Plan:
                   with_eval: bool = True) -> tuple[PlanState, RoundRecord]:
         """Execute one global round; returns (state, RoundRecord). Batches
         default to the plan's own stream; pass them explicitly to drive the
-        engine with external data (the perf benches do)."""
-        cohort = self._round_cohort(state)
-        if batches is None:
-            batches = self.round_batches(state, cohort=cohort)
-        mask = self._round_mask(state, cohort=cohort)
-        state.engine_state, losses = self._run(state.engine_state, batches,
-                                               mask)
+        engine with external data (the perf benches do).
+
+        With telemetry enabled (``compile_experiment(..., obs=)``) the
+        round decomposes into spans — ``round/sample`` (cohort/mask draw +
+        host batch gather), ``round/execute`` (engine dispatch, fenced so
+        device wait lands in ``sync_s``), ``round/eval``, ``round/account``
+        (record assembly) — plus one gauge stamp (engine-state bytes, host
+        RSS, recompiles since the last stamp) and the record itself."""
+        obs = self.obs
+        r = state.round
+        obs.round_started(r)
+        with obs.span("round", round=r):
+            with obs.span("round/sample", round=r):
+                cohort = self._round_cohort(state)
+                if batches is None:
+                    batches = self.round_batches(state, cohort=cohort)
+                mask = self._round_mask(state, cohort=cohort)
+            with obs.span("round/execute", round=r) as sp:
+                state.engine_state, losses = self._run(state.engine_state,
+                                                       batches, mask)
+                losses = sp.fence(losses)
+            rec = self._assemble_record(state, losses, mask, cohort,
+                                        with_eval=with_eval)
+            if obs:
+                n = self.spec.clients.num_clients
+                obs.gauge(r, engine_state=state.engine_state,
+                          active_clients=rec.active_clients,
+                          dropped=n - rec.active_clients,
+                          cohort=len(rec.cohort_pids),
+                          link_bytes=rec.link_bytes)
+                obs.record(rec)
+        obs.round_finished(r)
+        state.round += 1
+        return state, rec
+
+    def _assemble_record(self, state: PlanState, losses, mask, cohort, *,
+                         with_eval: bool) -> RoundRecord:
+        """Host-side accounting of one executed round: loss extraction,
+        optional held-out eval, and the analytic energy/link bill."""
+        obs = self.obs
         n = self.spec.clients.num_clients
-        active = np.arange(n) if mask is None else np.flatnonzero(mask > 0)
-        # losses: FL (clients, steps); SL (steps, clients)
-        loss_c = np.asarray(losses)
-        loss = float((loss_c[active, :] if self.spec.engine.kind == "fl"
-                      else loss_c[:, active]).mean())
+        steps = self.spec.local_steps
+        with obs.span("round/account", round=state.round):
+            active = (np.arange(n) if mask is None
+                      else np.flatnonzero(mask > 0))
+            # losses: FL (clients, steps); SL (steps, clients)
+            loss_c = np.asarray(losses)
+            loss = float((loss_c[active, :] if self.spec.engine.kind == "fl"
+                          else loss_c[:, active]).mean())
+            uav = 0.0
+            if self.timeline is not None:
+                uav = self.timeline.uav_energy_j(state.round)
+            elif self.tour is not None:
+                uav = float(self.tour.e_first if state.round == 0
+                            else self.tour.e_per_round)
+            # compute time/energy price the SAMPLED clients' hardware: under
+            # a population, per-profile constants are gathered to the
+            # cohort's pids (profiles cycle over pids); materialized fleets
+            # keep the per-slot arrays (identical values when cohort ==
+            # identity)
+            if cohort is not None and self._t_client_prof is not None:
+                prof = cohort % len(self._t_client_prof)
+                t_client, p_edge = (self._t_client_prof[prof],
+                                    self._p_edge_prof[prof])
+            else:
+                t_client = self._t_client
+                p_edge = np.asarray([e.power_w for e in self.edges])
+            t_cli = float(t_client[active].sum() * steps)
+            e_cli = float(sum(t_client[c] * steps * p_edge[c]
+                              for c in active))
+            t_srv = float(self._t_server[active].sum() * steps
+                          + self._server_base_s)
+            # channel-attached scenarios re-bill link time/energy per round
+            # at the sampled rates (constants x nominal/sampled ratio);
+            # otherwise the hoisted constants stand verbatim
+            ratio = self._round_rate_ratio(state.round)
+            l_time, l_energy = self._link_time, self._link_energy
+            if ratio is not None:
+                l_time, l_energy = l_time * ratio, l_energy * ratio
         if with_eval:
-            state.last_metrics = self.evaluate(state)
+            with obs.span("round/eval", round=state.round):
+                state.last_metrics = self.evaluate(state)
             accuracy = state.last_metrics["accuracy"]
         else:
             accuracy = float("nan")
-        steps = self.spec.local_steps
-        uav = 0.0
-        if self.timeline is not None:
-            uav = self.timeline.uav_energy_j(state.round)
-        elif self.tour is not None:
-            uav = float(self.tour.e_first if state.round == 0
-                        else self.tour.e_per_round)
-        # compute time/energy price the SAMPLED clients' hardware: under a
-        # population, per-profile constants are gathered to the cohort's
-        # pids (profiles cycle over pids); materialized fleets keep the
-        # per-slot arrays (identical values when cohort == identity)
-        if cohort is not None and self._t_client_prof is not None:
-            prof = cohort % len(self._t_client_prof)
-            t_client, p_edge = (self._t_client_prof[prof],
-                                self._p_edge_prof[prof])
-        else:
-            t_client = self._t_client
-            p_edge = np.asarray([e.power_w for e in self.edges])
-        t_cli = float(t_client[active].sum() * steps)
-        e_cli = float(sum(t_client[c] * steps * p_edge[c] for c in active))
-        t_srv = float(self._t_server[active].sum() * steps
-                      + self._server_base_s)
-        # channel-attached scenarios re-bill link time/energy per round at
-        # the sampled rates (constants x nominal/sampled ratio); otherwise
-        # the hoisted constants stand verbatim
-        ratio = self._round_rate_ratio(state.round)
-        l_time, l_energy = self._link_time, self._link_energy
-        if ratio is not None:
-            l_time, l_energy = l_time * ratio, l_energy * ratio
-        rec = RoundRecord(
+        return RoundRecord(
             round=state.round, loss=loss, accuracy=accuracy,
             link_bytes=float(self._link_bytes[active].sum() * steps),
             link_time_s=float(l_time[active].sum() * steps),
@@ -300,8 +344,6 @@ class Plan:
             engine=self.engine_label,
             cohort_pids=(() if cohort is None
                          else tuple(int(p) for p in cohort)))
-        state.round += 1
-        return state, rec
 
     def raw_round(self, engine_state, batches, mask=None):
         """One engine round with NO record assembly or host synchronization:
@@ -318,12 +360,28 @@ class Plan:
     def run(self, rounds: Optional[int] = None, *, with_eval: bool = True
             ) -> tuple[PlanState, list[RoundRecord]]:
         """Init + run ``rounds`` (default: the mission-budgeted round count)
-        and collect the record stream."""
-        state = self.init()
+        and collect the record stream. With telemetry enabled the whole run
+        is one ``run`` span over per-round spans; mission plans additionally
+        emit the tour-leg decomposition (travel/hover/comm on the simulated
+        mission clock — ``fleet.campaign.mission_obs_events``) and the sink
+        is flushed before returning."""
+        obs = self.obs
+        num = self.num_rounds if rounds is None else rounds
         records = []
-        for _ in range(self.num_rounds if rounds is None else rounds):
-            state, rec = self.run_round(state, with_eval=with_eval)
-            records.append(rec)
+        with obs.span("run", rounds=num):
+            with obs.span("init"):
+                state = self.init()
+            for _ in range(num):
+                state, rec = self.run_round(state, with_eval=with_eval)
+                records.append(rec)
+        if obs:
+            if self.tour is not None or self.timeline is not None:
+                # deferred: fleet.campaign imports api.records at module
+                # level; importing it here avoids the package cycle
+                from ..fleet.campaign import mission_obs_events
+                for ev in mission_obs_events(self, records):
+                    obs.event(**ev)
+            obs.flush()
         return state, records
 
 
@@ -557,20 +615,48 @@ def _resolve_mesh(spec: ExperimentSpec, mesh):
     return mesh
 
 
-def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
+def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None,
+                       obs=None) -> Plan:
     """Lower ``spec`` to a ``Plan``. ``data`` is an optional
     ``(x_train, y_train, x_test, y_test)`` tuple (required for
     ``DataSpec(kind='arrays')``); ``mesh`` an optional fleet mesh
     (``launch.mesh.make_fleet_mesh`` — built automatically for
     ``client_axis='shard_map'`` or a ``server_mesh``): the stacked client
     axis of fleet engines shards over ``data``, the SL server suffix over
-    ``fsdp`` x ``tp``."""
+    ``fsdp`` x ``tp``.
+
+    ``obs`` opts into telemetry: an ``repro.obs.ObsConfig`` (or a live
+    ``Obs`` to share one run dir across several plans). Lowering phases
+    emit ``compile/*`` spans, the plan stamps its row into the run
+    manifest, and every ``run_round`` streams spans/gauges/records to
+    ``results/runs/<run_id>/`` (see ``repro.obs``). ``None`` (default)
+    attaches the shared disabled instance — hot paths pay one branch."""
+    obs = Obs.ensure(obs)
+    with obs.span("compile", spec=spec.describe()):
+        plan = _compile_plan(spec, mesh=mesh, data=data, obs=obs)
+    if obs:
+        mesh_shape = (None if plan.mesh is None
+                      else {k: int(v) for k, v in plan.mesh.shape.items()})
+        obs.manifest(plan={
+            "spec": spec.describe(), "engine": plan.engine_label,
+            "model": (spec.model.name if spec.model.family == "cnn"
+                      else spec.model.family),
+            "num_clients": spec.clients.num_clients,
+            "population": spec.clients.population,
+            "rounds": plan.num_rounds, "local_steps": spec.local_steps,
+            "batch_size": spec.batch_size, "mesh": mesh_shape})
+        obs.flush()
+    return plan
+
+
+def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
     _validate(spec)
     n = spec.clients.num_clients
     mesh = _resolve_mesh(spec, mesh)
-    arrays = _resolve_data(spec, data)
-    x_train, y_train, x_test, y_test = arrays
-    parts = _resolve_parts(spec, y_train)
+    with obs.span("compile/data"):
+        arrays = _resolve_data(spec, data)
+        x_train, y_train, x_test, y_test = arrays
+        parts = _resolve_parts(spec, y_train)
     edges = [spec.clients.edge_profiles[i % len(spec.clients.edge_profiles)]
              for i in range(n)]
     link = FleetLink(config=spec.link_policy.config())
@@ -580,21 +666,24 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
     tour = None
     timeline = None
     if spec.mission is not None:
-        coords = client_coords(spec.mission.farm_acres, n, seed=spec.seed)
-        if scn is not None:
-            # scenario missions roll out in time (multi-UAV dispatch, serve
-            # geometry); single-UAV hover is the verbatim plan_tour plan
-            timeline = rollout_mission(
-                coords, np.zeros(2), params=spec.mission.uav,
-                hover_s_per_stop=spec.mission.hover_s_per_stop,
-                comm_s_per_stop=spec.mission.comm_s_per_stop,
-                num_uavs=scn.num_uavs, serve_mode=scn.serve_mode)
-            if scn.num_uavs == 1:
-                tour = timeline.routes[0].tour
-        else:
-            tour = plan_tour(coords, np.zeros(2), params=spec.mission.uav,
-                             hover_s_per_stop=spec.mission.hover_s_per_stop,
-                             comm_s_per_stop=spec.mission.comm_s_per_stop)
+        with obs.span("compile/mission"):
+            coords = client_coords(spec.mission.farm_acres, n, seed=spec.seed)
+            if scn is not None:
+                # scenario missions roll out in time (multi-UAV dispatch,
+                # serve geometry); single-UAV hover is the verbatim
+                # plan_tour plan
+                timeline = rollout_mission(
+                    coords, np.zeros(2), params=spec.mission.uav,
+                    hover_s_per_stop=spec.mission.hover_s_per_stop,
+                    comm_s_per_stop=spec.mission.comm_s_per_stop,
+                    num_uavs=scn.num_uavs, serve_mode=scn.serve_mode)
+                if scn.num_uavs == 1:
+                    tour = timeline.routes[0].tour
+            else:
+                tour = plan_tour(
+                    coords, np.zeros(2), params=spec.mission.uav,
+                    hover_s_per_stop=spec.mission.hover_s_per_stop,
+                    comm_s_per_stop=spec.mission.comm_s_per_stop)
 
     # ---- channel: nominal per-client rates -------------------------------
     # link constants are hoisted at the channel's *deterministic* rate; the
@@ -626,12 +715,15 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
         cfg = spec.model.arch
         k = stack_cut_index(cfg.n_layers, spec.cut_policy.fraction)
         cut_of_client = [k] * n
-        prog = lm_split_program(cfg, jax.random.PRNGKey(spec.seed), k,
-                                link_boundary=link.boundary())
-        sample_bx = jnp.asarray(x_train[:spec.batch_size])
-        sample_by = jnp.asarray(y_train[:spec.batch_size])
-        fl_client, fl_server, smashed_sd = count_split_step_flops(
-            prog.step, prog.params_c0, prog.params_s0, sample_bx, sample_by)
+        with obs.span("compile/params"):
+            prog = lm_split_program(cfg, jax.random.PRNGKey(spec.seed), k,
+                                    link_boundary=link.boundary())
+            sample_bx = jnp.asarray(x_train[:spec.batch_size])
+            sample_by = jnp.asarray(y_train[:spec.batch_size])
+        with obs.span("compile/flops"):
+            fl_client, fl_server, smashed_sd = count_split_step_flops(
+                prog.step, prog.params_c0, prog.params_s0, sample_bx,
+                sample_by)
         flops[k] = (fl_client, fl_server, smashed_sd)
         for cid in range(n):
             lc = client_link(cid)
@@ -640,8 +732,9 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
             link_bytes[cid] = lc.step_wire_bytes(smashed_sd)
             link_time[cid] = lc.step_time_s(smashed_sd)
             link_energy[cid] = lc.step_energy_j(smashed_sd)
-        engine_fns = _compile_sl_stack(spec, mesh, prog,
-                                       jnp.asarray(x_test), y_test)
+        with obs.span("compile/lower"):
+            engine_fns = _compile_sl_stack(spec, mesh, prog,
+                                           jnp.asarray(x_test), y_test)
         consts = (t_client, t_server, link_bytes, link_time, link_energy,
                   server_base_s)
         return Plan(spec, mesh=mesh, arrays=arrays, parts=parts, stages=None,
@@ -649,67 +742,74 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
                     cut_of_client=cut_of_client, flops=flops, edges=edges,
                     consts=consts, engine_fns=engine_fns, timeline=timeline,
                     serve_dist_m=serve_dist, rate_nominal=rate_nominal,
-                    prof_consts=_profile_consts(spec, fl_client))
+                    prof_consts=_profile_consts(spec, fl_client), obs=obs)
 
     # ---- model + params ---------------------------------------------------
-    stages = CNN_BUILDERS[spec.model.name](spec.model.num_classes)
-    params0 = init_stages(jax.random.PRNGKey(spec.seed), stages)
-    sample_x = jnp.asarray(x_train[:spec.batch_size])
-    sample_y = jnp.asarray(y_train[:spec.batch_size])
-    x_test_j = jnp.asarray(x_test)
+    with obs.span("compile/params"):
+        stages = CNN_BUILDERS[spec.model.name](spec.model.num_classes)
+        params0 = init_stages(jax.random.PRNGKey(spec.seed), stages)
+        sample_x = jnp.asarray(x_train[:spec.batch_size])
+        sample_y = jnp.asarray(y_train[:spec.batch_size])
+        x_test_j = jnp.asarray(x_test)
 
     if spec.engine.kind == "fl":
         cut_of_client: list[int] = []
-        step_flops = count_fl_step_flops(stages, params0, sample_x, sample_y)
+        with obs.span("compile/flops"):
+            step_flops = count_fl_step_flops(stages, params0, sample_x,
+                                             sample_y)
         flops["full"] = step_flops
         for c in range(n):
             t_client[c] = client_step_time_s(step_flops, edges[c])
         server_base_s = FL_SERVER_AGG_S
-        engine_fns = _compile_fl(spec, mesh, stages, params0, x_test_j,
-                                 y_test)
+        with obs.span("compile/lower"):
+            engine_fns = _compile_fl(spec, mesh, stages, params0, x_test_j,
+                                     y_test)
     else:
         # cut assignment: one fraction-derived cut, or per-client adaptive
         # cuts under the (optionally mission-derived) link deadline checked
         # against each client's nominal channel rate
-        max_link_s = spec.cut_policy.max_link_s
-        if max_link_s is None and spec.mission is not None:
-            max_link_s = mission_max_link_s(spec.mission.hover_s_per_stop,
-                                            spec.mission.comm_s_per_stop,
-                                            spec.local_steps)
-        if spec.cut_policy.mode == "adaptive":
-            cut_of_client = assign_cuts_cnn(
-                stages, params0, sample_x, edges=edges,
-                links=[client_link(c).config for c in range(n)],
-                min_client_layers=spec.cut_policy.min_client_layers,
-                max_link_s=max_link_s)
-        else:
-            cut_of_client = [cut_index_for_fraction(
-                stages, spec.cut_policy.fraction)] * n
+        with obs.span("compile/cuts"):
+            max_link_s = spec.cut_policy.max_link_s
+            if max_link_s is None and spec.mission is not None:
+                max_link_s = mission_max_link_s(
+                    spec.mission.hover_s_per_stop,
+                    spec.mission.comm_s_per_stop, spec.local_steps)
+            if spec.cut_policy.mode == "adaptive":
+                cut_of_client = assign_cuts_cnn(
+                    stages, params0, sample_x, edges=edges,
+                    links=[client_link(c).config for c in range(n)],
+                    min_client_layers=spec.cut_policy.min_client_layers,
+                    max_link_s=max_link_s)
+            else:
+                cut_of_client = [cut_index_for_fraction(
+                    stages, spec.cut_policy.fraction)] * n
         # hoisted per-step constants, per distinct cut
         by_cut: dict[int, list[int]] = {}
         for cid, k in enumerate(cut_of_client):
             by_cut.setdefault(int(k), []).append(cid)
-        for k, ids in by_cut.items():
-            cs, cp = list(stages[:k]), list(params0[:k])
-            ss, sp = list(stages[k:]), list(params0[k:])
-            fl_client, fl_server, smashed_sd = count_sl_step_flops(
-                cs, cp, ss, sp, sample_x, sample_y)
-            flops[k] = (fl_client, fl_server, smashed_sd)
-            for cid in ids:
-                lc = client_link(cid)
-                t_client[cid] = client_step_time_s(fl_client, edges[cid])
-                t_server[cid] = roofline_s(fl_server, RTX_A5000)
-                link_bytes[cid] = lc.step_wire_bytes(smashed_sd)
-                link_time[cid] = lc.step_time_s(smashed_sd)
-                link_energy[cid] = lc.step_energy_j(smashed_sd)
-        if spec.engine.client_axis == "scan":
-            engine_fns = _compile_sl_scan(spec, stages, params0,
-                                          cut_of_client[0], link, x_test_j,
-                                          y_test)
-        else:
-            engine_fns = _compile_sl_fleet(spec, mesh, stages, params0,
-                                           cut_of_client, link, x_test_j,
-                                           y_test)
+        with obs.span("compile/flops"):
+            for k, ids in by_cut.items():
+                cs, cp = list(stages[:k]), list(params0[:k])
+                ss, sp = list(stages[k:]), list(params0[k:])
+                fl_client, fl_server, smashed_sd = count_sl_step_flops(
+                    cs, cp, ss, sp, sample_x, sample_y)
+                flops[k] = (fl_client, fl_server, smashed_sd)
+                for cid in ids:
+                    lc = client_link(cid)
+                    t_client[cid] = client_step_time_s(fl_client, edges[cid])
+                    t_server[cid] = roofline_s(fl_server, RTX_A5000)
+                    link_bytes[cid] = lc.step_wire_bytes(smashed_sd)
+                    link_time[cid] = lc.step_time_s(smashed_sd)
+                    link_energy[cid] = lc.step_energy_j(smashed_sd)
+        with obs.span("compile/lower"):
+            if spec.engine.client_axis == "scan":
+                engine_fns = _compile_sl_scan(spec, stages, params0,
+                                              cut_of_client[0], link,
+                                              x_test_j, y_test)
+            else:
+                engine_fns = _compile_sl_fleet(spec, mesh, stages, params0,
+                                               cut_of_client, link, x_test_j,
+                                               y_test)
 
     consts = (t_client, t_server, link_bytes, link_time, link_energy,
               server_base_s)
@@ -728,7 +828,7 @@ def compile_experiment(spec: ExperimentSpec, *, mesh=None, data=None) -> Plan:
                 flops=flops, edges=edges, consts=consts,
                 engine_fns=engine_fns, timeline=timeline,
                 serve_dist_m=serve_dist, rate_nominal=rate_nominal,
-                prof_consts=_profile_consts(spec, cli_fl))
+                prof_consts=_profile_consts(spec, cli_fl), obs=obs)
 
 
 # ---------------------------------------------------------------------------

@@ -34,4 +34,20 @@ class RoundRecord:
     cohort_pids: tuple = ()
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        """JSON-serializable dict of the record. Field values can arrive as
+        numpy scalars (``cohort_pids`` gathered from a device cohort,
+        metrics pulled out of jitted evals) and ``json.dumps`` refuses
+        those — every scalar is coerced to its Python equivalent here, so
+        any sink/report can dump the result verbatim."""
+        return {k: _jsonable(v)
+                for k, v in dataclasses.asdict(self).items()}
+
+
+def _jsonable(v):
+    """Python-native scalar(s) for one record field: numpy/jax scalars via
+    ``item()``, tuples element-wise (``cohort_pids``)."""
+    if isinstance(v, tuple):
+        return tuple(_jsonable(x) for x in v)
+    if hasattr(v, "item"):
+        return v.item()
+    return v

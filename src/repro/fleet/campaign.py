@@ -99,6 +99,71 @@ def campaign_totals(records, tour) -> dict:
     }
 
 
+def mission_obs_events(plan, records) -> list[dict]:
+    """Tour legs as telemetry spans: one event per (round, UAV, leg) on the
+    SIMULATED mission clock, so a run's UAV dwell decomposes into
+
+      travel  cruise between stops (tour length / cruise speed V)
+      hover   serve-window dwell while clients compute (the paper's
+              ``hover_s_per_stop`` budget — this is the compute window)
+      comm    the per-stop communication dwell that prices the link
+              (``comm_s_per_stop`` — the window ``mission_max_link_s``
+              bounds adaptive cuts against)
+
+    Events carry ``clock: "mission"`` and ``t_mission_s`` (seconds into the
+    mission) instead of the wall-clock ``t`` of ordinary spans — wall time
+    of a simulated campaign says nothing about UAV endurance. Aggregation
+    is per round (hover/comm dwell interleave per stop in flight; the
+    decomposition bills their totals). ``Plan.run`` emits these into the
+    event stream when telemetry is on and a mission is attached;
+    ``tools/obs_report.py`` renders the breakdown next to the wall-clock
+    phases.
+    """
+    mission = plan.spec.mission
+    if mission is None or not records:
+        return []
+    v = max(mission.uav.V, 1e-9)
+    events = []
+    if plan.timeline is not None:
+        tl = plan.timeline
+        starts = tl.round_start_s
+        for rec in records:
+            r = rec.round
+            t0 = float(starts[r]) if r < len(starts) else float(
+                starts[-1] + (r - len(starts) + 1) * tl.round_duration_s)
+            for route in tl.routes:
+                legs = (("travel", route.tour.tour_length / v),
+                        ("hover", len(route.client_ids)
+                         * mission.hover_s_per_stop),
+                        ("comm", len(route.client_ids)
+                         * mission.comm_s_per_stop))
+                t = t0
+                for name, dur in legs:
+                    events.append({"ev": "mission_span",
+                                   "name": f"mission/{name}",
+                                   "round": r, "uav": route.uav,
+                                   "clock": "mission",
+                                   "t_mission_s": round(t, 3),
+                                   "dur_s": round(float(dur), 3)})
+                    t += dur
+        return events
+    tour = plan.tour
+    n = plan.spec.clients.num_clients
+    legs = (("travel", tour.tour_length / v),
+            ("hover", n * mission.hover_s_per_stop),
+            ("comm", n * mission.comm_s_per_stop))
+    round_s = sum(d for _, d in legs)
+    for rec in records:
+        t = rec.round * round_s
+        for name, dur in legs:
+            events.append({"ev": "mission_span", "name": f"mission/{name}",
+                           "round": rec.round, "uav": 0, "clock": "mission",
+                           "t_mission_s": round(t, 3),
+                           "dur_s": round(float(dur), 3)})
+            t += dur
+    return events
+
+
 def campaign_spec(cfg: CampaignConfig):
     """The ``ExperimentSpec`` a legacy ``CampaignConfig`` stands for: the
     parallel fleet SL engine (``sl/vmap``) under a UAV mission."""

@@ -1,0 +1,209 @@
+"""``repro.obs`` — run-wide telemetry behind every compiled Plan.
+
+Zero-dependency, **off by default**: a plan compiled without
+``obs=ObsConfig(...)`` carries the shared disabled instance whose every
+hot-path touch is a branch plus a no-op call. Enabled, one run writes
+
+    results/runs/<run_id>/
+      manifest.json     # spec describe(), jax/backend, mesh, git commit
+      events.jsonl      # spans, gauges, records, mission spans, notes
+      profile/          # optional jax.profiler trace (profile_rounds=)
+
+through four pieces (each its own module):
+
+* ``timeline``  — nestable phase timers with explicit device fencing
+  (``span.fence`` separates device-sync wait from host cost);
+* ``gauges``    — recompile counter (jax monitoring events), engine-state
+  pytree bytes (the PR-6 O(cohort) pin), host RSS;
+* ``sink``      — buffered JSONL event stream + merged run manifest;
+* ``profiler``  — opt-in ``jax.profiler`` capture scoped to rounds N..M.
+
+Render a run with ``tools/obs_report.py <run_dir>``; cross-link run dirs
+with the perf trend log via ``benchmarks/report.py --runs``.
+
+Usage::
+
+    from repro.obs import ObsConfig
+    plan = compile_experiment(spec, obs=ObsConfig())
+    state, records = plan.run()          # spans/gauges/records stream out
+    plan.obs.close()                     # flush the sink
+    print(plan.obs.run_dir)
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Optional, Tuple
+
+from .gauges import global_counter, host_rss_bytes, pytree_bytes
+from .profiler import ProfilerCapture
+from .sink import JsonlSink, NullSink, json_default, new_run_id
+from .timeline import (NULL_SPAN, Timeline, fenced,  # noqa: F401 (re-export)
+                       time_fenced)
+
+__all__ = ["Obs", "ObsConfig", "NULL_OBS", "pytree_bytes", "host_rss_bytes",
+           "fenced", "time_fenced", "json_default"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Telemetry knobs handed to ``compile_experiment(..., obs=)``."""
+    enabled: bool = True
+    run_root: str = "results/runs"   # run dirs are created under here
+    run_id: Optional[str] = None     # default: UTC timestamp + pid
+    gauge_every: int = 1             # rounds between gauge stamps (0 = off)
+    # (start, stop) inclusive round window for jax.profiler capture; None
+    # keeps the profiler off (it is never free)
+    profile_rounds: Optional[Tuple[int, int]] = None
+    buffer_events: int = 256         # sink flush granularity
+
+
+def _git_commit() -> str:
+    import subprocess
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+class Obs:
+    """One run's telemetry facade: timeline + gauges + sink + profiler.
+
+    Truthiness is the enabled flag — hot paths guard with ``if obs:``.
+    Every method on a disabled instance is safe and does nothing.
+    """
+
+    def __init__(self, config: Optional[ObsConfig] = None):
+        self.config = config = config if config is not None else ObsConfig()
+        self.enabled = config.enabled
+        if not self.enabled:
+            self.sink = NullSink()
+            self.timeline = Timeline(self.sink, enabled=False)
+            self.profiler = ProfilerCapture(None, "")
+            self._counter = None
+            return
+        import os
+        run_id = config.run_id or new_run_id()
+        run_dir = os.path.join(config.run_root, run_id)
+        self.sink = JsonlSink(run_dir, buffer=config.buffer_events)
+        self.timeline = Timeline(self.sink, enabled=True)
+        self.profiler = ProfilerCapture(config.profile_rounds,
+                                        os.path.join(run_dir, "profile"))
+        self._counter = global_counter()
+        self._compiles0, self._compile_s0 = self._counter.snapshot()
+        self._gauge_mark = self._compiles0, self._compile_s0
+        import jax
+        self.manifest(
+            run_id=run_id,
+            created_utc=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            jax_version=jax.__version__,
+            backend=jax.default_backend(),
+            device_count=jax.device_count(),
+            git_commit=_git_commit(),
+            argv=list(sys.argv),
+            recompile_counter=("available" if self._counter.available
+                               else "unavailable"),
+        )
+
+    # ---- construction helpers --------------------------------------------
+
+    @classmethod
+    def ensure(cls, obs) -> "Obs":
+        """Normalize the ``obs=`` argument: None -> the shared disabled
+        instance, an ObsConfig -> a fresh Obs, an Obs -> itself."""
+        if obs is None:
+            return NULL_OBS
+        if isinstance(obs, ObsConfig):
+            return cls(obs)
+        return obs
+
+    @classmethod
+    def disabled(cls) -> "Obs":
+        return cls(ObsConfig(enabled=False))
+
+    def __bool__(self) -> bool:
+        return self.enabled
+
+    @property
+    def run_dir(self) -> Optional[str]:
+        return self.sink.run_dir
+
+    # ---- event stream -----------------------------------------------------
+
+    def span(self, name: str, **fields):
+        """Nestable phase timer (see ``obs.timeline``)."""
+        return self.timeline.span(name, **fields)
+
+    def event(self, ev: str, **fields) -> None:
+        """Emit one free-form event line (``ev`` names its type)."""
+        if not self.enabled:
+            return
+        self.sink.emit({"ev": ev,
+                        "t": round(time.perf_counter() - self.timeline.t0, 6),
+                        **fields})
+
+    def record(self, round_record) -> None:
+        """Emit a RoundRecord as a ``record`` event (JSON-safe to_dict)."""
+        if not self.enabled:
+            return
+        self.event("record", **round_record.to_dict())
+
+    def gauge(self, round_index: int, engine_state=None, **fields) -> None:
+        """Stamp the per-round gauges: recompiles since the last stamp,
+        engine-state bytes, host RSS, plus any caller tallies (cohort
+        size, dropped clients, link bytes, ...)."""
+        if not self.enabled:
+            return
+        every = self.config.gauge_every
+        if every <= 0 or round_index % every:
+            return
+        ev = {"round": round_index,
+              "rss_bytes": host_rss_bytes(), **fields}
+        if engine_state is not None:
+            ev["state_bytes"] = pytree_bytes(engine_state)
+        if self._counter is not None and self._counter.available:
+            c, s = self._counter.snapshot()
+            c0, s0 = self._gauge_mark
+            ev["compiles"] = c - c0
+            ev["compile_s"] = round(s - s0, 6)
+            self._gauge_mark = (c, s)
+        self.event("gauge", **ev)
+
+    def compiles_total(self) -> int:
+        """Backend compiles since this Obs was created (0 if the counter
+        hook is unavailable)."""
+        if self._counter is None or not self._counter.available:
+            return 0
+        return self._counter.snapshot()[0] - self._compiles0
+
+    def manifest(self, **fields) -> None:
+        """Merge fields into ``manifest.json`` (``plan=`` appends to the
+        manifest's ``plans`` list — one run may compile several)."""
+        self.sink.write_manifest(fields)
+
+    # ---- profiler + lifecycle --------------------------------------------
+
+    def round_started(self, round_index: int) -> None:
+        if self.enabled:
+            self.profiler.round_started(round_index)
+
+    def round_finished(self, round_index: int) -> None:
+        if self.enabled:
+            self.profiler.round_finished(round_index)
+
+    def flush(self) -> None:
+        self.sink.flush()
+
+    def close(self) -> None:
+        """Stop a live profiler capture, record its status, flush."""
+        if self.enabled:
+            self.profiler.close()
+            if self.profiler.status != "off":
+                self.manifest(profiler=self.profiler.status)
+        self.sink.close()
+
+
+NULL_OBS = Obs(ObsConfig(enabled=False))

@@ -1,0 +1,57 @@
+"""Opt-in ``jax.profiler`` trace capture scoped to rounds N..M of a run.
+
+``ObsConfig(profile_rounds=(2, 4))`` arms a capture that starts when round
+2 begins and stops after round 4 ends; the trace lands in
+``<run_dir>/profile/`` (open with TensorBoard's profile plugin or
+Perfetto). Capture failures never fail the run — the status lands in the
+manifest instead (``"unavailable: ..."``), because the profiler's native
+hooks are the one piece of this subsystem the pinned toolchain could drop.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+
+class ProfilerCapture:
+    """Start/stop ``jax.profiler`` around a contiguous round window."""
+
+    def __init__(self, rounds: Optional[Tuple[int, int]], out_dir: str):
+        self.rounds = tuple(rounds) if rounds is not None else None
+        if self.rounds is not None and self.rounds[0] > self.rounds[1]:
+            raise ValueError(f"profile_rounds=(start, stop) needs start <= "
+                             f"stop, got {self.rounds}")
+        self.out_dir = out_dir
+        self.active = False
+        self.status = "off" if self.rounds is None else "armed"
+
+    def round_started(self, round_index: int) -> None:
+        if (self.rounds is None or self.active
+                or round_index != self.rounds[0]):
+            return
+        try:
+            import jax.profiler
+            os.makedirs(self.out_dir, exist_ok=True)
+            jax.profiler.start_trace(self.out_dir)
+            self.active = True
+            self.status = f"tracing rounds {self.rounds[0]}..{self.rounds[1]}"
+        except Exception as e:                      # never fail the run
+            self.status = f"unavailable: {type(e).__name__}: {e}"
+
+    def round_finished(self, round_index: int) -> None:
+        if self.active and round_index >= self.rounds[1]:
+            self._stop()
+
+    def close(self) -> None:
+        """Stop a still-open capture (a run shorter than the window)."""
+        if self.active:
+            self._stop()
+
+    def _stop(self) -> None:
+        try:
+            import jax.profiler
+            jax.profiler.stop_trace()
+            self.status = f"captured -> {self.out_dir}"
+        except Exception as e:
+            self.status = f"stop failed: {type(e).__name__}: {e}"
+        self.active = False

@@ -235,7 +235,8 @@ def _uav_rounds(plan, rounds: int) -> np.ndarray:
 
 
 def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
-                    mode: str = "vmap", seed: int = 0) -> MonteCarloResult:
+                    mode: str = "vmap", seed: int = 0,
+                    obs=None) -> MonteCarloResult:
     """Sweep ``num_seeds`` scenario realizations of ``plan``.
 
     ``mode="vmap"`` (default): ONE jitted program — ``lax.scan`` over
@@ -250,20 +251,33 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
     plan compiled with that scenario seed — in particular, seed 0 of a
     ``seed=0`` sweep replays the plan's own ``run()`` realization
     (pinned by ``tests/test_sim.py``).
+
+    Telemetry: the sweep inherits ``plan.obs`` (pass ``obs=`` to override);
+    enabled, it emits ``mc/setup`` / ``mc/compile`` / ``mc/execute`` /
+    ``mc/summarize`` spans plus a ``note`` event and a manifest ``sweep``
+    entry recording the seed batch (``scn.seed + seed .. + num_seeds-1``).
+    ``wall_s`` semantics are untouched — the timed region is the same
+    fenced dispatch with or without telemetry.
     """
     if mode not in ("vmap", "loop"):
         raise ValueError(f"mode must be 'vmap' or 'loop', got {mode!r}")
+    from ..obs import NULL_OBS, Obs
+    if obs is None:
+        obs = getattr(plan, "obs", NULL_OBS)
+    else:
+        obs = Obs.ensure(obs)
     ctx, scn = _mc_context(plan)
     rounds = plan.num_rounds if rounds is None else rounds
     if rounds < 1:
         raise ValueError("need at least one round")
     run = plan._run_raw
     eval_acc = plan._eval_acc_raw
-    batches_all = _stacked_batches(plan, rounds)
-    state0 = plan.init().engine_state
-    keys = jnp.stack([jax.random.PRNGKey(scn.seed + seed + i)
-                      for i in range(num_seeds)])
-    up0 = availability_init(ctx["n_avail"])
+    with obs.span("mc/setup", seeds=num_seeds, rounds=rounds, mode=mode):
+        batches_all = _stacked_batches(plan, rounds)
+        state0 = plan.init().engine_state
+        keys = jnp.stack([jax.random.PRNGKey(scn.seed + seed + i)
+                          for i in range(num_seeds)])
+        up0 = availability_init(ctx["n_avail"])
 
     if mode == "vmap":
         def rollout(key, state0, batches_all):
@@ -281,13 +295,16 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
         mc = jax.jit(jax.vmap(rollout, in_axes=(0, None, None)))
         # AOT-compile so the timed wall excludes compilation WITHOUT paying
         # a full throwaway sweep
-        compiled = mc.lower(keys, state0, batches_all).compile()
-        t0 = time.time()
-        outs, accs = compiled(keys, state0, batches_all)
-        jax.block_until_ready(outs)
-        wall = time.time() - t0
-        stacks = {k: np.asarray(v) for k, v in outs.items()}
-        stacks["final_accuracy"] = np.asarray(accs)
+        with obs.span("mc/compile", mode=mode):
+            compiled = mc.lower(keys, state0, batches_all).compile()
+        with obs.span("mc/execute", mode=mode):
+            t0 = time.time()
+            outs, accs = compiled(keys, state0, batches_all)
+            jax.block_until_ready(outs)
+            wall = time.time() - t0
+        with obs.span("mc/summarize"):
+            stacks = {k: np.asarray(v) for k, v in outs.items()}
+            stacks["final_accuracy"] = np.asarray(accs)
     else:
         @jax.jit
         def round_step(key, r, state, up, batch):
@@ -314,24 +331,40 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
 
         # warm the per-round jit cache with ONE round (all later calls
         # share shapes), then run the sweep once, timed
-        warm = jax.tree_util.tree_map(lambda x: x[0], batches_all)
-        warm_state, _, _ = round_step(keys[0], jnp.uint32(0), state0, up0,
-                                      warm)
-        jax.block_until_ready(eval_fn(warm_state))
-        t0 = time.time()
-        rows, accs = sweep()
-        jax.block_until_ready(rows[-1][-1])
-        wall = time.time() - t0
-        # np.asarray (not float): population sweeps carry a (cohort,) id
-        # row per round alongside the scalar bill fields
-        stacks = {k: np.asarray([[np.asarray(out[k]) for out in per_round]
-                                 for per_round in rows])
-                  for k in rows[0][0]}
-        stacks["final_accuracy"] = np.asarray([float(a) for a in accs])
+        with obs.span("mc/compile", mode=mode):
+            warm = jax.tree_util.tree_map(lambda x: x[0], batches_all)
+            warm_state, _, _ = round_step(keys[0], jnp.uint32(0), state0, up0,
+                                          warm)
+            jax.block_until_ready(eval_fn(warm_state))
+        with obs.span("mc/execute", mode=mode):
+            t0 = time.time()
+            rows, accs = sweep()
+            jax.block_until_ready(rows[-1][-1])
+            wall = time.time() - t0
+        with obs.span("mc/summarize"):
+            # np.asarray (not float): population sweeps carry a (cohort,) id
+            # row per round alongside the scalar bill fields
+            stacks = {k: np.asarray([[np.asarray(out[k])
+                                      for out in per_round]
+                                     for per_round in rows])
+                      for k in rows[0][0]}
+            stacks["final_accuracy"] = np.asarray([float(a) for a in accs])
 
     uav = np.broadcast_to(_uav_rounds(plan, rounds),
                           (num_seeds, rounds)).copy()
     stacks["uav_energy_j"] = uav
+    if obs:
+        obs.event("note", kind="monte_carlo", num_seeds=num_seeds,
+                  rounds=rounds, mode=mode, engine=plan.engine_label,
+                  wall_s=round(wall, 6))
+        obs.manifest(sweep={"kind": "monte_carlo", "mode": mode,
+                            "num_seeds": num_seeds, "rounds": rounds,
+                            "engine": plan.engine_label,
+                            "seed_base": scn.seed + seed,
+                            "seeds": [scn.seed + seed + i
+                                      for i in range(num_seeds)],
+                            "wall_s": round(wall, 6)})
+        obs.flush()
     return MonteCarloResult(stacks=stacks, num_seeds=num_seeds,
                             rounds=rounds, engine=plan.engine_label,
                             mode=mode, wall_s=wall)

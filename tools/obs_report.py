@@ -1,0 +1,236 @@
+#!/usr/bin/env python
+"""Render a ``repro.obs`` telemetry run dir into a readable report.
+
+    python tools/obs_report.py results/runs/<run_id>
+    python tools/obs_report.py results/runs            # latest run under root
+    python tools/obs_report.py <run_dir> --coverage-min 0.95   # CI smoke gate
+
+Reads ``manifest.json`` + ``events.jsonl`` (the schema ``repro.obs``
+writes — see ``docs/ARCHITECTURE.md`` §Observability) and prints:
+
+  * the run header (commit, jax/backend, created, plans compiled);
+  * a phase-breakdown table aggregated by span ``path``: calls, total
+    wall seconds, device-sync seconds (``sync_s``, booked by
+    ``span.fence``), host seconds (wall - sync), and share of the root
+    span's wall clock;
+  * a coverage line: how much of the root span's wall clock its direct
+    children account for (the "no unexplained time" acceptance bar —
+    ``--coverage-min`` turns it into an exit-status gate);
+  * per-round sparklines of loss / round wall / recompiles from the
+    ``record`` + ``gauge`` event streams;
+  * the simulated-clock mission dwell decomposition (travel/hover/comm)
+    when the run carried a UAV mission.
+
+Zero dependencies beyond the stdlib: the report must render on a machine
+that cannot import jax (e.g. inspecting a CI artifact locally).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def latest_run_dir(root: str) -> str:
+    """The newest run dir under ``root`` (run ids sort chronologically)."""
+    runs = sorted(d for d in os.listdir(root)
+                  if os.path.isdir(os.path.join(root, d)))
+    if not runs:
+        raise FileNotFoundError(f"no run dirs under {root}")
+    return os.path.join(root, runs[-1])
+
+
+def load_run(run_dir: str) -> tuple[dict, list[dict]]:
+    """``(manifest, events)`` of one run dir. A missing events file is an
+    empty stream (a run that crashed before its first flush)."""
+    manifest, events = {}, []
+    man_path = os.path.join(run_dir, "manifest.json")
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            manifest = json.load(f)
+    ev_path = os.path.join(run_dir, "events.jsonl")
+    if os.path.exists(ev_path):
+        with open(ev_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    events.append(json.loads(line))
+    return manifest, events
+
+
+def spark(values: list[float]) -> str:
+    """Unicode sparkline of ``values`` (NaNs render as spaces)."""
+    vals = [v for v in values if v == v]          # drop NaN
+    if not vals:
+        return ""
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    out = []
+    for v in values:
+        if v != v:
+            out.append(" ")
+        else:
+            out.append(BLOCKS[min(int((v - lo) / span * (len(BLOCKS) - 1)),
+                                  len(BLOCKS) - 1)])
+    return "".join(out)
+
+
+def phase_table(events: list[dict]) -> list[dict]:
+    """Span events aggregated by ``path``: one row per distinct phase,
+    ordered by first occurrence, with calls / wall / sync / host sums."""
+    rows: dict[str, dict] = {}
+    for ev in events:
+        if ev.get("ev") != "span":
+            continue
+        path = ev.get("path", ev.get("name", "?"))
+        row = rows.setdefault(path, {"path": path, "depth": ev.get("depth", 0),
+                                     "calls": 0, "wall_s": 0.0, "sync_s": 0.0})
+        row["calls"] += 1
+        row["wall_s"] += ev.get("dur_s", 0.0)
+        row["sync_s"] += ev.get("sync_s", 0.0)
+    for row in rows.values():
+        row["host_s"] = row["wall_s"] - row["sync_s"]
+    return list(rows.values())
+
+
+def root_coverage(events: list[dict]) -> tuple[float, dict | None]:
+    """``(coverage, root_row)``: the fraction of the longest depth-0
+    span's wall clock accounted for by its direct (depth-1) children.
+    ``(1.0, None)`` when the stream has no root span to cover."""
+    spans = [ev for ev in events if ev.get("ev") == "span"]
+    roots = [ev for ev in spans if ev.get("depth", 0) == 0]
+    if not roots:
+        return 1.0, None
+    root = max(roots, key=lambda ev: ev.get("dur_s", 0.0))
+    prefix = root.get("path", "") + "/"
+    child_s = sum(ev.get("dur_s", 0.0) for ev in spans
+                  if ev.get("depth") == 1
+                  and ev.get("path", "").startswith(prefix))
+    wall = root.get("dur_s", 0.0)
+    return (child_s / wall if wall > 0 else 1.0), root
+
+
+def render(run_dir: str, manifest: dict, events: list[dict]) -> list[str]:
+    out = [f"run {manifest.get('run_id', os.path.basename(run_dir))}  "
+           f"({run_dir})",
+           f"  created {manifest.get('created_utc', '?')}  "
+           f"commit {manifest.get('git_commit', '?')}  "
+           f"jax {manifest.get('jax_version', '?')}/"
+           f"{manifest.get('backend', '?')} "
+           f"x{manifest.get('device_count', '?')}"]
+    plans = manifest.get("plans", [])
+    for p in plans:
+        out.append(f"  plan: {p.get('engine', '?')} {p.get('model', '?')} "
+                   f"clients={p.get('num_clients', '?')} "
+                   f"rounds={p.get('rounds', '?')}")
+    for s in manifest.get("sweeps", []):
+        out.append(f"  sweep: {s.get('kind', '?')}/{s.get('mode', '?')} "
+                   f"seeds={s.get('num_seeds', '?')} "
+                   f"rounds={s.get('rounds', '?')} "
+                   f"wall={s.get('wall_s', '?')}s")
+    if "profiler" in manifest:
+        out.append(f"  profiler: {manifest['profiler']}")
+
+    rows = phase_table(events)
+    cov, root = root_coverage(events)
+    if rows:
+        total = (root.get("dur_s", 0.0) if root
+                 else sum(r["wall_s"] for r in rows if r["depth"] == 0))
+        out += ["", f"  {'phase':<44} {'calls':>6} {'wall_s':>10} "
+                    f"{'sync_s':>10} {'host_s':>10} {'share':>7}"]
+        for r in rows:
+            share = (f"{r['wall_s'] / total:6.1%}" if total > 0 else "     —")
+            pad = "  " * min(r["depth"], 4)
+            name = pad + r["path"]
+            out.append(f"  {name:<44} {r['calls']:>6} {r['wall_s']:>10.4f} "
+                       f"{r['sync_s']:>10.4f} {r['host_s']:>10.4f} {share:>7}")
+        if root is not None:
+            out.append(f"  coverage: {cov:.1%} of root span "
+                       f"'{root.get('path')}' ({root.get('dur_s', 0):.4f}s) "
+                       f"accounted for by its direct children")
+    else:
+        out += ["", "  (no span events)"]
+
+    records = [ev for ev in events if ev.get("ev") == "record"]
+    if records:
+        records.sort(key=lambda ev: ev.get("round", 0))
+        loss = [ev.get("loss", float("nan")) for ev in records]
+        out += ["", f"  rounds: {len(records)}"]
+        out.append(f"    loss      {spark(loss)}  "
+                   f"last={loss[-1]:.4f}" if loss else "")
+        acc = [ev.get("accuracy", float("nan")) for ev in records]
+        if any(a == a for a in acc):
+            last = [a for a in acc if a == a][-1]
+            out.append(f"    accuracy  {spark(acc)}  last={last:.4f}")
+        active = [ev.get("active_clients", float("nan")) for ev in records]
+        if any(a == a and a >= 0 for a in active):
+            out.append(f"    active    {spark(active)}")
+    round_spans = [ev for ev in events if ev.get("ev") == "span"
+                   and ev.get("name") == "round"]
+    if round_spans:
+        round_spans.sort(key=lambda ev: ev.get("round", 0))
+        walls = [ev.get("dur_s", 0.0) for ev in round_spans]
+        out.append(f"    round_s   {spark(walls)}  "
+                   f"mean={sum(walls) / len(walls):.4f}s")
+    gauges = [ev for ev in events if ev.get("ev") == "gauge"]
+    if gauges:
+        gauges.sort(key=lambda ev: ev.get("round", 0))
+        comps = [g.get("compiles") for g in gauges]
+        if any(c is not None for c in comps):
+            vals = [float(c if c is not None else 0) for c in comps]
+            out.append(f"    compiles  {spark(vals)}  "
+                       f"total={int(sum(vals))}")
+        rss = [g.get("rss_bytes", 0) for g in gauges]
+        if any(rss):
+            out.append(f"    rss       {spark([float(b) for b in rss])}  "
+                       f"last={rss[-1] / 1e6:.1f}MB")
+        sb = [g.get("state_bytes") for g in gauges if g.get("state_bytes")]
+        if sb:
+            out.append(f"    state     {sb[-1] / 1e6:.2f}MB (engine state)")
+
+    mission = [ev for ev in events if ev.get("ev") == "mission_span"]
+    if mission:
+        legs: dict[str, float] = {}
+        for ev in mission:
+            legs[ev.get("name", "?")] = (legs.get(ev.get("name", "?"), 0.0)
+                                         + ev.get("dur_s", 0.0))
+        total_m = sum(legs.values()) or 1.0
+        out += ["", "  mission dwell (simulated clock):"]
+        for name, dur in sorted(legs.items()):
+            out.append(f"    {name:<18} {dur:>10.1f}s  {dur / total_m:6.1%}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="results/runs",
+                    help="a run dir, or a runs root (uses the latest run)")
+    ap.add_argument("--coverage-min", type=float, default=None,
+                    help="exit nonzero unless the root span's direct "
+                         "children cover at least this fraction of its "
+                         "wall clock (CI smoke gate, e.g. 0.95)")
+    args = ap.parse_args()
+    run_dir = args.path
+    if not os.path.exists(os.path.join(run_dir, "events.jsonl")) and \
+            not os.path.exists(os.path.join(run_dir, "manifest.json")):
+        run_dir = latest_run_dir(args.path)
+    manifest, events = load_run(run_dir)
+    print("\n".join(render(run_dir, manifest, events)))
+    if args.coverage_min is not None:
+        cov, root = root_coverage(events)
+        if root is None:
+            print("obs-report: no root span to gate coverage on")
+            sys.exit(1)
+        if cov < args.coverage_min:
+            print(f"obs-report: coverage {cov:.1%} < "
+                  f"required {args.coverage_min:.1%}")
+            sys.exit(1)
+        print(f"obs-report: coverage ok ({cov:.1%} >= "
+              f"{args.coverage_min:.1%})")
+
+
+if __name__ == "__main__":
+    main()
