@@ -1,0 +1,35 @@
+"""``repro.analyze`` — static analysis of the compiled stack.
+
+Two passes, one CLI (``tools/repro_lint.py``), CI-gated:
+
+* **Pass 1 (jaxpr audit, ``jaxpr_audit``)** — structural invariants of
+  every compiled engine round and the Monte-Carlo rollout: donation
+  actually aliases, no host callbacks, no f64 under x32, collective axes
+  exist on the mesh, traces are stable, closure constants stay under
+  budget, and the PRNG fold-slot registry (``repro.keys``) is
+  collision-free.
+* **Pass 2 (AST lint, ``ast_lint``)** — repo-specific source hazards:
+  traced-value branching, raw timers, key reuse, magic fold literals,
+  unhoisted constants, bare excepts, labels crossing the link boundary.
+
+See the "Static analysis" section of ``docs/ARCHITECTURE.md`` for the
+rule table and the escape-hatch policy.
+"""
+
+from .ast_lint import RULES, lint_file, lint_paths, lint_source
+from .findings import Finding, Report
+from .jaxpr_audit import (audit_keys, audit_mc, audit_plan, check_callbacks,
+                          check_collective_axes, check_const_budget,
+                          check_donation, check_f64, check_trace_stability,
+                          iter_eqns)
+from .variants import audit_all, compiled_variants, mc_specs, variant_specs
+
+__all__ = [
+    "Finding", "Report", "RULES",
+    "lint_file", "lint_paths", "lint_source",
+    "audit_plan", "audit_mc", "audit_keys", "audit_all",
+    "check_donation", "check_callbacks", "check_f64",
+    "check_collective_axes", "check_const_budget", "check_trace_stability",
+    "iter_eqns",
+    "variant_specs", "mc_specs", "compiled_variants",
+]

@@ -1,0 +1,380 @@
+"""Pass 2: stdlib-``ast`` lint over ``src/repro`` — repo-specific JAX hazards.
+
+Rules (ids are stable; the CLI and CI artifact key on them):
+
+``traced-branch``
+    ``if``/``while`` on a parameter of a jit-scoped function (a function
+    decorated with / passed to ``jit``/``vmap``/``scan``/``cond``/...).
+    Python control flow on a traced value raises ``TracerBoolConversion``
+    at best and silently bakes a branch at worst. ``is None`` /
+    ``is not None`` tests are static and exempt.
+``raw-timer``
+    ``time.perf_counter()`` / ``time.time()`` outside ``repro.obs``'s
+    fenced primitives. jax dispatch is asynchronous — a naive timer pair
+    measures queueing, not execution; use ``obs.fenced`` /
+    ``obs.time_fenced`` / a span. ``obs/timeline.py`` is exempt: it IS
+    the timer implementation, the one module that must read raw clocks
+    (every timer there fences explicitly — see its module docstring).
+``key-reuse``
+    One PRNG key variable consumed by two or more ``jax.random``
+    samplers without an intervening ``fold_in``/``split`` — the draws
+    are perfectly correlated.
+``magic-fold``
+    ``jax.random.fold_in(key, <integer literal>)`` outside
+    ``repro/keys.py``. Fold slots must be registered (``keys.register``)
+    and folded via ``keys.fold(key, SLOT)`` so the stream layout stays
+    collision-audited in one place. Non-literal folds (round/step
+    indices) are fine.
+``unhoisted-const``
+    A ``jnp`` constant builder (``zeros``/``ones``/``full``/``eye``/
+    ``arange``/``array`` of literals) inside a ``for``/``while`` body —
+    rebuilt (and re-transferred) every iteration; hoist it.
+``bare-except``
+    ``except:`` with no exception type.
+``label-link``
+    The ``client_fwd`` closure of a ``SplitStep`` references a
+    label-like name (``targets``/``labels``/``y*``): its output crosses
+    the client->server link, so labels would leave the client — the SL
+    privacy boundary (see ARCHITECTURE.md "Where the labels live").
+
+Escape hatch: a ``repro: ignore[<rule>] -- <reason>`` comment on the
+finding line. The reason is mandatory — an ignore without one is itself
+a finding (``bad-suppression``), so every suppression in the repo
+carries a written justification.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, Optional
+
+from .findings import Finding, Report
+
+RULES = (
+    "traced-branch", "raw-timer", "key-reuse", "magic-fold",
+    "unhoisted-const", "bare-except", "label-link", "bad-suppression",
+)
+
+# functions that introduce a traced scope for a function passed to / wrapped
+# by them (matched on the last attribute segment: jax.jit, jax.lax.scan, ...)
+_JIT_WRAPPERS = frozenset({
+    "jit", "pjit", "vmap", "pmap", "grad", "value_and_grad", "scan",
+    "while_loop", "cond", "shard_map", "checkpoint", "remat",
+})
+_SAMPLERS_EXEMPT = frozenset({"fold_in", "split", "key_data", "wrap_key_data",
+                              "clone", "key_impl"})
+_LABELISH = frozenset({"targets", "labels", "y", "yy", "by"})
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*ignore\[([a-z-]+)\](\s*--\s*(\S.*))?")
+
+
+def _func_name(node: ast.AST) -> Optional[str]:
+    """Last dotted segment of a call target (``jax.lax.scan`` -> ``scan``)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """Full dotted name of an expression, or None if not a plain path."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Suppressions:
+    """Per-line ``repro: ignore[<rule>] -- <reason>`` map for one file."""
+
+    def __init__(self, source: str, path: str):
+        self.by_line: dict[int, str] = {}
+        self.bad: list[Finding] = []
+        for i, line in enumerate(source.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m is None:
+                continue
+            rule, reason = m.group(1), m.group(3)
+            if rule not in RULES:
+                self.bad.append(Finding(
+                    "bad-suppression", f"{path}:{i}",
+                    f"ignore[{rule}] names an unknown rule "
+                    f"(known: {', '.join(sorted(RULES))})"))
+            elif not reason:
+                self.bad.append(Finding(
+                    "bad-suppression", f"{path}:{i}",
+                    f"ignore[{rule}] has no reason; write "
+                    f"'# repro: ignore[{rule}] -- <why this is safe>'"))
+            else:
+                self.by_line[i] = rule
+
+    def covers(self, line: int, rule: str) -> bool:
+        return self.by_line.get(line) == rule
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str, *, is_keys_module: bool,
+                 is_timer_module: bool = False):
+        self.path = path
+        self.is_keys_module = is_keys_module
+        self.is_timer_module = is_timer_module
+        self.suppressions = _Suppressions(source, path)
+        self.findings: list[Finding] = list(self.suppressions.bad)
+        # stack of (function node, set-of-param-names-or-None): the param
+        # set is non-None while inside a jit scope
+        self._jit_params: list[set] = []
+        self._loop_depth = 0
+        # names of functions passed (by name) to a jit wrapper anywhere in
+        # the file — their defs are jit scopes too (two-phase: collected
+        # up front by _collect_wrapped)
+        self._wrapped_names: set[str] = set()
+
+    # ---- helpers ----------------------------------------------------------
+
+    def _emit(self, rule: str, node: ast.AST, message: str):
+        line = getattr(node, "lineno", 0)
+        if self.suppressions.covers(line, rule):
+            return
+        self.findings.append(Finding(rule, f"{self.path}:{line}", message))
+
+    def lint(self, tree: ast.Module) -> list[Finding]:
+        self._collect_wrapped(tree)
+        self.visit(tree)
+        return self.findings
+
+    def _collect_wrapped(self, tree: ast.Module):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _func_name(node.func) in _JIT_WRAPPERS:
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Name):
+                        self._wrapped_names.add(arg.id)
+
+    def _is_jit_scope(self, node) -> bool:
+        if self._jit_params and self._jit_params[-1] is not None:
+            return True   # nested inside a jit scope
+        if any(_func_name(d) in _JIT_WRAPPERS for d in node.decorator_list):
+            return True
+        return node.name in self._wrapped_names
+
+    @staticmethod
+    def _params_of(node) -> set:
+        a = node.args
+        names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        if a.vararg:
+            names.add(a.vararg.arg)
+        if a.kwarg:
+            names.add(a.kwarg.arg)
+        return names
+
+    # ---- scope tracking ---------------------------------------------------
+
+    def _visit_func(self, node):
+        params = None
+        if self._is_jit_scope(node):
+            params = self._params_of(node)
+            if self._jit_params and self._jit_params[-1] is not None:
+                params |= self._jit_params[-1]   # closure over traced names
+        self._jit_params.append(params)
+        # a def inside a loop body is not *executed* per iteration — loop
+        # context does not extend into a nested function's body
+        outer_loops, self._loop_depth = self._loop_depth, 0
+        self._check_key_reuse(node)
+        self.generic_visit(node)
+        self._loop_depth = outer_loops
+        self._jit_params.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Lambda(self, node: ast.Lambda):
+        self._jit_params.append(self._jit_params[-1]
+                                if self._jit_params else None)
+        outer_loops, self._loop_depth = self._loop_depth, 0
+        self.generic_visit(node)
+        self._loop_depth = outer_loops
+        self._jit_params.pop()
+
+    # ---- rules ------------------------------------------------------------
+
+    def _traced_names_in_test(self, test: ast.AST) -> list[str]:
+        """Jit-scope parameter names referenced by a branch test, minus any
+        that only appear in static ``is (not) None`` comparisons."""
+        params = self._jit_params[-1] if self._jit_params else None
+        if not params:
+            return []
+        static: set[int] = set()
+        for node in ast.walk(test):
+            if isinstance(node, ast.Compare) and all(
+                    isinstance(op, (ast.Is, ast.IsNot))
+                    for op in node.ops):
+                for sub in ast.walk(node):
+                    static.add(id(sub))
+        return [n.id for n in ast.walk(test)
+                if isinstance(n, ast.Name) and n.id in params
+                and id(n) not in static]
+
+    def visit_If(self, node: ast.If):
+        for name in self._traced_names_in_test(node.test):
+            self._emit("traced-branch", node,
+                       f"Python `if` on parameter {name!r} of a jit-scoped "
+                       f"function; use lax.cond/jnp.where (traced values "
+                       f"have no host truth value)")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While):
+        for name in self._traced_names_in_test(node.test):
+            self._emit("traced-branch", node,
+                       f"Python `while` on parameter {name!r} of a "
+                       f"jit-scoped function; use lax.while_loop")
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_For(self, node: ast.For):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        if node.type is None:
+            self._emit("bare-except", node,
+                       "bare `except:` swallows KeyboardInterrupt/SystemExit; "
+                       "name the exception type")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        dotted = _dotted(node.func)
+        # raw-timer
+        if not self.is_timer_module and dotted in (
+                "time.time", "time.perf_counter", "time.monotonic"):
+            self._emit("raw-timer", node,
+                       f"raw {dotted}() window; jax dispatch is async — "
+                       f"use obs.fenced/time_fenced or an obs span")
+        # magic-fold
+        if (not self.is_keys_module and dotted is not None
+                and dotted.endswith("random.fold_in") and len(node.args) == 2
+                and isinstance(node.args[1], ast.Constant)
+                and isinstance(node.args[1].value, int)):
+            self._emit("magic-fold", node,
+                       f"literal fold slot {node.args[1].value}; register it "
+                       f"in repro/keys.py and fold via keys.fold(key, SLOT)")
+        # unhoisted-const
+        if self._loop_depth > 0 and dotted is not None and "." in dotted:
+            head, tail = dotted.split(".", 1)
+            if head in ("jnp", "jax") and tail.split(".")[-1] in (
+                    "zeros", "ones", "full", "eye", "arange", "array",
+                    "identity") and node.args and all(
+                        _is_literal(a) for a in node.args):
+                self._emit("unhoisted-const", node,
+                           f"{dotted}(...) of literals rebuilt every loop "
+                           f"iteration; hoist it above the loop")
+        # label-link
+        if _func_name(node.func) == "SplitStep":
+            for kw in node.keywords:
+                if kw.arg == "client_fwd":
+                    for sub in ast.walk(kw.value):
+                        if isinstance(sub, ast.Name) and (
+                                sub.id in _LABELISH
+                                or sub.id.startswith("y_")):
+                            self._emit(
+                                "label-link", kw.value,
+                                f"client_fwd references label-like name "
+                                f"{sub.id!r}; its output crosses the "
+                                f"client->server link — labels must not "
+                                f"leave the client tier")
+        self.generic_visit(node)
+
+    def _check_key_reuse(self, func):
+        """Within one function body: a var assigned from PRNGKey consumed
+        raw by >= 2 jax.random samplers is correlated sampling."""
+        key_vars: set[str] = set()
+        consumed: dict[str, int] = {}
+        for node in ast.walk(func):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                d = _dotted(node.value.func)
+                if d is not None and d.endswith("random.PRNGKey"):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            key_vars.add(t.id)
+        if not key_vars:
+            return
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if d is None or ".random." not in f".{d}.":
+                continue
+            fn = d.split(".")[-1]
+            if fn in _SAMPLERS_EXEMPT or fn == "PRNGKey":
+                continue
+            if node.args and isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id in key_vars:
+                name = node.args[0].id
+                consumed[name] = consumed.get(name, 0) + 1
+                if consumed[name] == 2:
+                    self._emit(
+                        "key-reuse", node,
+                        f"PRNG key {name!r} consumed by multiple samplers "
+                        f"without fold_in/split; the draws are correlated")
+
+
+def _is_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_literal(e) for e in node.elts)
+    if isinstance(node, ast.UnaryOp):
+        return _is_literal(node.operand)
+    # dtype names (jnp.float32, "float32") count as literal-ish
+    if isinstance(node, ast.Attribute):
+        return _dotted(node) is not None
+    return False
+
+
+def lint_file(path: Path, repo_root: Optional[Path] = None) -> list[Finding]:
+    source = path.read_text()
+    rel = str(path.relative_to(repo_root)) if repo_root else str(path)
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as e:
+        return [Finding("bare-except", f"{rel}:{e.lineno}",
+                        f"file does not parse: {e.msg}", severity="error")]
+    linter = _FileLinter(
+        rel, source,
+        is_keys_module=path.name == "keys.py",
+        is_timer_module=str(path).replace("\\", "/").endswith(
+            "obs/timeline.py"))
+    return linter.lint(tree)
+
+
+def lint_paths(paths: Iterable[Path],
+               repo_root: Optional[Path] = None) -> Report:
+    """Lint every ``.py`` under ``paths`` (files or directories)."""
+    report = Report()
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    for f in files:
+        report.findings.extend(lint_file(f, repo_root))
+        report.checked.append(str(f.relative_to(repo_root))
+                              if repo_root else str(f))
+    return report
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Lint a source string (the analyzer tests' fixture entry point)."""
+    tree = ast.parse(source, filename=path)
+    linter = _FileLinter(path, source, is_keys_module=False)
+    return linter.lint(tree)

@@ -1,0 +1,91 @@
+"""The engine-variant matrix the jaxpr auditor sweeps.
+
+Mirrors the tier-1 test matrix at minimum compile cost: one tiny CNN spec
+per ``EngineSpec`` variant (fl/sl x scan/vmap/shard_map), the
+population-cohort corners (stateless FL cohorts + the EPSL shared client
+tier), and the Monte-Carlo vmap rollout over a masked scenario plan.
+``tools/repro_lint.py --jaxpr`` compiles each and runs ``audit_plan`` /
+``audit_mc``; a finding on any variant fails CI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+NUM_CLASSES = 4
+
+
+def _tiny_spec(kind: str, axis: str, *, pop: Optional[int] = None,
+               scenario=None, dropout: float = 0.0, mission: bool = False):
+    from ..api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                       ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec)
+    return ExperimentSpec(
+        model=ModelSpec(name="tinycnn", num_classes=NUM_CLASSES),
+        data=DataSpec(kind="synthetic", image_size=12, classes_per_client=2,
+                      n_train=32, n_test=16),
+        clients=ClientSpec(num_clients=2, population=pop,
+                           dropout_rate=dropout),
+        cut_policy=CutPolicy(mode="fraction", fraction=0.4),
+        link_policy=LinkPolicy(),
+        engine=EngineSpec(kind=kind, client_axis=axis),
+        mission=MissionSpec(farm_acres=50.0) if mission else None,
+        scenario=scenario,
+        global_rounds=1, local_steps=1, batch_size=4, seed=0)
+
+
+def variant_specs() -> Iterator[tuple[str, object]]:
+    """``(name, ExperimentSpec)`` per audited variant."""
+    for kind in ("fl", "sl"):
+        for axis in ("scan", "vmap", "shard_map"):
+            yield f"{kind}/{axis}", _tiny_spec(kind, axis)
+    # masked engines (the mask-aware lowering is a distinct program)
+    yield "fl/vmap+dropout", _tiny_spec("fl", "vmap", dropout=0.25)
+    yield "sl/vmap+dropout", _tiny_spec("sl", "vmap", dropout=0.25)
+    # population cohorts: stateless FL rounds + the EPSL shared client tier
+    yield "fl/vmap+population", _tiny_spec("fl", "vmap", pop=6)
+    yield "sl/vmap+population", _tiny_spec("sl", "vmap", pop=6)
+
+
+def mc_specs() -> Iterator[tuple[str, object]]:
+    """Variants whose Monte-Carlo vmap rollout is audited too."""
+    from ..sim import AvailabilityParams, ChannelParams, ScenarioSpec
+    scn = ScenarioSpec(
+        channel=ChannelParams(kind="a2g"),
+        availability=AvailabilityParams(kind="bernoulli", p_drop=0.3),
+        seed=1)
+    yield "mc/fl/vmap+scenario", _tiny_spec("fl", "vmap", scenario=scn,
+                                            mission=True)
+    yield "mc/sl/vmap+population", _tiny_spec("sl", "vmap", pop=6)
+
+
+def compiled_variants(*, mc: bool = True, match: Optional[str] = None
+                      ) -> Iterator[tuple[str, object, bool]]:
+    """Compile the matrix lazily: ``(name, plan, audit_mc_too)``.
+    ``match`` filters by substring BEFORE compiling (the CLI's
+    ``--variant``)."""
+    from ..api import compile_experiment
+    for name, spec in variant_specs():
+        if match is None or match in name:
+            yield name, compile_experiment(spec), False
+    if mc:
+        for name, spec in mc_specs():
+            if match is None or match in name:
+                yield name, compile_experiment(spec), True
+
+
+def audit_all(*, mc: bool = True):
+    """Run the full jaxpr audit sweep; returns a combined Report."""
+    from .findings import Report
+    from .jaxpr_audit import audit_keys, audit_mc as _audit_mc, audit_plan
+    report = Report()
+    report.extend(audit_keys())
+    for name, plan, with_mc in compiled_variants(mc=mc):
+        r = audit_plan(plan)
+        r.checked = [f"{name}: {c}" for c in r.checked]
+        report.extend(r)
+        if with_mc:
+            r = _audit_mc(plan)
+            r.checked = [f"{name}: {c}" for c in r.checked]
+            report.extend(r)
+    return report

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import keys
 from ..core.energy import RTX_A5000
 from ..core.link import LinkConfig
 from ..core.split import (SplitStep, apply_stages, cut_index_for_fraction,
@@ -183,15 +184,16 @@ class Plan:
 
     def _round_cohort(self, state: PlanState) -> Optional[np.ndarray]:
         """The round's sorted cohort population ids (None when the fleet is
-        fully materialized). Key-folded from the environment key (fold 3 —
-        mask is 1, rates 2) so Monte-Carlo sweeps replay the identical
-        cohort stream; weighted by the availability state ENTERING the
-        round when a scenario trace runs (down clients draw at
-        ``COHORT_DOWN_WEIGHT``), uniform otherwise."""
+        fully materialized). Key-folded from the environment key
+        (``keys.ENV_COHORT`` — mask is ``ENV_MASK``, rates ``ENV_RATES``)
+        so Monte-Carlo sweeps replay the identical cohort stream; weighted
+        by the availability state ENTERING the round when a scenario trace
+        runs (down clients draw at ``COHORT_DOWN_WEIGHT``), uniform
+        otherwise."""
         if self._population is None:
             return None
-        key = jax.random.fold_in(
-            jax.random.fold_in(self._env_key, state.round), 3)
+        key = keys.fold(keys.round_env_key(self._env_key, state.round),
+                        keys.ENV_COHORT)
         weights = None
         scn = self.spec.scenario
         if scn is not None and scn.needs_mask:
@@ -207,8 +209,8 @@ class Plan:
         if scn is not None and scn.needs_mask:
             # scenario availability trace: jax-native + key-folded per round,
             # bit-identical to the Monte-Carlo rollout's mask stream
-            key = jax.random.fold_in(
-                jax.random.fold_in(self._scn_key, state.round), 1)
+            key = keys.fold(keys.round_env_key(self._scn_key, state.round),
+                            keys.ENV_MASK)
             mask, up = availability_step(key, jnp.asarray(state.avail_up),
                                          scn.availability)
             state.avail_up = np.asarray(up)
@@ -236,8 +238,8 @@ class Plan:
         no channel is attached — keep the hoisted constants verbatim)."""
         if self._channel is None:
             return None
-        key = jax.random.fold_in(
-            jax.random.fold_in(self._scn_key, round_index), 2)
+        key = keys.fold(keys.round_env_key(self._scn_key, round_index),
+                        keys.ENV_RATES)
         rates = sample_rates_bps(key, self._channel,
                                  jnp.asarray(self.serve_dist_m),
                                  self.spec.link_policy.rate_bps)
@@ -403,9 +405,9 @@ def _resolve_data(spec: ExperimentSpec, data):
         n_train = spec.data.n_train or max(24 * spec.clients.num_clients, 96)
         n_test = spec.data.n_test or max(n_train // 4, 32)
         seq = spec.data.seq_len
-        toks_tr = synthetic_tokens(jax.random.fold_in(key, 0), n_train,
+        toks_tr = synthetic_tokens(keys.fold(key, keys.DATA_TRAIN), n_train,
                                    seq + 1, vocab)
-        toks_te = synthetic_tokens(jax.random.fold_in(key, 1), n_test,
+        toks_te = synthetic_tokens(keys.fold(key, keys.DATA_TEST), n_test,
                                    seq + 1, vocab)
         return (np.asarray(toks_tr[:, :-1]), np.asarray(toks_tr[:, 1:]),
                 np.asarray(toks_te[:, :-1]), np.asarray(toks_te[:, 1:]))
@@ -414,8 +416,8 @@ def _resolve_data(spec: ExperimentSpec, data):
     n_train = spec.data.n_train or max(24 * spec.clients.num_clients,
                                        12 * spec.model.num_classes)
     n_test = spec.data.n_test or max(n_train // 4, 48)
-    x_train, y_train = gen.sample(jax.random.fold_in(key, 0), n_train)
-    x_test, y_test = gen.sample(jax.random.fold_in(key, 1), n_test)
+    x_train, y_train = gen.sample(keys.fold(key, keys.DATA_TRAIN), n_train)
+    x_test, y_test = gen.sample(keys.fold(key, keys.DATA_TEST), n_test)
     return (np.asarray(x_train), np.asarray(y_train),
             np.asarray(x_test), np.asarray(y_test))
 
@@ -838,19 +840,30 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
 #                       one vmapped rollout (None, None for hetero fleets)
 # ---------------------------------------------------------------------------
 
-def _mask_runner(round_fn, masked: bool, n: int):
+def _sl_audit(round_fn, masked: bool) -> dict:
+    """The jaxpr auditor's handle onto an SL engine round: the jitted
+    callable plus how the uniform run surface maps to its positional
+    signature (``repro.analyze.jaxpr_audit`` consumes this)."""
+    return {"jit_fn": round_fn, "donate_argnums": (0, 1, 2, 3),
+            "unpack_state": True, "masked": masked}
+
+
+def _mask_runner(round_fn, masked: bool, n: int, audit: dict = None):
     """Uniform ``run(state, batches, mask)`` closure over a round builder
     that takes a trailing mask only when built mask-aware."""
+    full_mask = jnp.ones(n, jnp.float32)   # hoisted: one buffer, not per round
+
     def run(engine_state, batches, mask):
         if masked:
-            m = (jnp.ones(n, jnp.float32) if mask is None
-                 else jnp.asarray(mask))
+            m = full_mask if mask is None else jnp.asarray(mask)
             *state, losses = round_fn(*engine_state, batches, m)
         else:
             assert mask is None, \
                 "mask fed to a mask-free engine (validated at compile)"
             *state, losses = round_fn(*engine_state, batches)
         return tuple(state), losses
+    if audit is not None:
+        run._audit = audit
     return run
 
 
@@ -875,15 +888,18 @@ def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
     def init_state():
         return jax.tree_util.tree_map(jnp.copy, params0)
 
-    def make_run(fn):
+    full_mask = jnp.ones(spec.clients.num_clients, jnp.float32)
+
+    def make_run(fn, audit=None):
         def run(engine_state, batches, mask):
             if masked:
-                m = (jnp.ones(spec.clients.num_clients, jnp.float32)
-                     if mask is None else jnp.asarray(mask))
+                m = full_mask if mask is None else jnp.asarray(mask)
                 return fn(engine_state, batches, m)
             assert mask is None, \
                 "mask fed to a mask-free engine (validated at compile)"
             return fn(engine_state, batches)
+        if audit is not None:
+            run._audit = audit
         return run
 
     eval_logits = jax.jit(lambda p: apply_stages(stages, p, x_test_j))
@@ -898,8 +914,10 @@ def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
         return accuracy_from_logits(
             apply_stages(stages, engine_state, x_test_j), y_test_j)
 
-    return (init_state, make_run(round_fn), evaluate, make_run(raw_fn),
-            eval_acc_raw)
+    audit = {"jit_fn": round_fn, "donate_argnums": (0,),
+             "unpack_state": False, "masked": masked}
+    return (init_state, make_run(round_fn, audit=audit), evaluate,
+            make_run(raw_fn), eval_acc_raw)
 
 
 def _eval_prefix(client_stack, dropout: bool):
@@ -958,8 +976,9 @@ def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test):
             apply_stages(ss, sp_, apply_stages(cs, prefix, x_test_j)),
             y_test_j)
 
-    return (init_state, _mask_runner(round_fn, False, n), evaluate,
-            _mask_runner(raw_fn, False, n), eval_acc_raw)
+    return (init_state,
+            _mask_runner(round_fn, False, n, audit=_sl_audit(round_fn, False)),
+            evaluate, _mask_runner(raw_fn, False, n), eval_acc_raw)
 
 
 def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
@@ -1045,8 +1064,10 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
                 apply_stages(ss, sp_, apply_stages(cs, prefix, x_test_j)),
                 y_test_j)
 
-        return (init_state, _mask_runner(round_fn, dropout, n), evaluate,
-                _mask_runner(raw_fn, dropout, n), eval_acc_raw)
+        return (init_state,
+                _mask_runner(round_fn, dropout, n,
+                             audit=_sl_audit(round_fn, dropout)),
+                evaluate, _mask_runner(raw_fn, dropout, n), eval_acc_raw)
 
     def build_program(k):
         return cnn_split_program(stages, params0, k,
@@ -1149,5 +1170,7 @@ def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
             sp_, prog.step.client_fwd(global_prefix(client_stack), x_test_j))
         return accuracy_from_logits(logits.reshape(-1, vocab), y_test_flat)
 
-    return (init_state, _mask_runner(round_fn, masked, n), evaluate,
-            _mask_runner(raw_fn, masked, n), eval_acc_raw)
+    return (init_state,
+            _mask_runner(round_fn, masked, n,
+                         audit=_sl_audit(round_fn, masked)),
+            evaluate, _mask_runner(raw_fn, masked, n), eval_acc_raw)

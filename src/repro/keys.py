@@ -1,0 +1,133 @@
+"""Central PRNG fold-slot registry.
+
+Every ``jax.random.fold_in(key, <literal>)`` in the repo must fold a slot
+registered here.  Slots are scoped by *domain* so the same integer can
+mean different things on unrelated key streams (the per-round env key vs
+a model-init key), but within one domain both names and values are
+unique — ``register`` raises on any collision, which is what makes the
+stream layout auditable: ``repro.analyze`` greps every fold site and
+rejects literals that are not a registered slot of some domain.
+
+Migrating a literal to a named slot is bit-identical by construction
+(the integer value is part of the registration), so the replay tests
+that pin Monte-Carlo / cohort streams double as the migration gate.
+
+Domains in use:
+
+``env``
+    The per-round environment key ``round_env_key(env_key, r)``
+    (scenario stream, or seed 0 without a scenario).  Consumed by
+    availability masks, channel rate draws, and cohort sampling — one
+    slot each so the three streams never collide and ``run_monte_carlo``
+    replays all of them from the same fold layout.
+``data``
+    Dataset synthesis keys (train/test split of a base data key).
+``init``
+    Model parameter-init keys that need a sub-stream beside a
+    ``jax.random.split`` fan-out.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+__all__ = [
+    "KeySlot",
+    "register",
+    "registered_slots",
+    "slot_values",
+    "fold",
+    "round_env_key",
+    "ENV_MASK",
+    "ENV_RATES",
+    "ENV_COHORT",
+    "DATA_TRAIN",
+    "DATA_TEST",
+    "INIT_FFN_ALT",
+    "INIT_MOE_SHARED",
+]
+
+
+@dataclass(frozen=True)
+class KeySlot:
+    """One registered fold constant: ``fold_in(key, slot.value)``."""
+
+    domain: str
+    name: str
+    value: int
+
+    def __index__(self) -> int:  # lets the slot be used as the fold literal
+        return self.value
+
+
+_REGISTRY: dict[tuple[str, str], KeySlot] = {}
+
+
+def register(domain: str, name: str, value: int) -> KeySlot:
+    """Register a fold slot; raise if (domain, name) or (domain, value) collide.
+
+    Re-registering the exact same triple returns the existing slot (idempotent
+    under module reloads); any mismatch is an error.
+    """
+    slot = KeySlot(domain, name, int(value))
+    prev = _REGISTRY.get((domain, name))
+    if prev is not None:
+        if prev == slot:
+            return prev
+        raise ValueError(
+            f"fold slot {domain}/{name} already registered with value "
+            f"{prev.value}, refusing {slot.value}"
+        )
+    for other in _REGISTRY.values():
+        if other.domain == domain and other.value == slot.value:
+            raise ValueError(
+                f"fold value {slot.value} in domain {domain!r} already taken "
+                f"by slot {other.name!r}, refusing {name!r}"
+            )
+    _REGISTRY[(domain, name)] = slot
+    return slot
+
+
+def registered_slots() -> tuple[KeySlot, ...]:
+    """All registered slots, in registration order."""
+    return tuple(_REGISTRY.values())
+
+
+def slot_values(domain: str | None = None) -> frozenset[int]:
+    """The set of registered fold values (optionally for one domain)."""
+    return frozenset(
+        s.value for s in _REGISTRY.values() if domain is None or s.domain == domain
+    )
+
+
+def fold(key: jax.Array, slot: KeySlot) -> jax.Array:
+    """``jax.random.fold_in`` through a registered slot."""
+    return jax.random.fold_in(key, slot.value)
+
+
+def round_env_key(env_key: jax.Array, round_index) -> jax.Array:
+    """The per-round environment key every env-domain slot folds from."""
+    return jax.random.fold_in(env_key, round_index)
+
+
+# --- the repo's slot layout (values are load-bearing: replay tests pin the
+# --- resulting streams bit-for-bit, so renumbering is a breaking change) ---
+
+#: availability/dropout mask draw for the round
+ENV_MASK = register("env", "mask", 1)
+#: stochastic channel rate draw for the round's link bill
+ENV_RATES = register("env", "rates", 2)
+#: population cohort sample for the round
+ENV_COHORT = register("env", "cohort", 3)
+
+#: synthetic train split of a DataSpec seed key
+DATA_TRAIN = register("data", "train", 0)
+#: synthetic held-out split of a DataSpec seed key
+DATA_TEST = register("data", "test", 1)
+
+#: transformer dense-residual alternate FFN init (beside the split fan-out)
+INIT_FFN_ALT = register("init", "ffn_alt", 1)
+#: MoE shared-expert init stream (beside the routed-expert fan-out)
+INIT_MOE_SHARED = register("init", "moe_shared", 7)

@@ -9,7 +9,6 @@ including the split-learning client/server tiers.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,7 @@ from ..configs import ARCHS
 from ..data.synthetic import synthetic_tokens
 from ..models.transformer import (decode_state_init, default_cut_layer,
                                   model_decode_step, model_init)
+from ..obs import fenced
 
 
 def main(argv=None):
@@ -46,22 +46,27 @@ def main(argv=None):
         lambda p, s, t, pos: model_decode_step(cfg, p, s, t, pos,
                                                cut_layer=cut))
 
-    state = decode_state_init(cfg, args.batch, max_len, cut_layer=cut)
-    # prefill via repeated decode steps (KV-cache exactness is tested against
-    # the full forward; a fused prefill path exists in launch.steps)
-    t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, state = step_fn(params, state, prompts[:, t:t + 1],
-                                jnp.asarray(t, jnp.int32))
-    toks = []
-    for t in range(args.prompt_len, max_len):
-        nxt = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1).astype(jnp.int32)
-        toks.append(nxt)
-        logits, state = step_fn(params, state, nxt[:, None],
-                                jnp.asarray(t, jnp.int32))
-    dt = time.time() - t0
-    gen = jnp.stack(toks, axis=1)
+    state0 = decode_state_init(cfg, args.batch, max_len, cut_layer=cut)
+
+    def generate():
+        # prefill via repeated decode steps (KV-cache exactness is tested
+        # against the full forward; a fused prefill path is in launch.steps)
+        logits, state = None, state0
+        for t in range(args.prompt_len):
+            logits, state = step_fn(params, state, prompts[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32))
+        toks = []
+        for t in range(args.prompt_len, max_len):
+            nxt = jnp.argmax(logits[:, -1, :cfg.vocab],
+                             axis=-1).astype(jnp.int32)
+            toks.append(nxt)
+            logits, state = step_fn(params, state, nxt[:, None],
+                                    jnp.asarray(t, jnp.int32))
+        return jnp.stack(toks, axis=1)
+
+    # fenced: jax dispatch is async — block on the generated tokens before
+    # reading the clock, or tok/s measures queueing
+    gen, dt = fenced(generate)
     tps = args.batch * max_len / dt
     print(f"[serve] arch={cfg.name} batch={args.batch} "
           f"prompt={args.prompt_len} gen={args.gen} "

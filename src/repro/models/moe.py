@@ -32,7 +32,8 @@ def moe_init(key, d_model: int, n_experts: int, d_ff: int, top_k: int,
         "w_down": nn.lecun_normal(ks[3], (n_experts, d_ff, d_model), dtype),
     }
     if n_shared > 0:
-        kss = jax.random.split(jax.random.fold_in(key, 7), n_shared)
+        from ..keys import INIT_MOE_SHARED, fold
+        kss = jax.random.split(fold(key, INIT_MOE_SHARED), n_shared)
         sdff = shared_d_ff or d_ff
         p["shared"] = nn.stack_layers(
             kss[0], n_shared,

@@ -178,7 +178,8 @@ def _attn_layer_init(key, cfg, *, moe: bool, cross: bool = False):
     if moe:
         p["moe"] = _moe_init(ks[5], cfg)
         if cfg.dense_residual:
-            p["ffn"] = _ffn_init(jax.random.fold_in(ks[5], 1), cfg)
+            from ..keys import INIT_FFN_ALT, fold
+            p["ffn"] = _ffn_init(fold(ks[5], INIT_FFN_ALT), cfg)
     else:
         p["ffn"] = _ffn_init(ks[5], cfg)
     return p

@@ -141,9 +141,10 @@ class Obs:
         """Emit one free-form event line (``ev`` names its type)."""
         if not self.enabled:
             return
-        self.sink.emit({"ev": ev,
-                        "t": round(time.perf_counter() - self.timeline.t0, 6),
-                        **fields})
+        self.sink.emit({
+            "ev": ev,
+            "t": round(time.perf_counter() - self.timeline.t0, 6),  # repro: ignore[raw-timer] -- event timestamp on the run clock, not a duration window
+            **fields})
 
     def record(self, round_record) -> None:
         """Emit a RoundRecord as a ``record`` event (JSON-safe to_dict)."""

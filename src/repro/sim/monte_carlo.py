@@ -23,7 +23,8 @@ the rollout; evaluate the seeds you care about with the plan).
 
 Population plans (``ClientSpec.population``) sample their per-round cohort
 INSIDE the rollout with the same key-folding discipline as the plan
-(fold 3 of the per-round key; mask is fold 1, channel rates fold 2), so a
+(``keys.ENV_COHORT`` of the per-round key; mask is ``keys.ENV_MASK``,
+channel rates ``keys.ENV_RATES`` — see the ``repro.keys`` registry), so a
 sweep's cohort stream is bit-identical to a plan compiled at that
 realization seed; batches/masks/billing constants are gathered from the
 population pools by the traced cohort ids.
@@ -35,13 +36,14 @@ and have no single jittable round — ``run_monte_carlo`` raises.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import keys
+from ..obs.timeline import fenced
 from .channel import sample_rates_bps
 from .scenario import (COHORT_DOWN_WEIGHT, AvailabilityParams, ScenarioSpec,
                        availability_init, availability_step, sample_cohort)
@@ -161,18 +163,19 @@ def _mc_context(plan):
 
 def _round_outputs(ctx, kr, state, up, batch, run):
     """One round: cohort draw -> availability mask -> engine round ->
-    channel bill. Key folds match the plan's: 1 = mask, 2 = rates,
-    3 = cohort."""
+    channel bill. Key folds match the plan's (the ``repro.keys`` env
+    slots: ENV_MASK, ENV_RATES, ENV_COHORT)."""
     if ctx["pop"] is not None:
         # cohort weights use the availability state ENTERING the round
         # (the plan draws its cohort before stepping the trace)
         w = (up + (1.0 - up) * COHORT_DOWN_WEIGHT if ctx["weighted"]
              else None)
-        cohort = sample_cohort(jax.random.fold_in(kr, 3), ctx["pop"],
+        cohort = sample_cohort(keys.fold(kr, keys.ENV_COHORT), ctx["pop"],
                                ctx["n"], weights=w)
     else:
         cohort = None
-    mask, up = availability_step(jax.random.fold_in(kr, 1), up, ctx["avail"])
+    mask, up = availability_step(keys.fold(kr, keys.ENV_MASK), up,
+                                 ctx["avail"])
     if cohort is not None:
         # population trace -> cohort slots; availability_step's >=1-active
         # guard holds for the population, not the slice, so an all-down
@@ -188,7 +191,7 @@ def _round_outputs(ctx, kr, state, up, batch, run):
     w = mask[:, None] if ctx["kind"] == "fl" else mask[None, :]
     loss = (losses * w).sum() / (active * steps)
     if ctx["chan"] is not None:
-        rates = sample_rates_bps(jax.random.fold_in(kr, 2), ctx["chan"],
+        rates = sample_rates_bps(keys.fold(kr, keys.ENV_RATES), ctx["chan"],
                                  ctx["dist"], ctx["rate_bps"])
         ratio = ctx["rate_nom"] / rates
     else:
@@ -234,6 +237,43 @@ def _uav_rounds(plan, rounds: int) -> np.ndarray:
     return np.zeros(rounds)
 
 
+def build_vmap_rollout(plan, num_seeds: int, *, rounds: Optional[int] = None,
+                       seed: int = 0):
+    """The sweep's vmapped rollout as a jittable closure plus its example
+    arguments: ``(mc_fn, (seed_keys, state0, batches_all))``.
+
+    ``run_monte_carlo(mode="vmap")`` jits and executes exactly this
+    callable; ``repro.analyze.audit_mc`` traces it statically — one
+    builder, so the audited program IS the executed program.
+    """
+    ctx, scn = _mc_context(plan)
+    rounds = plan.num_rounds if rounds is None else rounds
+    if rounds < 1:
+        raise ValueError("need at least one round")
+    run = plan._run_raw
+    eval_acc = plan._eval_acc_raw
+    batches_all = _stacked_batches(plan, rounds)
+    state0 = plan.init().engine_state
+    seed_keys = jnp.stack([jax.random.PRNGKey(scn.seed + seed + i)
+                           for i in range(num_seeds)])
+    up0 = availability_init(ctx["n_avail"])
+
+    def rollout(key, state0, batches_all):
+        def body(carry, xs):
+            state, up = carry
+            r, batch = xs
+            state, up, out = _round_outputs(
+                ctx, keys.round_env_key(key, r), state, up, batch, run)
+            return (state, up), out
+        (state, _), outs = jax.lax.scan(body, (state0, up0),
+                                        (jnp.arange(rounds), batches_all))
+        # one held-out accuracy per seed, fused into the same program
+        return outs, eval_acc(state)
+
+    mc_fn = jax.vmap(rollout, in_axes=(0, None, None))
+    return mc_fn, (seed_keys, state0, batches_all)
+
+
 def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
                     mode: str = "vmap", seed: int = 0,
                     obs=None) -> MonteCarloResult:
@@ -273,35 +313,20 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
     run = plan._run_raw
     eval_acc = plan._eval_acc_raw
     with obs.span("mc/setup", seeds=num_seeds, rounds=rounds, mode=mode):
-        batches_all = _stacked_batches(plan, rounds)
-        state0 = plan.init().engine_state
-        keys = jnp.stack([jax.random.PRNGKey(scn.seed + seed + i)
-                          for i in range(num_seeds)])
+        mc_fn, (seed_keys, state0, batches_all) = build_vmap_rollout(
+            plan, num_seeds, rounds=rounds, seed=seed)
         up0 = availability_init(ctx["n_avail"])
 
     if mode == "vmap":
-        def rollout(key, state0, batches_all):
-            def body(carry, xs):
-                state, up = carry
-                r, batch = xs
-                state, up, out = _round_outputs(
-                    ctx, jax.random.fold_in(key, r), state, up, batch, run)
-                return (state, up), out
-            (state, _), outs = jax.lax.scan(body, (state0, up0),
-                                            (jnp.arange(rounds), batches_all))
-            # one held-out accuracy per seed, fused into the same program
-            return outs, eval_acc(state)
-
-        mc = jax.jit(jax.vmap(rollout, in_axes=(0, None, None)))
+        mc = jax.jit(mc_fn)
         # AOT-compile so the timed wall excludes compilation WITHOUT paying
         # a full throwaway sweep
         with obs.span("mc/compile", mode=mode):
-            compiled = mc.lower(keys, state0, batches_all).compile()
+            compiled = mc.lower(seed_keys, state0, batches_all).compile()
         with obs.span("mc/execute", mode=mode):
-            t0 = time.time()
-            outs, accs = compiled(keys, state0, batches_all)
-            jax.block_until_ready(outs)
-            wall = time.time() - t0
+            # fenced: dispatch + block on the result, never dispatch alone
+            (outs, accs), wall = fenced(
+                lambda: compiled(seed_keys, state0, batches_all))
         with obs.span("mc/summarize"):
             stacks = {k: np.asarray(v) for k, v in outs.items()}
             stacks["final_accuracy"] = np.asarray(accs)
@@ -309,14 +334,14 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
         @jax.jit
         def round_step(key, r, state, up, batch):
             state, up, out = _round_outputs(
-                ctx, jax.random.fold_in(key, r), state, up, batch, run)
+                ctx, keys.round_env_key(key, r), state, up, batch, run)
             return state, up, out
 
         eval_fn = jax.jit(eval_acc)
 
         def sweep():
             rows, accs = [], []
-            for key in keys:
+            for key in seed_keys:
                 state, up = state0, up0
                 per_round = []
                 for r in range(rounds):
@@ -333,14 +358,13 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
         # share shapes), then run the sweep once, timed
         with obs.span("mc/compile", mode=mode):
             warm = jax.tree_util.tree_map(lambda x: x[0], batches_all)
-            warm_state, _, _ = round_step(keys[0], jnp.uint32(0), state0, up0,
-                                          warm)
+            warm_state, _, _ = round_step(seed_keys[0], jnp.uint32(0), state0,
+                                          up0, warm)
             jax.block_until_ready(eval_fn(warm_state))
         with obs.span("mc/execute", mode=mode):
-            t0 = time.time()
-            rows, accs = sweep()
-            jax.block_until_ready(rows[-1][-1])
-            wall = time.time() - t0
+            # fenced: the sweep queues per-round dispatches; block on the
+            # full row set before reading the wall clock
+            (rows, accs), wall = fenced(sweep)
         with obs.span("mc/summarize"):
             # np.asarray (not float): population sweeps carry a (cohort,) id
             # row per round alongside the scalar bill fields

@@ -105,7 +105,9 @@ def sample_cohort(key, population: int, cohort: int, weights=None):
     fused jax-native draw, no rejection loop, so the compiled plan's host
     loop and the vmapped Monte-Carlo rollout replay the identical cohort
     stream from the same folded key (PR 5 discipline; the cohort key is
-    ``fold_in(fold_in(env_key, round), 3)`` — mask is fold 1, rates fold 2).
+    ``keys.fold(keys.round_env_key(env_key, round), keys.ENV_COHORT)`` —
+    mask is ``keys.ENV_MASK``, rates ``keys.ENV_RATES``; the slot registry
+    in ``repro/keys.py`` keeps the stream layout collision-free).
 
     Ids return SORTED, so ``cohort == population`` is the identity draw
     ``[0..M)`` regardless of key or weights — the degenerate corner's

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""repro_lint — the repo's static-analysis gate (CI job: lint).
+
+    PYTHONPATH=src python tools/repro_lint.py --jaxpr --ast
+    PYTHONPATH=src python tools/repro_lint.py --ast --paths src/repro/sim
+    PYTHONPATH=src python tools/repro_lint.py --jaxpr --variant sl/vmap
+    PYTHONPATH=src python tools/repro_lint.py --ast --json results/lint.json
+
+Two passes (see ``src/repro/analyze`` and the "Static analysis" section of
+docs/ARCHITECTURE.md):
+
+* ``--jaxpr``: compile the engine-variant matrix (fl/sl x scan/vmap/
+  shard_map, dropout, population cohorts, the Monte-Carlo vmap rollout)
+  and audit each compiled round structurally — donation aliasing, host
+  callbacks, f64 leaks, collective axes, trace stability, closure-const
+  budget, plus the PRNG fold-slot registry.
+* ``--ast``: lint the source tree for repo-specific JAX hazards
+  (traced-value branching, raw timers, key reuse, magic fold literals,
+  unhoisted constants, bare excepts, labels crossing the link).
+
+Exit status: 0 iff zero findings. ``--json PATH`` additionally writes the
+machine-readable findings report (the CI artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="pass 1: jaxpr/HLO audit of the compiled variant "
+                         "matrix")
+    ap.add_argument("--ast", action="store_true",
+                    help="pass 2: stdlib-ast lint over --paths")
+    ap.add_argument("--paths", nargs="*", default=["src/repro"],
+                    help="files/dirs for --ast (default: src/repro)")
+    ap.add_argument("--variant", default=None,
+                    help="audit only variants whose name contains this "
+                         "substring (e.g. 'sl/vmap', 'mc/')")
+    ap.add_argument("--no-mc", action="store_true",
+                    help="skip the Monte-Carlo rollout audits")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the findings report as JSON (CI artifact)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print findings only, no per-check progress")
+    args = ap.parse_args(argv)
+    if not (args.jaxpr or args.ast):
+        ap.error("nothing to do: pass --jaxpr and/or --ast")
+
+    from repro.analyze import Report, lint_paths
+    combined = Report()
+
+    if args.ast:
+        report = lint_paths([REPO_ROOT / p for p in args.paths],
+                            repo_root=REPO_ROOT)
+        if not args.quiet:
+            print(f"[ast]   linted {len(report.checked)} files: "
+                  f"{len(report.findings)} finding(s)")
+        combined.extend(report)
+
+    if args.jaxpr:
+        from repro.analyze import (audit_keys, audit_mc, audit_plan,
+                                   compiled_variants)
+        combined.extend(audit_keys())
+        for name, plan, with_mc in compiled_variants(mc=not args.no_mc,
+                                                     match=args.variant):
+            report = audit_plan(plan)
+            if with_mc:
+                report.extend(audit_mc(plan))
+            if not args.quiet:
+                print(f"[jaxpr] {name}: {len(report.findings)} finding(s)")
+            report.checked = [f"{name}: {c}" for c in report.checked]
+            combined.extend(report)
+
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(combined.to_dict(), indent=2) + "\n")
+        if not args.quiet:
+            print(f"[lint]  report -> {out}")
+
+    for f in combined.findings:
+        print(f)
+    n = len(combined.findings)
+    print(f"[lint]  {n} finding(s) across {len(combined.checked)} "
+          f"checked target(s)")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
