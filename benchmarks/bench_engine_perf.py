@@ -230,11 +230,66 @@ def bench_cohort(model: str, population: int, *, clients: int = 8,
     return out
 
 
+def bench_kernels(*, rounds: int = 20, obs: Obs = NULL_OBS) -> dict:
+    """calls/sec of each Pallas hot-path kernel vs its XLA reference.
+
+    Off-accelerator the Pallas side runs in interpret mode — those rows
+    price the oracle, not the kernel (the CPU container's numbers are a
+    trend pin, not a speedup claim; re-measure where a TPU/GPU backend
+    compiles the kernels natively). Cases:
+
+      attn_b2h4s256d64 : flash_attention vs flash_attention_ref (the
+                         O(S²) XLA oracle) on a (2,4,256,64) block
+      link_m2048d256   : fused one-kernel int8 quant+dequant vs the
+                         two-op jnp reference boundary
+      link_res_m2048d256 : the fused dequant+residual server epilogue vs
+                         the unfused composition
+    """
+    from repro.kernels.attn.flash import flash_attention
+    from repro.kernels.attn.ref import flash_attention_ref
+    from repro.kernels.dispatch import accelerator_backend
+    from repro.kernels.quant.ops import quant_dequant, quant_dequant_residual
+
+    interpret = not accelerator_backend()
+    out: dict[tuple[str, str], float] = {}
+
+    def meas(case, variant, fn, *args):
+        jax.block_until_ready(fn(*args))          # warmup / compile
+        wall = time_fenced(lambda: fn(*args), repeats=rounds)
+        out[(case, variant)] = rounds / wall
+
+    b, h, s, d = 2, 4, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (b, h, s, d)) for kk in ks)
+    attn_case = f"attn_b{b}h{h}s{s}d{d}"
+    meas(attn_case, "pallas", jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, block_q=128, block_k=128, interpret=interpret)), q, k, v)
+    meas(attn_case, "xla",
+         jax.jit(lambda q, k, v: flash_attention_ref(q, k, v)), q, k, v)
+
+    m, dd = 2048, 256
+    kx, kr = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (m, dd)) * 4.0
+    r = jax.random.normal(kr, (m, dd))
+    link_case = f"link_m{m}d{dd}"
+    for variant, up in (("fused", True), ("xla", False)):
+        meas(link_case, variant,
+             lambda xx, up=up: quant_dequant(xx, use_pallas=up,
+                                             interpret=interpret), x)
+    res_case = f"link_res_m{m}d{dd}"
+    for variant, up in (("fused", True), ("xla", False)):
+        meas(res_case, variant,
+             lambda xx, rr, up=up: quant_dequant_residual(
+                 xx, rr, use_pallas=up, interpret=interpret), x, r)
+    return out
+
+
 def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
         batch: int = 16, image: int = 32, rounds: int = 10,
         print_csv: bool = True, commit: str | None = None,
         mc_seeds: int = 16,
         populations: tuple[int, ...] | None = None,
+        kernels: bool = False,
         obs: Obs | ObsConfig | None = None) -> list[dict]:
     obs = Obs.ensure(obs)
     base = _base_spec(model, clients, steps, batch, image)
@@ -297,6 +352,16 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
                       "steps_per_s": round(r["steps_per_s"], 2),
                       "state_bytes": r["state_bytes"]}
                      for v, r in cres.items()]
+        # per-kernel rows (--kernels): fixed model "kernels", one case per
+        # hot-path kernel, pallas/fused vs xla variants — trend-gated like
+        # every other key
+        if kernels:
+            with obs.span("kernels"):
+                kres = bench_kernels(rounds=max(rounds, 10), obs=obs)
+            rows += [{"commit": commit, "bench": "engine_perf",
+                      "model": "kernels", "case": case, "variant": v,
+                      "steps_per_s": round(sps, 2)}
+                     for (case, v), sps in kres.items()]
     if obs:
         obs.manifest(bench={"bench": "engine_perf", "model": model,
                             "case": case, "commit": commit,
@@ -343,6 +408,10 @@ def main():
                     help="log fl_cohort/sl_cohort rows (steps/s + engine-"
                          "state bytes, cohort of 8 sampled from M); "
                          "repeatable; default 1e4/1e5/1e6; 0 skips")
+    ap.add_argument("--kernels", action="store_true",
+                    help="log per-kernel rows (flash attention + fused int8 "
+                         "link vs their XLA references; interpret-mode "
+                         "Pallas off-accelerator)")
     ap.add_argument("--commit", default=None,
                     help="override the logged commit label (used to append "
                          "same-machine re-measured baseline rows next to a "
@@ -362,7 +431,7 @@ def main():
         commit=args.commit, mc_seeds=args.mc_seeds,
         populations=(tuple(args.populations)
                      if args.populations is not None else None),
-        obs=obs)
+        kernels=args.kernels, obs=obs)
     if obs is not None:
         obs.close()
         print(f"obs,run_dir,0,{obs.run_dir}")

@@ -17,7 +17,8 @@ NUM_CLASSES = 4
 
 
 def _tiny_spec(kind: str, axis: str, *, pop: Optional[int] = None,
-               scenario=None, dropout: float = 0.0, mission: bool = False):
+               scenario=None, dropout: float = 0.0, mission: bool = False,
+               link_kernel: str = "xla", compress: str = "none"):
     from ..api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
                        ExperimentSpec, LinkPolicy, MissionSpec, ModelSpec)
     return ExperimentSpec(
@@ -27,10 +28,31 @@ def _tiny_spec(kind: str, axis: str, *, pop: Optional[int] = None,
         clients=ClientSpec(num_clients=2, population=pop,
                            dropout_rate=dropout),
         cut_policy=CutPolicy(mode="fraction", fraction=0.4),
-        link_policy=LinkPolicy(),
-        engine=EngineSpec(kind=kind, client_axis=axis),
+        link_policy=LinkPolicy(compress=compress),
+        engine=EngineSpec(kind=kind, client_axis=axis,
+                          link_kernel=link_kernel),
         mission=MissionSpec(farm_acres=50.0) if mission else None,
         scenario=scenario,
+        global_rounds=1, local_steps=1, batch_size=4, seed=0)
+
+
+def _tiny_lm_spec(axis: str, *, attn_impl: str = "xla"):
+    """Minimum-cost transformer SL spec: the kernel-dispatch seam
+    (``ModelSpec.attn_impl``) compiled into a real split-LM round."""
+    from ..api import (ClientSpec, CutPolicy, DataSpec, EngineSpec,
+                       ExperimentSpec, ModelSpec)
+    from ..configs.base import ArchConfig
+    arch = ArchConfig(name="tinylm", family="attn", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                      dtype="float32")
+    return ExperimentSpec(
+        model=ModelSpec(family="transformer", name="tinylm", arch=arch,
+                        attn_impl=attn_impl),
+        data=DataSpec(kind="tokens", partition="iid", seq_len=16,
+                      n_train=32, n_test=16),
+        clients=ClientSpec(num_clients=2),
+        cut_policy=CutPolicy(mode="fraction", fraction=0.5),
+        engine=EngineSpec(kind="sl", client_axis=axis),
         global_rounds=1, local_steps=1, batch_size=4, seed=0)
 
 
@@ -45,6 +67,14 @@ def variant_specs() -> Iterator[tuple[str, object]]:
     # population cohorts: stateless FL rounds + the EPSL shared client tier
     yield "fl/vmap+population", _tiny_spec("fl", "vmap", pop=6)
     yield "sl/vmap+population", _tiny_spec("sl", "vmap", pop=6)
+    # kernel-enabled lowerings (PR-9 Pallas pass): the audited programs
+    # must include what we actually execute when kernels are on — the
+    # interpret-mode Pallas flash attention inside a split-LM round and
+    # the fused int8 link boundary
+    yield "sl/vmap+lm_pallas", _tiny_lm_spec("vmap", attn_impl="pallas")
+    yield "sl/scan+lm_pallas", _tiny_lm_spec("scan", attn_impl="pallas")
+    yield "sl/vmap+link_fused", _tiny_spec("sl", "vmap", compress="int8",
+                                           link_kernel="fused")
 
 
 def mc_specs() -> Iterator[tuple[str, object]]:

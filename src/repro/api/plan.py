@@ -43,6 +43,8 @@ from ..launch.mesh import make_fleet_mesh, single_device_fleet_mesh
 from ..fleet.hetero import (HeteroFleet, assign_cuts_cnn, cnn_split_program,
                             lm_split_program)
 from ..fleet.link import FleetLink
+from ..kernels.dispatch import (ATTN_IMPLS, LINK_KERNELS, resolve_attn_impl,
+                                resolve_link_kernel)
 from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
 from ..obs import NULL_OBS, Obs
 from ..optim import adamw, init_stacked
@@ -531,6 +533,19 @@ def _validate(spec: ExperimentSpec):
                              "to lift this)")
     elif spec.model.name not in CNN_BUILDERS:
         raise ValueError(f"unknown CNN {spec.model.name!r}")
+    if spec.model.attn_impl not in ATTN_IMPLS:
+        raise ValueError(f"ModelSpec.attn_impl must be one of {ATTN_IMPLS}, "
+                         f"got {spec.model.attn_impl!r}")
+    if spec.model.attn_impl != "xla" and spec.model.family != "transformer":
+        raise ValueError("ModelSpec.attn_impl selects the transformer "
+                         "attention kernel; CNN stage lists have no "
+                         "attention to dispatch")
+    if eng.link_kernel not in LINK_KERNELS:
+        raise ValueError(f"EngineSpec.link_kernel must be one of "
+                         f"{LINK_KERNELS}, got {eng.link_kernel!r}")
+    if eng.link_kernel != "xla" and spec.link_policy.compress != "int8":
+        raise ValueError("EngineSpec.link_kernel fuses the int8 boundary; "
+                         "it needs LinkPolicy(compress='int8')")
     if spec.data.kind not in ("synthetic", "arrays", "tokens"):
         raise ValueError(f"DataSpec.kind must be 'synthetic', 'arrays' or "
                          f"'tokens', got {spec.data.kind!r}")
@@ -661,7 +676,10 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
         parts = _resolve_parts(spec, y_train)
     edges = [spec.clients.edge_profiles[i % len(spec.clients.edge_profiles)]
              for i in range(n)]
-    link = FleetLink(config=spec.link_policy.config())
+    use_pallas_link, interpret_link = resolve_link_kernel(
+        spec.engine.link_kernel)
+    link = FleetLink(config=spec.link_policy.config(),
+                     use_pallas=use_pallas_link, interpret=interpret_link)
     scn = spec.scenario
 
     # ---- mission: placement, tour/timeline, round budget -----------------
@@ -719,7 +737,9 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
         cut_of_client = [k] * n
         with obs.span("compile/params"):
             prog = lm_split_program(cfg, jax.random.PRNGKey(spec.seed), k,
-                                    link_boundary=link.boundary())
+                                    link_boundary=link.boundary(),
+                                    attn_impl=resolve_attn_impl(
+                                        spec.model.attn_impl))
             sample_bx = jnp.asarray(x_train[:spec.batch_size])
             sample_by = jnp.asarray(y_train[:spec.batch_size])
         with obs.span("compile/flops"):

@@ -76,6 +76,11 @@ class ModelSpec:
     # split at the CutPolicy fraction (fleet.hetero.lm_split_program — embed
     # + prefix blocks on the client, suffix blocks + LM head on the server)
     arch: Optional[ArchConfig] = None
+    # attention kernel for the transformer blocks (kernels.dispatch):
+    # "xla" (chunked jnp path, bit-identical default) | "pallas" (flash
+    # kernel; interpret mode off-accelerator) | "ref" (O(S²) oracle) |
+    # "auto" (pallas on TPU/GPU, xla on CPU)
+    attn_impl: str = "xla"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +156,11 @@ class EngineSpec:
     # shards the SL server params/optimizer state with the
     # launch.steps.fleet_server_pspecs tier specs.
     server_mesh: Optional[Tuple[int, int]] = None
+    # int8 link-boundary kernel (only bites with LinkPolicy.compress="int8"):
+    # "xla" (two-op jnp quant/dequant reference, default) | "fused" (ONE
+    # Pallas kernel: quant + per-row scale + dequant; interpret mode
+    # off-accelerator) | "auto" (fused on TPU/GPU, xla on CPU)
+    link_kernel: str = "xla"
 
     @property
     def is_fleet(self) -> bool:

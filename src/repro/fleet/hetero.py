@@ -130,7 +130,8 @@ def cnn_split_program(stages: Sequence[Stage], params, k: int, *,
     return SplitProgram(step=step, params_c0=cp, params_s0=sp, cut_index=k)
 
 
-def transformer_block_apply(cfg, *, window="cfg") -> Callable:
+def transformer_block_apply(cfg, *, window="cfg",
+                            attn_impl: str = "xla") -> Callable:
     """``block_apply`` for ``stack_split_program`` backed by the *real*
     transformer forward (``models.transformer.group_apply``).
 
@@ -156,7 +157,8 @@ def transformer_block_apply(cfg, *, window="cfg") -> Callable:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         h, _aux = group_apply(cfg, g, stacked, h,
                               jnp.zeros((), jnp.float32),
-                              positions=positions, window=win)
+                              positions=positions, window=win,
+                              attn_impl=attn_impl)
         return h
 
     return block_apply
@@ -164,7 +166,7 @@ def transformer_block_apply(cfg, *, window="cfg") -> Callable:
 
 def arch_split_program(cfg, key, k: int, *, loss_fn: Callable,
                        link_boundary: Optional[Callable] = None,
-                       window="cfg") -> SplitProgram:
+                       window="cfg", attn_impl: str = "xla") -> SplitProgram:
     """Split a real transformer ``ArchConfig`` at layer ``k`` through the
     stacked-block interface: init one homogeneous attention stack
     (``models.transformer.group_init``) and cut its layer axis. The smashed
@@ -177,7 +179,7 @@ def arch_split_program(cfg, key, k: int, *, loss_fn: Callable,
     stacked = group_init(key, cfg, GroupSpec("attn", cfg.n_layers, 0))
     return stack_split_program(stacked, k,
                                block_apply=transformer_block_apply(
-                                   cfg, window=window),
+                                   cfg, window=window, attn_impl=attn_impl),
                                loss_fn=loss_fn, link_boundary=link_boundary)
 
 
@@ -200,7 +202,7 @@ class LMSplitProgram:
 
 def lm_split_program(cfg, key, k: int, *,
                      link_boundary: Optional[Callable] = None,
-                     window="cfg") -> LMSplitProgram:
+                     window="cfg", attn_impl: str = "xla") -> LMSplitProgram:
     """Split a next-token LM built on a real transformer ``ArchConfig``
     stack (``models.transformer.group_apply`` blocks) at layer ``k``.
 
@@ -223,7 +225,8 @@ def lm_split_program(cfg, key, k: int, *,
                                       jnp.float32)
     head = scale * jax.random.normal(k_head, (cfg.d_model, cfg.vocab),
                                      jnp.float32)
-    block_apply = transformer_block_apply(cfg, window=window)
+    block_apply = transformer_block_apply(cfg, window=window,
+                                          attn_impl=attn_impl)
 
     def run_blocks(stack, h):
         def body(h, blk):

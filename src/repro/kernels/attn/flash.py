@@ -8,7 +8,16 @@ VMEM scratch. Block shapes are explicit BlockSpecs; q/kv block defaults
 while the (bq x bk) score tile feeds the MXU with 128-aligned dims.
 
 Causal + window masking is done per-tile; fully-masked tiles are skipped
-with @pl.when so SWA costs O(S * window).
+with @pl.when so SWA costs O(S * window). Non-block-aligned sequence
+lengths are zero-padded up to the block multiple (never shrunk toward
+bq=1): padded key positions are masked with ``kv_len`` inside the kernel,
+padded query rows are sliced off the output.
+
+``flash_attention`` is differentiable: Pallas interpret mode has no
+transpose rule on this toolchain, so the backward pass is the closed-form
+flash-attention gradient (recomputed scores, dS = P∘(dP − rowsum(dO∘O)))
+registered via ``jax.custom_vjp``. It is O(S²) memory — fine for the
+training shapes this repo runs; a tiled backward kernel is future work.
 """
 from __future__ import annotations
 
@@ -25,7 +34,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   scale: float, bq: int, bk: int, nk: int, causal: bool,
-                  window):
+                  window, kv_len):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -43,6 +52,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         live = k_lo <= q_lo + bq - 1
     if window is not None:
         live = jnp.logical_and(live, k_lo + bk - 1 > q_lo - window)
+    if kv_len is not None:    # kv was padded: trailing tiles may be all-pad
+        live = jnp.logical_and(live, k_lo < kv_len)
 
     @pl.when(live)
     def _compute():
@@ -58,6 +69,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             mask &= qpos >= kpos
         if window is not None:
             mask &= (qpos - kpos) < window
+        if kv_len is not None:
+            mask &= kpos < kv_len
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]
@@ -75,26 +88,32 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                        jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window=None,
-                    block_q: int = 256, block_k: int = 512,
-                    interpret: bool = False) -> jax.Array:
-    """q (B,H,S,D); k,v (B,H,Sk,D) — GQA callers repeat KV heads first.
-    Returns (B,H,S,D)."""
+def _pad_axis2(x: jax.Array, n_pad: int) -> jax.Array:
+    if n_pad == x.shape[2]:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, n_pad - x.shape[2]), (0, 0)))
+
+
+def _flash_forward(q, k, v, causal, window, block_q, block_k, interpret):
     b, h, s, d = q.shape
     sk = k.shape[2]
     bq = min(block_q, s)
     bk = min(block_k, sk)
-    while s % bq:
-        bq //= 2
-    while sk % bk:
-        bk //= 2
-    nq, nk = s // bq, sk // bk
+    # pad to the block multiple instead of shrinking the block (the old
+    # ``while s % bq: bq //= 2`` fallback degrades toward bq=1 on prime S)
+    s_pad = -(-s // bq) * bq
+    sk_pad = -(-sk // bk) * bk
+    q = _pad_axis2(q, s_pad)
+    k = _pad_axis2(k, sk_pad)
+    v = _pad_axis2(v, sk_pad)
+    kv_len = sk if sk_pad != sk else None
+    nq, nk = s_pad // bq, sk_pad // bk
     scale = 1.0 / math.sqrt(d)
 
     kernel = functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
-                               nk=nk, causal=causal, window=window)
-    return pl.pallas_call(
+                               nk=nk, causal=causal, window=window,
+                               kv_len=kv_len)
+    out = pl.pallas_call(
         kernel,
         grid=(b, h, nq, nk),
         in_specs=[
@@ -103,7 +122,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -114,3 +133,57 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :s] if s_pad != s else out
+
+
+def _masked_probs(q, k, d, causal, window):
+    """Recomputed (B,H,S,Sk) float32 softmax probabilities, masked exactly
+    like the forward kernel."""
+    s_ = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(d)
+    qpos = jnp.arange(q.shape[2])[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((q.shape[2], k.shape[2]), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s_ = jnp.where(mask, s_, NEG_INF)
+    return jax.nn.softmax(s_, axis=-1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, block_q, block_k, interpret):
+    return _flash_forward(q, k, v, causal, window, block_q, block_k,
+                          interpret)
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    o = _flash_forward(q, k, v, causal, window, block_q, block_k, interpret)
+    return o, (q, k, v, o)
+
+
+def _flash_vjp_bwd(causal, window, block_q, block_k, interpret, res, g):
+    q, k, v, o = res
+    d = q.shape[-1]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    gf, of = g.astype(jnp.float32), o.astype(jnp.float32)
+    p = _masked_probs(qf, kf, d, causal, window)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, gf)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", gf, vf)
+    delta = jnp.sum(gf * of, axis=-1, keepdims=True)       # (B,H,S,1)
+    ds = p * (dp - delta)
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kf) / math.sqrt(d)
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qf) / math.sqrt(d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None,
+                    block_q: int = 256, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,H,S,D); k,v (B,H,Sk,D) — GQA callers repeat KV heads first.
+    Returns (B,H,S,D)."""
+    return _flash(q, k, v, causal, window, block_q, block_k, interpret)

@@ -1,0 +1,49 @@
+"""Backend-aware kernel dispatch: which impl of each hot-path kernel runs.
+
+The spec layer names *intents* (``ModelSpec.attn_impl``,
+``EngineSpec.link_kernel``); this module resolves them to concrete kernel
+paths at lowering time. Resolution is the ONLY place backend sniffing
+happens — everything below takes explicit ``use_pallas``/``interpret``
+flags:
+
+- ``"auto"``   -> Pallas on an accelerator backend (TPU/GPU), the XLA
+  reference path on CPU (where Pallas only runs in interpret mode and is
+  a correctness oracle, not a win).
+- ``"pallas"`` / ``"fused"`` -> force the Pallas kernel; off-accelerator
+  it runs in interpret mode (slow, bit-level oracle for parity tests and
+  the jaxpr audit of kernel-enabled lowerings).
+- ``"xla"``    -> the plain jnp/XLA path (today's default, bit-identical
+  to the pre-kernel lowerings).
+- ``"ref"``    (attention only) -> the O(S²) ``kernels/attn/ref.py``
+  oracle via the same dispatch seam the Pallas path uses.
+"""
+from __future__ import annotations
+
+import jax
+
+ATTN_IMPLS = ("auto", "xla", "pallas", "ref")
+LINK_KERNELS = ("auto", "xla", "fused")
+
+
+def accelerator_backend() -> bool:
+    """True when the default JAX backend compiles Pallas natively."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def resolve_attn_impl(impl: str) -> str:
+    """'auto'|'xla'|'pallas'|'ref' -> concrete impl for this backend."""
+    if impl not in ATTN_IMPLS:
+        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if accelerator_backend() else "xla"
+    return impl
+
+
+def resolve_link_kernel(kind: str) -> tuple[bool, bool]:
+    """'auto'|'xla'|'fused' -> ``(use_pallas, interpret)`` for FleetLink."""
+    if kind not in LINK_KERNELS:
+        raise ValueError(
+            f"link_kernel must be one of {LINK_KERNELS}, got {kind!r}")
+    if kind == "auto":
+        kind = "fused" if accelerator_backend() else "xla"
+    return kind == "fused", not accelerator_backend()

@@ -12,7 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .int8 import dequantize_int8, quantize_int8
+from .int8 import quant_dequant_int8
 from .ref import dequantize_int8_ref, quantize_int8_ref
 
 
@@ -22,11 +22,32 @@ def quant_dequant(x: jax.Array, *, use_pallas: bool = False,
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     if use_pallas:
-        q, s = quantize_int8(x2, interpret=interpret)
-        y = dequantize_int8(q, s, out_dtype=x.dtype, interpret=interpret)
+        # ONE fused kernel: quant + per-row scale + dequant, codes/scales
+        # never round-trip through HBM (vs the two-op XLA reference)
+        y = quant_dequant_int8(x2, out_dtype=x.dtype, interpret=interpret)
     else:
         q, s = quantize_int8_ref(x2)
         y = dequantize_int8_ref(q, s, out_dtype=x.dtype)
+    return y.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quant_dequant_residual(x: jax.Array, residual: jax.Array, *,
+                           use_pallas: bool = False,
+                           interpret: bool = True) -> jax.Array:
+    """Server-side fused epilogue: ``dequant(quant(x)) + residual`` in one
+    kernel — the serve tier adds the incoming smashed activations onto the
+    server residual stream without materializing the dequantized tensor."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r2 = residual.reshape(-1, shape[-1])
+    if use_pallas:
+        y = quant_dequant_int8(x2, residual=r2, out_dtype=x.dtype,
+                               interpret=interpret)
+    else:
+        q, s = quantize_int8_ref(x2)
+        y = (dequantize_int8_ref(q, s, out_dtype=jnp.float32)
+             + r2.astype(jnp.float32)).astype(x.dtype)
     return y.reshape(shape)
 
 

@@ -235,8 +235,15 @@ def group_init(key, cfg: ArchConfig, g: GroupSpec) -> Params:
 # forward (train / prefill): scan over each group's stack
 # ---------------------------------------------------------------------------
 
-def _attn_block(cfg, p, x, positions, *, window, causal=True, kv=None):
-    """One attention sublayer (pre-norm residual). kv: external (cross)."""
+def _attn_block(cfg, p, x, positions, *, window, causal=True, kv=None,
+                attn_impl="xla"):
+    """One attention sublayer (pre-norm residual). kv: external (cross).
+
+    ``attn_impl`` is the kernel-dispatch seam: ``"xla"`` keeps the chunked
+    jnp path (bit-identical to the pre-kernel lowerings); ``"pallas"`` /
+    ``"ref"`` route through ``kernels.attn.ops.attention`` — the Pallas
+    flash kernel (interpret mode off-accelerator) or the O(S²) oracle.
+    """
     h = _norm_apply(cfg, p["ln1"], x)
     attn_p = p["attn"]
     b, s, _ = h.shape
@@ -246,7 +253,14 @@ def _attn_block(cfg, p, x, positions, *, window, causal=True, kv=None):
     if causal:  # rope only for (causal) self-attention stacks
         q = nn.apply_rope(q, positions, theta=cfg.rope_theta)
         k = nn.apply_rope(k, positions, theta=cfg.rope_theta)
-    out = chunked_causal_attention(q, k, v, window=window, causal=causal)
+    if attn_impl == "xla":
+        out = chunked_causal_attention(q, k, v, window=window, causal=causal)
+    else:
+        from ..kernels.attn.ops import attention
+        from ..kernels.dispatch import accelerator_backend
+        out = attention(q, k, v, causal=causal, window=window,
+                        use_pallas=(attn_impl == "pallas"),
+                        interpret=not accelerator_backend())
     out = nn.linear_apply(attn_p["wo"], out.reshape(b, s, cfg.n_heads * cfg.hd))
     return x + out
 
@@ -268,7 +282,7 @@ def _ffn_block(cfg, p, x, aux, moe: bool, moe_groups: int = 1):
 def group_apply(cfg: ArchConfig, g: GroupSpec, stacked: Params, x, aux, *,
                 positions, window, enc_out=None, unroll: int = 1,
                 remat: bool = False, act_spec=("dp", None, None),
-                moe_groups: int = 1):
+                moe_groups: int = 1, attn_impl: str = "xla"):
     """Full-sequence pass (train/prefill). Returns (x, aux). With
     ``remat`` each scanned layer body is rematerialized in the backward
     pass (only the residual-stream carry is saved)."""
@@ -280,7 +294,8 @@ def group_apply(cfg: ArchConfig, g: GroupSpec, stacked: Params, x, aux, *,
 
         def body(carry, layer):
             h, a = carry
-            h = _attn_block(cfg, layer, h, positions, window=window, causal=causal)
+            h = _attn_block(cfg, layer, h, positions, window=window,
+                            causal=causal, attn_impl=attn_impl)
             if g.kind == "xdec":
                 h = h + _x_cross(cfg, layer, h, enc_out)
             h, a = _ffn_block(cfg, layer, h, a, moe=g.moe,
@@ -312,7 +327,8 @@ def group_apply(cfg: ArchConfig, g: GroupSpec, stacked: Params, x, aux, *,
             for i in range(cfg.attn_period):
                 sub = layer[f"sub{i}"]
                 if "attn" in sub:
-                    h = _attn_block(cfg, sub, h, positions, window=window)
+                    h = _attn_block(cfg, sub, h, positions, window=window,
+                                    attn_impl=attn_impl)
                 else:
                     y, _ = mamba_apply(sub["mamba"], _norm_apply(cfg, sub["ln1"], h),
                                        expand=cfg.ssm_expand,
