@@ -107,13 +107,13 @@ def bench_spec_variant(spec: ExperimentSpec, *, rounds: int,
     state = plan.init()
     batches = plan.round_batches(state)
     es = state.engine_state
-    # warmup / compile
-    es, losses = plan.raw_round(es, batches)
+    # warmup / compile (*_: metrics-bus taps when --obs compiled them in)
+    es, losses, *_ = plan.raw_round(es, batches)
     jax.block_until_ready(losses)
 
     def one_round():
         nonlocal es
-        es, losses = plan.raw_round(es, batches)
+        es, losses, *_ = plan.raw_round(es, batches)
         return losses
 
     wall = time_fenced(one_round, repeats=rounds)
@@ -215,12 +215,12 @@ def bench_cohort(model: str, population: int, *, clients: int = 8,
         # program whichever population ids the rows came from
         batches = plan.round_batches(state,
                                      cohort=plan._round_cohort(state))
-        es, losses = plan.raw_round(es, batches)      # warmup / compile
+        es, losses, *_ = plan.raw_round(es, batches)  # warmup / compile
         jax.block_until_ready(losses)
 
         def one_round():
             nonlocal es
-            es, losses = plan.raw_round(es, batches)
+            es, losses, *_ = plan.raw_round(es, batches)
             return losses
 
         wall = time_fenced(one_round, repeats=rounds)
@@ -362,6 +362,17 @@ def run(model: str = "tinycnn", clients: int = 4, steps: int = 4,
                       "model": "kernels", "case": case, "variant": v,
                       "steps_per_s": round(sps, 2)}
                      for (case, v), sps in kres.items()]
+    # health probe: the timed benches go through raw_round (no record
+    # assembly), so with --obs metrics enabled run a couple of recorded
+    # rounds too — they stream `metrics` events into the run dir, which
+    # the CI smoke gates on zero nonfinite slot-steps
+    # (tools/obs_report.py --health-gate)
+    if obs and obs.config.metrics is not None:
+        with obs.span("health_probe", rounds=2):
+            probe = compile_experiment(dataclasses.replace(
+                base, engine=EngineSpec("sl", "vmap"), global_rounds=2),
+                obs=obs)
+            probe.run(with_eval=False)
     if obs:
         obs.manifest(bench={"bench": "engine_perf", "model": model,
                             "case": case, "commit": commit,
@@ -419,13 +430,16 @@ def main():
                          "like with like)")
     ap.add_argument("--obs", action="store_true",
                     help="stream telemetry (phase spans, recompile/memory "
-                         "gauges, manifest) for this bench session to "
+                         "gauges, manifest, the default metrics-bus tap "
+                         "set + health probe) for this bench session to "
                          "results/runs/<run_id>/; render with "
                          "tools/obs_report.py")
     ap.add_argument("--obs-root", default="results/runs",
                     help="run-dir root for --obs (default results/runs)")
     args = ap.parse_args()
-    obs = Obs(ObsConfig(run_root=args.obs_root)) if args.obs else None
+    from repro.obs.metrics import MetricsConfig
+    obs = (Obs(ObsConfig(run_root=args.obs_root, metrics=MetricsConfig()))
+           if args.obs else None)
     run(model=args.model, clients=args.clients, steps=args.steps,
         batch=args.batch, image=args.image, rounds=args.rounds,
         commit=args.commit, mc_seeds=args.mc_seeds,

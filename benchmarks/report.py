@@ -19,6 +19,10 @@ from different machines (the committed log vs a CI runner). Variants the
 previous commit logged that the latest did not are WARNED about, not
 compared (a shrunk bench invocation is not a regression).
 
+``--compact N`` prunes the same log in place to each (model, case,
+variant) key's last N commits — CI compacts before uploading the artifact
+so the log stops growing without bound.
+
 ``--runs [ROOT]`` lists ``repro.obs`` telemetry run dirs (default
 ``results/runs``) cross-linked to the gate: runs whose manifest commit
 matches either side of the last-two-commits comparison are tagged
@@ -334,6 +338,54 @@ def check_perf(path: str = PERF_LOG, *, threshold: float = 0.10,
     return 0
 
 
+def compact_perf_log(rows: list[dict], keep: int) -> list[dict]:
+    """Prune the append-only engine-perf log to each (model, case, variant)
+    key's last ``keep`` logged commits.
+
+    The log grows by one row set per CI/bench invocation forever; the
+    trend gate only ever reads the last two commits per key, so older rows
+    are artifact weight. Rows that are not engine-perf measurements (no
+    ``steps_per_s``) pass through untouched; commit order per key is
+    first-appearance order, same as ``perf_trend``."""
+    if keep < 1:
+        raise ValueError("--compact needs keep >= 1")
+    commits_of: dict[tuple, list] = {}
+    for r in rows:
+        if r.get("bench") != "engine_perf" or "steps_per_s" not in r:
+            continue
+        key = (r.get("model"), r.get("case"), r.get("variant"))
+        cl = commits_of.setdefault(key, [])
+        if r.get("commit") not in cl:
+            cl.append(r.get("commit"))
+    out = []
+    for r in rows:
+        if r.get("bench") != "engine_perf" or "steps_per_s" not in r:
+            out.append(r)
+            continue
+        key = (r.get("model"), r.get("case"), r.get("variant"))
+        if r.get("commit") in commits_of[key][-keep:]:
+            out.append(r)
+    return out
+
+
+def compact_cli(keep: int, path: str = PERF_LOG) -> int:
+    """CLI for ``--compact``: rewrite the log pruned in place (CI runs this
+    before uploading the artifact)."""
+    if not os.path.exists(path):
+        print(f"compact: no {path}; nothing to prune")
+        return 0
+    try:
+        rows = json.load(open(path))
+    except ValueError:
+        print(f"compact: {path} is not valid JSON")
+        return 1
+    pruned = compact_perf_log(rows, keep)
+    json.dump(pruned, open(path, "w"), indent=1)
+    print(f"compact: {path} {len(rows)} -> {len(pruned)} rows "
+          f"(last {keep} commits per (model, case, variant))")
+    return 0
+
+
 def runs_overview(root: str = "results/runs",
                   perf_log: str = PERF_LOG) -> list[dict]:
     """One row per telemetry run dir (``repro.obs``), cross-linked to the
@@ -423,7 +475,13 @@ def main():
                     help="list repro.obs telemetry run dirs under ROOT "
                          "(default results/runs) cross-linked to the perf "
                          "trend gate's last two commits")
+    ap.add_argument("--compact", type=int, default=None, metavar="N",
+                    help="prune results/engine_perf.json in place to each "
+                         "(model, case, variant) key's last N commits "
+                         "(CI runs this before uploading the artifact)")
     args = ap.parse_args()
+    if args.compact is not None:
+        sys.exit(compact_cli(args.compact))
     if args.runs is not None:
         sys.exit(show_runs(args.runs))
     if args.check:

@@ -3,7 +3,10 @@
 Mirrors the tier-1 test matrix at minimum compile cost: one tiny CNN spec
 per ``EngineSpec`` variant (fl/sl x scan/vmap/shard_map), the
 population-cohort corners (stateless FL cohorts + the EPSL shared client
-tier), and the Monte-Carlo vmap rollout over a masked scenario plan.
+tier), the Monte-Carlo vmap rollout over a masked scenario plan, and the
+metrics-bus twins (``<name>+metrics``: the same specs compiled with
+``ObsConfig(metrics=MetricsConfig())`` so the tap-carrying programs clear
+the audit too).
 ``tools/repro_lint.py --jaxpr`` compiles each and runs ``audit_plan`` /
 ``audit_mc``; a finding on any variant fails CI.
 """
@@ -77,6 +80,23 @@ def variant_specs() -> Iterator[tuple[str, object]]:
                                            link_kernel="fused")
 
 
+# variants whose metrics-bus twin ("<name>+metrics") joins the audit: the
+# tap-carrying lowerings are distinct programs and must clear the same six
+# jaxpr checks; metrics-off programs staying bit-identical is pinned by
+# tests/test_metrics.py, not here
+METRICS_TWINS = ("fl/vmap", "sl/scan", "sl/vmap", "sl/shard_map",
+                 "sl/vmap+population", "sl/vmap+link_fused",
+                 "mc/sl/vmap+population")
+
+
+def _metrics_obs():
+    """The audit's metrics-on ObsConfig: full default tap set, no sink —
+    ``enabled=False`` keeps the sweep free of run dirs."""
+    from ..obs import ObsConfig
+    from ..obs.metrics import MetricsConfig
+    return ObsConfig(enabled=False, metrics=MetricsConfig())
+
+
 def mc_specs() -> Iterator[tuple[str, object]]:
     """Variants whose Monte-Carlo vmap rollout is audited too."""
     from ..sim import AvailabilityParams, ChannelParams, ScenarioSpec
@@ -98,10 +118,16 @@ def compiled_variants(*, mc: bool = True, match: Optional[str] = None
     for name, spec in variant_specs():
         if match is None or match in name:
             yield name, compile_experiment(spec), False
+        twin = f"{name}+metrics"
+        if name in METRICS_TWINS and (match is None or match in twin):
+            yield twin, compile_experiment(spec, obs=_metrics_obs()), False
     if mc:
         for name, spec in mc_specs():
             if match is None or match in name:
                 yield name, compile_experiment(spec), True
+            twin = f"{name}+metrics"
+            if name in METRICS_TWINS and (match is None or match in twin):
+                yield twin, compile_experiment(spec, obs=_metrics_obs()), True
 
 
 def audit_all(*, mc: bool = True):

@@ -47,6 +47,8 @@ from ..kernels.dispatch import (ATTN_IMPLS, LINK_KERNELS, resolve_attn_impl,
                                 resolve_link_kernel)
 from ..models.cnn import CNN_BUILDERS, cross_entropy_loss
 from ..obs import NULL_OBS, Obs
+from ..obs.metrics import (NonfiniteError, engine_tap_names,
+                           split_step_tap_names, summarize_round_metrics)
 from ..optim import adamw, init_stacked
 from ..sim.channel import deterministic_rate_bps, sample_rates_bps
 from ..sim.mission import MissionTimeline, rollout_mission
@@ -87,9 +89,16 @@ class Plan:
                  flops: dict, edges, consts, engine_fns,
                  timeline: Optional[MissionTimeline] = None,
                  serve_dist_m=None, rate_nominal=None, prof_consts=None,
-                 obs: Optional[Obs] = None):
+                 obs: Optional[Obs] = None, metrics=None,
+                 graph_taps: tuple = ()):
         self.spec = spec
         self.mesh = mesh
+        # metrics bus (repro.obs.metrics): the MetricsConfig the plan was
+        # compiled with (None = off) and the in-graph tap channels its
+        # engine rounds emit — with any graph taps the round closures
+        # return (state, losses, taps) instead of (state, losses)
+        self.metrics_config = metrics
+        self.graph_taps = tuple(graph_taps)
         # telemetry facade (repro.obs): the shared disabled instance unless
         # compile_experiment was handed an ObsConfig — disabled, every
         # hot-path touch is a branch + no-op call
@@ -269,11 +278,18 @@ class Plan:
                     batches = self.round_batches(state, cohort=cohort)
                 mask = self._round_mask(state, cohort=cohort)
             with obs.span("round/execute", round=r) as sp:
-                state.engine_state, losses = self._run(state.engine_state,
-                                                       batches, mask)
-                losses = sp.fence(losses)
+                out = self._run(state.engine_state, batches, mask)
+                if self.graph_taps:
+                    # taps ride the SAME device->host pull as the losses:
+                    # one fence for the whole round output
+                    state.engine_state, losses, taps = out
+                    losses, taps = sp.fence((losses, taps))
+                else:
+                    state.engine_state, losses = out
+                    losses = sp.fence(losses)
+                    taps = None
             rec = self._assemble_record(state, losses, mask, cohort,
-                                        with_eval=with_eval)
+                                        taps=taps, with_eval=with_eval)
             if obs:
                 n = self.spec.clients.num_clients
                 obs.gauge(r, engine_state=state.engine_state,
@@ -282,14 +298,19 @@ class Plan:
                           cohort=len(rec.cohort_pids),
                           link_bytes=rec.link_bytes)
                 obs.record(rec)
+                if rec.metrics:
+                    obs.event("metrics", round=r, engine=self.engine_label,
+                              **rec.metrics)
         obs.round_finished(r)
         state.round += 1
         return state, rec
 
     def _assemble_record(self, state: PlanState, losses, mask, cohort, *,
-                         with_eval: bool) -> RoundRecord:
+                         with_eval: bool, taps=None) -> RoundRecord:
         """Host-side accounting of one executed round: loss extraction,
-        optional held-out eval, and the analytic energy/link bill."""
+        optional held-out eval, the analytic energy/link bill, and — when
+        the plan carries a MetricsConfig — the metrics-bus summary (with
+        the ``on_nonfinite='raise'`` health policy applied)."""
         obs = self.obs
         n = self.spec.clients.num_clients
         steps = self.spec.local_steps
@@ -330,6 +351,20 @@ class Plan:
             l_time, l_energy = self._link_time, self._link_energy
             if ratio is not None:
                 l_time, l_energy = l_time * ratio, l_energy * ratio
+            metrics = {}
+            if self.metrics_config is not None:
+                tm = ({} if taps is None
+                      else {k: np.asarray(v) for k, v in taps.items()})
+                metrics = summarize_round_metrics(
+                    self.metrics_config, tm, losses=loss_c,
+                    kind=self.spec.engine.kind, n=n, active=len(active))
+                if (self.metrics_config.on_nonfinite == "raise"
+                        and metrics.get("health/nonfinite", 0)):
+                    raise NonfiniteError(
+                        round_index=state.round,
+                        step=metrics["health/first_step"],
+                        client=metrics["health/first_client"],
+                        count=metrics["health/nonfinite"])
         if with_eval:
             with obs.span("round/eval", round=state.round):
                 state.last_metrics = self.evaluate(state)
@@ -347,14 +382,17 @@ class Plan:
             uav_energy_j=uav, active_clients=len(active),
             engine=self.engine_label,
             cohort_pids=(() if cohort is None
-                         else tuple(int(p) for p in cohort)))
+                         else tuple(int(p) for p in cohort)),
+            metrics=metrics)
 
     def raw_round(self, engine_state, batches, mask=None):
         """One engine round with NO record assembly or host synchronization:
-        ``(engine_state, losses_device_array)``. The throughput benches use
-        this to queue rounds back-to-back (jax async dispatch) and block
-        once at the end — ``run_round``'s per-round loss extraction would
-        otherwise serialize dispatch against compute."""
+        ``(engine_state, losses_device_array)`` — plus the device tap dict
+        as a third element when the plan carries in-graph metrics taps
+        (``graph_taps``). The throughput benches use this to queue rounds
+        back-to-back (jax async dispatch) and block once at the end —
+        ``run_round``'s per-round loss extraction would otherwise serialize
+        dispatch against compute."""
         return self._run(engine_state, batches, mask)
 
     def evaluate(self, state: PlanState) -> dict:
@@ -670,6 +708,16 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
     _validate(spec)
     n = spec.clients.num_clients
     mesh = _resolve_mesh(spec, mesh)
+    # metrics bus: resolve the in-graph tap channels at compile time. No
+    # MetricsConfig (the default) -> empty taps -> every round builder
+    # lowers its exact tap-free program (the bit-identity the jaxpr audit
+    # pins). ObsConfig(enabled=False, metrics=...) is honored: taps work
+    # without a sink.
+    metrics = obs.config.metrics
+    graph_taps = engine_tap_names(
+        metrics, kind=spec.engine.kind,
+        has_link=spec.link_policy.compress == "int8")
+    step_tap_names = split_step_tap_names(graph_taps)
     with obs.span("compile/data"):
         arrays = _resolve_data(spec, data)
         x_train, y_train, x_test, y_test = arrays
@@ -739,13 +787,17 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
             prog = lm_split_program(cfg, jax.random.PRNGKey(spec.seed), k,
                                     link_boundary=link.boundary(),
                                     attn_impl=resolve_attn_impl(
-                                        spec.model.attn_impl))
+                                        spec.model.attn_impl),
+                                    taps=step_tap_names)
             sample_bx = jnp.asarray(x_train[:spec.batch_size])
             sample_by = jnp.asarray(y_train[:spec.batch_size])
         with obs.span("compile/flops"):
+            # FLOPs are counted on the tap-free step twin so the hoisted
+            # energy/link constants — and every non-metrics record field —
+            # stay bitwise identical with the metrics bus on
             fl_client, fl_server, smashed_sd = count_split_step_flops(
-                prog.step, prog.params_c0, prog.params_s0, sample_bx,
-                sample_by)
+                dataclasses.replace(prog.step, taps=()), prog.params_c0,
+                prog.params_s0, sample_bx, sample_by)
         flops[k] = (fl_client, fl_server, smashed_sd)
         for cid in range(n):
             lc = client_link(cid)
@@ -756,7 +808,8 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
             link_energy[cid] = lc.step_energy_j(smashed_sd)
         with obs.span("compile/lower"):
             engine_fns = _compile_sl_stack(spec, mesh, prog,
-                                           jnp.asarray(x_test), y_test)
+                                           jnp.asarray(x_test), y_test,
+                                           taps=graph_taps)
         consts = (t_client, t_server, link_bytes, link_time, link_energy,
                   server_base_s)
         return Plan(spec, mesh=mesh, arrays=arrays, parts=parts, stages=None,
@@ -764,7 +817,8 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
                     cut_of_client=cut_of_client, flops=flops, edges=edges,
                     consts=consts, engine_fns=engine_fns, timeline=timeline,
                     serve_dist_m=serve_dist, rate_nominal=rate_nominal,
-                    prof_consts=_profile_consts(spec, fl_client), obs=obs)
+                    prof_consts=_profile_consts(spec, fl_client), obs=obs,
+                    metrics=metrics, graph_taps=graph_taps)
 
     # ---- model + params ---------------------------------------------------
     with obs.span("compile/params"):
@@ -785,7 +839,7 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
         server_base_s = FL_SERVER_AGG_S
         with obs.span("compile/lower"):
             engine_fns = _compile_fl(spec, mesh, stages, params0, x_test_j,
-                                     y_test)
+                                     y_test, taps=graph_taps)
     else:
         # cut assignment: one fraction-derived cut, or per-client adaptive
         # cuts under the (optionally mission-derived) link deadline checked
@@ -827,11 +881,12 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
             if spec.engine.client_axis == "scan":
                 engine_fns = _compile_sl_scan(spec, stages, params0,
                                               cut_of_client[0], link,
-                                              x_test_j, y_test)
+                                              x_test_j, y_test,
+                                              taps=graph_taps)
             else:
                 engine_fns = _compile_sl_fleet(spec, mesh, stages, params0,
                                                cut_of_client, link, x_test_j,
-                                               y_test)
+                                               y_test, taps=graph_taps)
 
     consts = (t_client, t_server, link_bytes, link_time, link_energy,
               server_base_s)
@@ -850,7 +905,8 @@ def _compile_plan(spec: ExperimentSpec, *, mesh, data, obs: Obs) -> Plan:
                 flops=flops, edges=edges, consts=consts,
                 engine_fns=engine_fns, timeline=timeline,
                 serve_dist_m=serve_dist, rate_nominal=rate_nominal,
-                prof_consts=_profile_consts(spec, cli_fl), obs=obs)
+                prof_consts=_profile_consts(spec, cli_fl), obs=obs,
+                metrics=metrics, graph_taps=graph_taps)
 
 
 # ---------------------------------------------------------------------------
@@ -868,26 +924,33 @@ def _sl_audit(round_fn, masked: bool) -> dict:
             "unpack_state": True, "masked": masked}
 
 
-def _mask_runner(round_fn, masked: bool, n: int, audit: dict = None):
+def _mask_runner(round_fn, masked: bool, n: int, audit: dict = None,
+                 with_taps: bool = False):
     """Uniform ``run(state, batches, mask)`` closure over a round builder
-    that takes a trailing mask only when built mask-aware."""
+    that takes a trailing mask only when built mask-aware. With
+    ``with_taps`` the round emits the metrics-bus tap dict after the
+    losses and ``run`` returns ``(state, losses, taps)``."""
     full_mask = jnp.ones(n, jnp.float32)   # hoisted: one buffer, not per round
 
     def run(engine_state, batches, mask):
         if masked:
             m = full_mask if mask is None else jnp.asarray(mask)
-            *state, losses = round_fn(*engine_state, batches, m)
+            out = round_fn(*engine_state, batches, m)
         else:
             assert mask is None, \
                 "mask fed to a mask-free engine (validated at compile)"
-            *state, losses = round_fn(*engine_state, batches)
+            out = round_fn(*engine_state, batches)
+        if with_taps:
+            *state, losses, taps = out
+            return tuple(state), losses, taps
+        *state, losses = out
         return tuple(state), losses
     if audit is not None:
         run._audit = audit
     return run
 
 
-def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
+def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test, taps=()):
     opt = adamw(spec.lr)
 
     def grad_fn(params, batch):
@@ -900,9 +963,10 @@ def _compile_fl(spec, mesh, stages, params0, x_test_j, y_test):
     if spec.engine.is_fleet:
         raw_fn = make_fleet_fl_round(grad_fn, opt, mesh=mesh,
                                      client_dropout=masked,
-                                     client_axis=spec.engine.client_axis)
+                                     client_axis=spec.engine.client_axis,
+                                     taps=taps)
     else:
-        raw_fn = make_fl_round(grad_fn, opt, client_axis="scan")
+        raw_fn = make_fl_round(grad_fn, opt, client_axis="scan", taps=taps)
     round_fn = jax.jit(raw_fn, donate_argnums=(0,))
 
     def init_state():
@@ -951,7 +1015,7 @@ def _eval_prefix(client_stack, dropout: bool):
     return jax.tree_util.tree_map(lambda v: v[0], client_stack)
 
 
-def _split_step(stages, params0, k, link):
+def _split_step(stages, params0, k, link, step_taps=()):
     cs, cp = list(stages[:k]), list(params0[:k])
     ss, sp = list(stages[k:]), list(params0[k:])
     step = SplitStep(
@@ -959,18 +1023,22 @@ def _split_step(stages, params0, k, link):
         server_loss=lambda ps, sm, yy: (
             cross_entropy_loss(apply_stages(ss, ps, sm), yy), {}),
         link_constraint=link.boundary(),
+        taps=step_taps,
     )
     return cs, cp, ss, sp, step
 
 
-def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test):
+def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test,
+                     taps=()):
     """Sequential Algorithm 3: one shared server model updated per client
     visit (``make_multi_client_round``), homogeneous cut."""
-    cs, cp0, ss, sp, step = _split_step(stages, params0, k, link)
+    cs, cp0, ss, sp, step = _split_step(stages, params0, k, link,
+                                        step_taps=split_step_tap_names(taps))
     opt_c, opt_s = adamw(spec.lr), adamw(spec.lr)
     n = spec.clients.num_clients
     raw_fn = make_multi_client_round(step, opt_c, opt_s,
-                                     local_rounds=spec.local_steps)
+                                     local_rounds=spec.local_steps,
+                                     taps=taps)
     round_fn = jax.jit(raw_fn, donate_argnums=(0, 1, 2, 3))
 
     def init_state():
@@ -997,12 +1065,14 @@ def _compile_sl_scan(spec, stages, params0, k, link, x_test_j, y_test):
             y_test_j)
 
     return (init_state,
-            _mask_runner(round_fn, False, n, audit=_sl_audit(round_fn, False)),
-            evaluate, _mask_runner(raw_fn, False, n), eval_acc_raw)
+            _mask_runner(round_fn, False, n, audit=_sl_audit(round_fn, False),
+                         with_taps=bool(taps)),
+            evaluate, _mask_runner(raw_fn, False, n, with_taps=bool(taps)),
+            eval_acc_raw)
 
 
 def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
-                      x_test_j, y_test):
+                      x_test_j, y_test, taps=()):
     """Parallel fleet SL (``make_fleet_sl_round``, vmap or shard_map client
     axis). Homogeneous cuts run the engine directly — one compiled round,
     no host-side bucket reassembly; heterogeneous cuts dispatch through
@@ -1030,7 +1100,9 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
 
     if len(set(cut_of_client)) == 1:
         k = cut_of_client[0]
-        cs, cp0, ss, sp, step = _split_step(stages, params0, k, link)
+        cs, cp0, ss, sp, step = _split_step(
+            stages, params0, k, link,
+            step_taps=split_step_tap_names(taps))
         sps_specs = (server_pspecs_fn(sp, mesh)
                      if server_pspecs_fn is not None else None)
         raw_fn = make_fleet_sl_round(step, opt_c, opt_s,
@@ -1040,7 +1112,7 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
                                      client_axis=client_axis,
                                      client_tier="shared" if shared
                                      else "stacked",
-                                     server_pspecs=sps_specs)
+                                     server_pspecs=sps_specs, taps=taps)
         round_fn = jax.jit(raw_fn, donate_argnums=(0, 1, 2, 3))
 
         def init_state():
@@ -1086,20 +1158,24 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
 
         return (init_state,
                 _mask_runner(round_fn, dropout, n,
-                             audit=_sl_audit(round_fn, dropout)),
-                evaluate, _mask_runner(raw_fn, dropout, n), eval_acc_raw)
+                             audit=_sl_audit(round_fn, dropout),
+                             with_taps=bool(taps)),
+                evaluate, _mask_runner(raw_fn, dropout, n,
+                                       with_taps=bool(taps)),
+                eval_acc_raw)
 
     def build_program(k):
         return cnn_split_program(stages, params0, k,
                                  loss_fn=cross_entropy_loss,
-                                 link_boundary=link.boundary())
+                                 link_boundary=link.boundary(),
+                                 taps=split_step_tap_names(taps))
 
     fleet = HeteroFleet(build_program, cut_of_client, opt_c, opt_s,
                         local_rounds=spec.local_steps, mesh=mesh,
                         client_dropout=dropout,
                         server_reduce=spec.engine.server_reduce,
                         client_axis=client_axis,
-                        server_pspecs_fn=server_pspecs_fn)
+                        server_pspecs_fn=server_pspecs_fn, taps=taps)
 
     bucket_eval = []
     for bucket in fleet.buckets:
@@ -1135,7 +1211,7 @@ def _compile_sl_fleet(spec, mesh, stages, params0, cut_of_client, link,
     return init_state, run, evaluate, None, None
 
 
-def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
+def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test, taps=()):
     """Transformer-family lowering: the ``lm_split_program`` step through
     the sequential (scan) or fleet (vmap/shard_map) SL engines — same
     wiring as the CNN paths, token logits evaluated over all positions."""
@@ -1148,7 +1224,8 @@ def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
     vocab = spec.model.arch.vocab
     if spec.engine.client_axis == "scan":
         raw_fn = make_multi_client_round(prog.step, opt_c, opt_s,
-                                         local_rounds=spec.local_steps)
+                                         local_rounds=spec.local_steps,
+                                         taps=taps)
     else:
         raw_fn = make_fleet_sl_round(prog.step, opt_c, opt_s,
                                      local_rounds=spec.local_steps, mesh=mesh,
@@ -1156,7 +1233,7 @@ def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
                                      client_dropout=masked,
                                      client_axis=spec.engine.client_axis,
                                      client_tier="shared" if shared
-                                     else "stacked")
+                                     else "stacked", taps=taps)
     round_fn = jax.jit(raw_fn, donate_argnums=(0, 1, 2, 3))
 
     def init_state():
@@ -1192,5 +1269,7 @@ def _compile_sl_stack(spec, mesh, prog, x_test_j, y_test):
 
     return (init_state,
             _mask_runner(round_fn, masked, n,
-                         audit=_sl_audit(round_fn, masked)),
-            evaluate, _mask_runner(raw_fn, masked, n), eval_acc_raw)
+                         audit=_sl_audit(round_fn, masked),
+                         with_taps=bool(taps)),
+            evaluate, _mask_runner(raw_fn, masked, n, with_taps=bool(taps)),
+            eval_acc_raw)

@@ -32,6 +32,11 @@ class RoundRecord:
     # per-client quantity this round belonged to population client
     # cohort_pids[i].
     cohort_pids: tuple = ()
+    # metrics-bus summary of the round (repro.obs.metrics): a flat
+    # JSON-able scalar dict keyed "<channel>/<stat>" ("grad_norm_client/
+    # mean", "health/nonfinite", ...). Empty unless the plan was compiled
+    # with ObsConfig(metrics=MetricsConfig(...)).
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         """JSON-serializable dict of the record. Field values can arrive as
@@ -45,9 +50,12 @@ class RoundRecord:
 
 def _jsonable(v):
     """Python-native scalar(s) for one record field: numpy/jax scalars via
-    ``item()``, tuples element-wise (``cohort_pids``)."""
+    ``item()``, tuples element-wise (``cohort_pids``), dicts value-wise
+    (``metrics``)."""
     if isinstance(v, tuple):
         return tuple(_jsonable(x) for x in v)
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
     if hasattr(v, "item"):
         return v.item()
     return v

@@ -122,10 +122,15 @@ class SplitStep:
     client_head_loss: Optional[Callable] = None
     link_constraint: Optional[Callable] = None  # smashed -> smashed (sharding)
     variant: str = "vanilla"  # "vanilla" | "ushaped"
+    # metrics-bus taps computed inside the step (they need the smashed
+    # tensor): subset of {"smashed_mean","smashed_std","smashed_absmax",
+    # "quant_error"}, carried out through aux["taps"]. Empty = the exact
+    # tap-free trace.
+    taps: tuple = ()
 
     def loss_fn(self, params_c, params_s, batch):
         inputs, targets = batch["inputs"], batch["targets"]
-        smashed = self.client_fwd(params_c, inputs)
+        raw_smashed = smashed = self.client_fwd(params_c, inputs)
         if self.link_constraint is not None:
             smashed = self.link_constraint(smashed)
         if self.variant == "vanilla":
@@ -140,6 +145,9 @@ class SplitStep:
         aux = dict(aux)
         aux["smashed_elems"] = jnp.asarray(
             sum(x.size for x in jax.tree_util.tree_leaves(smashed)), jnp.float32)
+        if self.taps:
+            from ..obs.metrics import smashed_tap_values
+            aux["taps"] = smashed_tap_values(self.taps, raw_smashed, smashed)
         return loss, aux
 
     def grads(self, params_c, params_s, batch):
@@ -174,7 +182,8 @@ def make_split_train_step(step: SplitStep, opt_c, opt_s):
 # FedAvg (Alg. 3 line 19) happens inside the compiled program — no host
 # round-trips between steps. Callers jit them with donated state buffers.
 
-def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int):
+def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
+                            taps: tuple = ()):
     """One global round of Algorithm 3 over an explicit client axis.
 
     params_c carries a leading client axis; the single server model is
@@ -186,7 +195,14 @@ def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int)
 
     ``batches`` is a pytree with leading (clients, local_rounds) axes;
     returned losses have shape (local_rounds, clients).
+
+    ``taps`` enables the metrics bus (``repro.obs.metrics``): the round
+    additionally returns a dict of float32 tap stacks, every leaf
+    (local_rounds, clients) — the server updates once per client visit
+    here, so even the server-tier taps are per-client. Empty taps lowers
+    the exact tap-free program (the conditionals below are trace-time).
     """
+    from ..obs.metrics import step_taps
     from ..optim.optimizers import apply_updates
     from .fedavg import fedavg_stack
 
@@ -198,6 +214,10 @@ def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int)
         params_c = apply_updates(params_c, up_c)
         up_s, os_ = opt_s.update(g_s, os_, params_s)
         params_s = apply_updates(params_s, up_s)
+        if taps:
+            t = step_taps(taps, loss=loss, aux_taps=aux.get("taps"),
+                          g_c=g_c, g_s=g_s, up_c=up_c, up_s=up_s)
+            return (params_s, os_), (params_c, oc, loss, t)
         return (params_s, os_), (params_c, oc, loss)
 
     def global_round(params_c_stack, params_s, oc_stack, os_, batches):
@@ -207,23 +227,32 @@ def make_multi_client_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int)
 
         def round_body(carry, batch_r):
             params_c_stack, oc_stack, params_s, os_ = carry
-            (params_s, os_), (params_c_stack, oc_stack, loss_c) = jax.lax.scan(
+            (params_s, os_), stacked = jax.lax.scan(
                 one_client_update, (params_s, os_),
                 (params_c_stack, oc_stack, batch_r))
-            return (params_c_stack, oc_stack, params_s, os_), loss_c
+            if taps:
+                params_c_stack, oc_stack, loss_c, t = stacked
+                out = (loss_c, t)
+            else:
+                params_c_stack, oc_stack, loss_c = stacked
+                out = loss_c
+            return (params_c_stack, oc_stack, params_s, os_), out
 
         carry = (params_c_stack, oc_stack, params_s, os_)
-        carry, losses = jax.lax.scan(round_body, carry, batches_rm)
+        carry, out = jax.lax.scan(round_body, carry, batches_rm)
         params_c_stack, oc_stack, params_s, os_ = carry
         # FedAvg of client sub-models (Alg. 3 line 19)
         params_c_stack = fedavg_stack(params_c_stack)
-        return params_c_stack, params_s, oc_stack, os_, losses
+        if taps:
+            losses, tap_stack = out
+            return params_c_stack, params_s, oc_stack, os_, losses, tap_stack
+        return params_c_stack, params_s, oc_stack, os_, out
 
     return global_round
 
 
 def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan",
-                  aggregate: bool = True):
+                  aggregate: bool = True, taps: tuple = ()):
     """One global round of the FL baseline over an explicit client axis.
 
     ``grad_fn(params, batch) -> (loss, grads)`` on the full model. Each
@@ -257,7 +286,14 @@ def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan",
     cohort-gathered batch rows sampled from a population of M >> K clients
     (``ClientSpec.population``) runs the identical program with engine
     state O(1) in M (just the global params).
+
+    ``taps`` enables the metrics bus (``repro.obs.metrics``): the round
+    additionally returns a dict of float32 tap stacks, every leaf laid out
+    (clients, local_steps) like the losses. FL has one tier, so only the
+    client-side channels (grad/update norm, nonfinite) apply. Empty taps
+    lowers the exact tap-free program (the conditionals are trace-time).
     """
+    from ..obs.metrics import step_taps
     from ..optim.optimizers import apply_updates
     from .fedavg import fedavg_mean
 
@@ -268,23 +304,29 @@ def make_fl_round(grad_fn: Callable, opt, *, client_axis: str = "scan",
             params, opt_state = carry
             loss, grads = grad_fn(params, batch)
             updates, opt_state = opt.update(grads, opt_state, params)
-            return (apply_updates(params, updates), opt_state), loss
+            new_carry = (apply_updates(params, updates), opt_state)
+            if taps:
+                t = step_taps(taps, loss=loss, g_c=grads, up_c=updates)
+                return new_carry, (loss, t)
+            return new_carry, loss
 
         def per_client(batch_c):
-            (params, _), losses = jax.lax.scan(
+            (params, _), out = jax.lax.scan(
                 local_step, (global_params, opt_state0), batch_c)
-            return params, losses
+            return params, out
 
         if client_axis == "vmap":
-            client_stack, losses = jax.vmap(per_client)(batches)
+            client_stack, out = jax.vmap(per_client)(batches)
         elif client_axis == "scan":
-            _, (client_stack, losses) = jax.lax.scan(
+            _, (client_stack, out) = jax.lax.scan(
                 lambda _, b: (None, per_client(b)), None, batches)
         else:
             raise ValueError(f"client_axis must be 'scan' or 'vmap', "
                              f"got {client_axis!r}")
-        if not aggregate:
-            return client_stack, losses
-        return fedavg_mean(client_stack), losses
+        losses, tap_stack = out if taps else (out, None)
+        agg = client_stack if not aggregate else fedavg_mean(client_stack)
+        if taps:
+            return agg, losses, tap_stack
+        return agg, losses
 
     return global_round

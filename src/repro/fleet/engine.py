@@ -67,6 +67,7 @@ from ..core.fedavg import (fedavg_mean, fedavg_mean_masked, fedavg_pmean,
                            fedavg_pmean_stack_masked, fedavg_stack,
                            fedavg_stack_masked)
 from ..core.split import SplitStep, make_fl_round
+from ..obs.metrics import tree_nonfinite, tree_norm
 from ..optim.optimizers import apply_updates
 
 # Documented loosened tolerance for vmapped/sharded vs sequential rounds
@@ -194,10 +195,13 @@ def _check_client_axis(client_axis: str) -> None:
 
 def make_fleet_fl_round(grad_fn: Callable, opt, *, mesh=None,
                         client_dropout: bool = False,
-                        client_axis: str = "vmap"):
+                        client_axis: str = "vmap", taps: tuple = ()):
     """FL baseline round with the client axis batched and (optionally)
     sharded over ``data``. Same signature/returns as ``make_fl_round``:
-    ``f(global_params, batches) -> (new_global_params, losses[C, S])``.
+    ``f(global_params, batches) -> (new_global_params, losses[C, S])``;
+    with ``taps`` the round additionally returns the (clients, steps)
+    metrics-bus tap stacks (see ``make_fl_round``), sharded like the
+    losses.
 
     ``client_axis='vmap'`` leaves layout to GSPMD via sharding constraints
     (``mesh`` optional); ``client_axis='shard_map'`` runs the per-client
@@ -214,46 +218,50 @@ def make_fleet_fl_round(grad_fn: Callable, opt, *, mesh=None,
     """
     _check_client_axis(client_axis)
     vmapped = make_fl_round(grad_fn, opt, client_axis="vmap",
-                            aggregate=False)
+                            aggregate=False, taps=taps)
 
     if client_axis == "shard_map":
         mesh = _resolve_shard_map_mesh(mesh)
         spec_c = P(CLIENT_AXIS_NAME)
+        # every FL tap leaf is (clients, steps): sharded like the losses
+        tap_specs = ({name: spec_c for name in taps},) if taps else ()
 
         if not client_dropout:
             def body(global_params, batches):
-                client_stack, losses = vmapped(global_params, batches)
-                return fedavg_pmean(client_stack, CLIENT_AXIS_NAME), losses
+                out = vmapped(global_params, batches)
+                agg = fedavg_pmean(out[0], CLIENT_AXIS_NAME)
+                return (agg,) + out[1:]
 
             return _client_shard_map(body, mesh, in_specs=(P(), spec_c),
-                                     out_specs=(P(), spec_c))
+                                     out_specs=(P(), spec_c) + tap_specs)
 
         def body_masked(global_params, batches, client_mask):
-            client_stack, losses = vmapped(global_params, batches)
-            new_params = fedavg_pmean_masked(client_stack, client_mask,
+            out = vmapped(global_params, batches)
+            new_params = fedavg_pmean_masked(out[0], client_mask,
                                              global_params, CLIENT_AXIS_NAME)
-            return new_params, losses
+            return (new_params,) + out[1:]
 
         return _client_shard_map(body_masked, mesh,
                                  in_specs=(P(), spec_c, spec_c),
-                                 out_specs=(P(), spec_c))
+                                 out_specs=(P(), spec_c) + tap_specs)
 
     if not client_dropout:
         def global_round(global_params, batches):
             batches = _constrain(batches, mesh)
-            client_stack, losses = vmapped(global_params, batches)
+            out = vmapped(global_params, batches)
             # FedAvg reduces the client axis (an all-reduce over `data`
-            # when sharded); losses keep the client-sharded layout.
-            return fedavg_mean(client_stack), _constrain(losses, mesh)
+            # when sharded); losses/taps keep the client-sharded layout.
+            return (fedavg_mean(out[0]),) + tuple(
+                _constrain(o, mesh) for o in out[1:])
 
         return global_round
 
     def global_round_masked(global_params, batches, client_mask):
         batches = _constrain(batches, mesh)
-        client_stack, losses = vmapped(global_params, batches)
-        new_params = fedavg_mean_masked(client_stack, client_mask,
+        out = vmapped(global_params, batches)
+        new_params = fedavg_mean_masked(out[0], client_mask,
                                         global_params)
-        return new_params, _constrain(losses, mesh)
+        return (new_params,) + tuple(_constrain(o, mesh) for o in out[1:])
 
     return global_round_masked
 
@@ -266,7 +274,7 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
                         mesh=None, server_reduce: str = "mean",
                         client_dropout: bool = False,
                         client_axis: str = "vmap", server_pspecs=None,
-                        client_tier: str = "stacked"):
+                        client_tier: str = "stacked", taps: tuple = ()):
     """One global round of *parallel* split learning over a sharded fleet.
 
     Per local step: every client's prefix runs fwd/bwd batched (vmap over
@@ -327,6 +335,18 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
                   count) exactly like the server's, so every shard applies
                   the identical update. State is O(1) in both the cohort
                   and the population.
+
+    ``taps`` enables the metrics bus (``repro.obs.metrics``): the round
+    additionally returns a dict of float32 tap stacks riding the same
+    local-step scan as the losses. Per-slot channels (grad norms,
+    nonfinite, the SplitStep's smashed/quant taps) come back
+    (local_rounds, clients) in the loss layout; one-update-per-step
+    channels are (local_rounds,) — ``update_norm_server`` always, and
+    ``update_norm_client`` too under the shared tier (EPSL takes one
+    client update per step). Taps report the RAW per-slot computation:
+    masked stragglers still execute, their rows are excluded from state
+    but visible on the bus (``mask`` tallies let consumers filter). Empty
+    taps lowers the exact tap-free program.
     """
     if server_reduce not in ("mean", "sum"):
         raise ValueError(server_reduce)
@@ -363,7 +383,9 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
         any_active = None if mask is None else allreduce_sum(mask.sum()) > 0
 
         def per_client_grads(pc, batch, ps):
-            loss, _aux, g_c, g_s = step.grads(pc, ps, batch)
+            loss, aux, g_c, g_s = step.grads(pc, ps, batch)
+            if taps:
+                return loss, aux.get("taps", {}), g_c, g_s
             return loss, g_c, g_s
 
         def masked_rows(new, old):
@@ -375,9 +397,14 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
 
         def round_body(carry, batch_r):
             params_c_stack, oc_stack, params_s, os_ = carry
-            losses, g_c_stack, g_s_stack = jax.vmap(
+            grads_out = jax.vmap(
                 per_client_grads, in_axes=(0, 0, None))(
                     params_c_stack, batch_r, params_s)
+            if taps:
+                losses, aux_t, g_c_stack, g_s_stack = grads_out
+            else:
+                losses, g_c_stack, g_s_stack = grads_out
+                aux_t = {}
             up_c, oc_new = jax.vmap(opt_c.update)(
                 g_c_stack, oc_stack, params_c_stack)
             pc_new = apply_updates(params_c_stack, up_c)
@@ -411,10 +438,35 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
                     lambda n, o: jnp.where(any_active, n, o), ps_new, params_s)
                 os_new = jax.tree_util.tree_map(
                     lambda n, o: jnp.where(any_active, n, o), os_new, os_)
-            return (params_c_stack, oc_stack, ps_new, os_new), losses
+            if taps:
+                t = dict(aux_t)
+                if "grad_norm_client" in taps:
+                    t["grad_norm_client"] = jax.vmap(tree_norm)(g_c_stack)
+                if "grad_norm_server" in taps:
+                    t["grad_norm_server"] = jax.vmap(tree_norm)(g_s_stack)
+                if "update_norm_client" in taps:
+                    t["update_norm_client"] = jax.vmap(tree_norm)(up_c)
+                if "update_norm_server" in taps:
+                    t["update_norm_server"] = tree_norm(up_s)
+                if "nonfinite" in taps:
+                    # tapped norms double as the guard (NaN/inf propagate
+                    # through the L2 reduction); untapped tiers pay the
+                    # elementwise pass
+                    bad = (~jnp.isfinite(losses)).astype(jnp.float32)
+                    for k, stk in (("grad_norm_client", g_c_stack),
+                                   ("grad_norm_server", g_s_stack)):
+                        bad = jnp.maximum(
+                            bad,
+                            (~jnp.isfinite(t[k])).astype(jnp.float32)
+                            if k in t else jax.vmap(tree_nonfinite)(stk))
+                    t["nonfinite"] = bad
+                out = (losses, t)
+            else:
+                out = losses
+            return (params_c_stack, oc_stack, ps_new, os_new), out
 
         carry = (params_c_stack, oc_stack, params_s, os_)
-        carry, losses = jax.lax.scan(round_body, carry, batches_rm)
+        carry, out = jax.lax.scan(round_body, carry, batches_rm)
         params_c_stack, oc_stack, params_s, os_ = carry
         if axis is not None:
             agg = (fedavg_pmean_stack(params_c_stack, axis) if mask is None
@@ -423,7 +475,11 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
             agg = (fedavg_stack(params_c_stack) if mask is None
                    else fedavg_stack_masked(params_c_stack, mask))
         params_c_stack = _constrain(agg, constrain_mesh)
-        return params_c_stack, params_s, oc_stack, os_, losses
+        if taps:
+            losses, tap_stack = out
+            return (params_c_stack, params_s, oc_stack, os_, losses,
+                    tap_stack)
+        return params_c_stack, params_s, oc_stack, os_, out
 
     def _run_round_shared(params_c, params_s, oc, os_, batches, mask):
         batches = _constrain(batches, constrain_mesh)
@@ -436,7 +492,9 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
         any_active = None if mask is None else allreduce_sum(mask.sum()) > 0
 
         def per_client_grads(batch, pc, ps):
-            loss, _aux, g_c, g_s = step.grads(pc, ps, batch)
+            loss, aux, g_c, g_s = step.grads(pc, ps, batch)
+            if taps:
+                return loss, aux.get("taps", {}), g_c, g_s
             return loss, g_c, g_s
 
         def reduce_g(g, reduce):
@@ -463,9 +521,14 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
 
         def round_body(carry, batch_r):
             params_c, oc, params_s, os_ = carry
-            losses, g_c_stack, g_s_stack = jax.vmap(
+            grads_out = jax.vmap(
                 per_client_grads, in_axes=(0, None, None))(
                     batch_r, params_c, params_s)
+            if taps:
+                losses, aux_t, g_c_stack, g_s_stack = grads_out
+            else:
+                losses, g_c_stack, g_s_stack = grads_out
+                aux_t = {}
             # the shared client tier updates like the server: one step on
             # the masked cohort-MEAN prefix gradient (EPSL)
             g_c = jax.tree_util.tree_map(lambda g: reduce_g(g, "mean"),
@@ -479,12 +542,39 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
             if mask is not None:
                 pc_new, oc_new = guard(pc_new, params_c), guard(oc_new, oc)
                 ps_new, os_new = guard(ps_new, params_s), guard(os_new, os_)
-            return (pc_new, oc_new, ps_new, os_new), losses
+            if taps:
+                t = dict(aux_t)
+                if "grad_norm_client" in taps:
+                    t["grad_norm_client"] = jax.vmap(tree_norm)(g_c_stack)
+                if "grad_norm_server" in taps:
+                    t["grad_norm_server"] = jax.vmap(tree_norm)(g_s_stack)
+                # EPSL: ONE shared client update per step -> scalar channel
+                if "update_norm_client" in taps:
+                    t["update_norm_client"] = tree_norm(up_c)
+                if "update_norm_server" in taps:
+                    t["update_norm_server"] = tree_norm(up_s)
+                if "nonfinite" in taps:
+                    # tapped norms double as the guard, as above
+                    bad = (~jnp.isfinite(losses)).astype(jnp.float32)
+                    for k, stk in (("grad_norm_client", g_c_stack),
+                                   ("grad_norm_server", g_s_stack)):
+                        bad = jnp.maximum(
+                            bad,
+                            (~jnp.isfinite(t[k])).astype(jnp.float32)
+                            if k in t else jax.vmap(tree_nonfinite)(stk))
+                    t["nonfinite"] = bad
+                out = (losses, t)
+            else:
+                out = losses
+            return (pc_new, oc_new, ps_new, os_new), out
 
         carry = (params_c, oc, params_s, os_)
-        carry, losses = jax.lax.scan(round_body, carry, batches_rm)
+        carry, out = jax.lax.scan(round_body, carry, batches_rm)
         params_c, oc, params_s, os_ = carry
-        return params_c, params_s, oc, os_, losses
+        if taps:
+            losses, tap_stack = out
+            return params_c, params_s, oc, os_, losses, tap_stack
+        return params_c, params_s, oc, os_, out
 
     run_body = _run_round_shared if client_tier == "shared" else _run_round
 
@@ -495,6 +585,17 @@ def make_fleet_sl_round(step: SplitStep, opt_c, opt_s, *, local_rounds: int,
         state_c = P() if client_tier == "shared" else spec_c
         # losses carry the client axis SECOND: (local_rounds, clients)
         out_specs = (state_c, P(), state_c, P(), P(None, CLIENT_AXIS_NAME))
+        if taps:
+            # per-slot tap channels share the loss layout; one-update-per-
+            # step channels are replicated (the update is all-reduced
+            # identically on every shard)
+            scalar = {"update_norm_server"}
+            if client_tier == "shared":
+                scalar.add("update_norm_client")
+            out_specs = out_specs + ({
+                name: (P(None) if name in scalar
+                       else P(None, CLIENT_AXIS_NAME))
+                for name in taps},)
 
         if client_dropout:
             def body_masked(params_c_stack, params_s, oc_stack, os_, batches,

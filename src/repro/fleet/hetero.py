@@ -114,9 +114,11 @@ class SplitProgram:
 
 def cnn_split_program(stages: Sequence[Stage], params, k: int, *,
                       loss_fn: Callable,
-                      link_boundary: Optional[Callable] = None) -> SplitProgram:
+                      link_boundary: Optional[Callable] = None,
+                      taps: tuple = ()) -> SplitProgram:
     """Split a CNN stage list at stage index ``k``. ``loss_fn(logits,
-    targets) -> scalar`` closes the server side."""
+    targets) -> scalar`` closes the server side. ``taps`` are the
+    step-level metrics-bus channels (``SplitStep.taps``)."""
     if not 1 <= k <= len(stages) - 1:
         raise ValueError(f"cut {k} outside (0, {len(stages)})")
     cs, cp = list(stages[:k]), list(params[:k])
@@ -126,6 +128,7 @@ def cnn_split_program(stages: Sequence[Stage], params, k: int, *,
         server_loss=lambda ps, sm, yy: (loss_fn(apply_stages(ss, ps, sm), yy),
                                         {}),
         link_constraint=link_boundary,
+        taps=taps,
     )
     return SplitProgram(step=step, params_c0=cp, params_s0=sp, cut_index=k)
 
@@ -202,7 +205,8 @@ class LMSplitProgram:
 
 def lm_split_program(cfg, key, k: int, *,
                      link_boundary: Optional[Callable] = None,
-                     window="cfg", attn_impl: str = "xla") -> LMSplitProgram:
+                     window="cfg", attn_impl: str = "xla",
+                     taps: tuple = ()) -> LMSplitProgram:
     """Split a next-token LM built on a real transformer ``ArchConfig``
     stack (``models.transformer.group_apply`` blocks) at layer ``k``.
 
@@ -247,7 +251,7 @@ def lm_split_program(cfg, key, k: int, *,
         return jnp.mean(nll), {}
 
     step = SplitStep(client_fwd=client_fwd, server_loss=server_loss,
-                     link_constraint=link_boundary)
+                     link_constraint=link_boundary, taps=taps)
     return LMSplitProgram(step=step,
                           params_c0={"embed": embed, "blocks": blocks_c},
                           params_s0={"blocks": blocks_s, "head": head},
@@ -256,7 +260,8 @@ def lm_split_program(cfg, key, k: int, *,
 
 def stack_split_program(stacked_params, k: int, *, block_apply: Callable,
                         loss_fn: Callable,
-                        link_boundary: Optional[Callable] = None) -> SplitProgram:
+                        link_boundary: Optional[Callable] = None,
+                        taps: tuple = ()) -> SplitProgram:
     """Split a stacked-block (scan-over-layers) model at layer ``k``.
 
     ``block_apply(block_params, h) -> h`` applies ONE block (params without
@@ -277,6 +282,7 @@ def stack_split_program(stacked_params, k: int, *, block_apply: Callable,
         client_fwd=run_blocks,
         server_loss=lambda ps, sm, yy: (loss_fn(run_blocks(ps, sm), yy), {}),
         link_constraint=link_boundary,
+        taps=taps,
     )
     return SplitProgram(step=step, params_c0=params_c, params_s0=params_s,
                         cut_index=k)
@@ -320,18 +326,25 @@ class HeteroFleet:
                  cut_indices: Sequence[int], opt_c, opt_s, *,
                  local_rounds: int, mesh=None, client_dropout: bool = False,
                  server_reduce: str = "mean", client_axis: str = "vmap",
-                 server_pspecs_fn: Optional[Callable] = None):
+                 server_pspecs_fn: Optional[Callable] = None,
+                 taps: tuple = ()):
         """``client_axis`` ('vmap' | 'shard_map') and ``server_pspecs_fn``
         (``lambda params_s, mesh: pspecs`` — e.g. wrapping
         ``launch.steps.fleet_server_pspecs``) pass through to each bucket's
         ``make_fleet_sl_round``; a bucket whose size does not divide the
         mesh's data axis falls back to its unsharded (single-device for
-        shard_map) engine rather than padding."""
+        shard_map) engine rather than padding. ``taps`` (engine-level
+        metrics-bus channels) also pass through: ``run_round_on`` then
+        reassembles each bucket's tap stacks into global
+        (local_rounds, num_clients) arrays — a bucket's one-update-per-step
+        server channel is broadcast to its client columns, since each cut
+        bucket owns its own server suffix."""
         self.buckets = bucket_by_cut(cut_indices)
         self.local_rounds = local_rounds
         self.num_clients = len(cut_indices)
         self.client_dropout = client_dropout
         self.client_axis = client_axis
+        self.taps = tuple(taps)
         self._ids: list[np.ndarray] = []
         self._engines = []
         self._init_states = []
@@ -359,7 +372,7 @@ class HeteroFleet:
                 prog.step, opt_c, opt_s, local_rounds=local_rounds,
                 mesh=b_mesh, client_dropout=client_dropout,
                 server_reduce=server_reduce, client_axis=client_axis,
-                server_pspecs=pspecs),
+                server_pspecs=pspecs, taps=self.taps),
                 donate_argnums=(0, 1, 2, 3))
             state = (_stack_replicas(prog.params_c0, n), prog.params_s0,
                      init_stacked(opt_c, prog.params_c0, n),
@@ -405,30 +418,35 @@ class HeteroFleet:
         """(params_c_stack, params_s, oc_stack, os) of bucket ``i``."""
         return self._live_states()[i]
 
-    def run_round(self, batches, client_mask=None) -> np.ndarray:
+    def run_round(self, batches, client_mask=None):
         """One global round. ``batches`` is a pytree with leading
         (num_clients, local_rounds) axes; returns losses
-        (local_rounds, num_clients) with every client filled exactly once.
+        (local_rounds, num_clients) with every client filled exactly once —
+        plus the reassembled tap dict when the fleet was built with
+        metrics ``taps``.
 
         ``client_mask`` (global (num_clients,) 0/1 vector) drops stragglers
         for the round; requires the fleet to be built with
         ``client_dropout=True`` (the mask is sliced per bucket and fed to
         each bucket's compiled round).
         """
-        self._states, losses = self.run_round_on(self._live_states(),
-                                                 batches, client_mask)
-        return losses
+        out = self.run_round_on(self._live_states(), batches, client_mask)
+        self._states = out[0]
+        return out[1] if not self.taps else out[1:]
 
-    def run_round_on(self, states: list[tuple], batches,
-                     client_mask=None) -> tuple[list[tuple], np.ndarray]:
+    def run_round_on(self, states: list[tuple], batches, client_mask=None):
         """``run_round`` over caller-owned per-bucket states (as produced
-        by ``init_states``): returns ``(new_states, losses)``. The input
+        by ``init_states``): returns ``(new_states, losses)`` —
+        ``(new_states, losses, taps)`` when built with metrics ``taps``,
+        every tap a (local_rounds, num_clients) float32 array. The input
         state buffers are donated to the compiled rounds — reuse the
         returned list, never the argument."""
         if client_mask is not None and not self.client_dropout:
             raise ValueError("client_mask needs HeteroFleet("
                              "client_dropout=True)")
         losses = np.zeros((self.local_rounds, self.num_clients), np.float32)
+        tap_out = {name: np.zeros((self.local_rounds, self.num_clients),
+                                  np.float32) for name in self.taps}
         new_states = list(states)
         for i, ids in enumerate(self._ids):
             sub = jax.tree_util.tree_map(
@@ -439,7 +457,17 @@ class HeteroFleet:
                 out = self._engines[i](*states[i], sub, jnp.asarray(mask))
             else:
                 out = self._engines[i](*states[i], sub)
-            *state, bucket_losses = out
+            if self.taps:
+                *state, bucket_losses, bucket_taps = out
+                for name, v in bucket_taps.items():
+                    v = np.asarray(v, np.float32)
+                    # (local_rounds,) channels = this bucket's one server
+                    # update per step, broadcast to its client columns
+                    tap_out[name][:, ids] = v if v.ndim == 2 else v[:, None]
+            else:
+                *state, bucket_losses = out
             new_states[i] = tuple(state)
             losses[:, ids] = np.asarray(bucket_losses)
+        if self.taps:
+            return new_states, losses, tap_out
         return new_states, losses

@@ -37,13 +37,15 @@ import time
 from typing import Optional, Tuple
 
 from .gauges import global_counter, host_rss_bytes, pytree_bytes
+from .metrics import MetricsConfig, NonfiniteError  # noqa: F401 (re-export)
 from .profiler import ProfilerCapture
 from .sink import JsonlSink, NullSink, json_default, new_run_id
 from .timeline import (NULL_SPAN, Timeline, fenced,  # noqa: F401 (re-export)
                        time_fenced)
 
-__all__ = ["Obs", "ObsConfig", "NULL_OBS", "pytree_bytes", "host_rss_bytes",
-           "fenced", "time_fenced", "json_default"]
+__all__ = ["Obs", "ObsConfig", "NULL_OBS", "MetricsConfig", "NonfiniteError",
+           "pytree_bytes", "host_rss_bytes", "fenced", "time_fenced",
+           "json_default"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +59,11 @@ class ObsConfig:
     # keeps the profiler off (it is never free)
     profile_rounds: Optional[Tuple[int, int]] = None
     buffer_events: int = 256         # sink flush granularity
+    # in-graph metrics bus (see ``repro.obs.metrics``): None keeps every
+    # round's lowering bit-identical to the metrics-free program.
+    # Orthogonal to ``enabled`` — ObsConfig(enabled=False,
+    # metrics=MetricsConfig()) computes RoundRecord.metrics with no sink.
+    metrics: Optional[MetricsConfig] = None
 
 
 def _git_commit() -> str:

@@ -1,0 +1,296 @@
+"""``repro.obs.metrics`` — the in-graph metrics bus every engine can carry.
+
+PR 7's telemetry fences the *host* side of a round (phase spans, RSS,
+recompiles); everything that decides accuracy-per-joule — gradient
+magnitudes per tier, smashed-activation statistics at the link, int8
+quantization error, per-client loss spread under dropout — happens inside
+the ``lax.scan`` over steps x clients and was invisible. This module adds
+an **off-by-default, fixed-shape** tap channel to the round builders:
+
+* taps are selected at COMPILE time (``compile_experiment(spec,
+  obs=ObsConfig(metrics=MetricsConfig(taps=...)))``); a plan compiled
+  without a ``MetricsConfig`` lowers to the bit-identical metrics-free
+  program (pinned by ``tests/test_metrics.py`` + the jaxpr audit);
+* enabled taps ride the round's existing scan outputs next to the loss
+  stack — ONE extra pytree in the same per-round device->host pull, zero
+  extra host syncs;
+* tap arrays are fixed-shape per round (leading step/client axes match the
+  loss layout: SL ``(local_rounds, clients)``, FL ``(clients, steps)``),
+  so they vmap through ``run_monte_carlo`` unchanged.
+
+The host side (``summarize_round_metrics``) reduces the raw tap arrays to
+the flat JSON-able scalar dict surfaced as ``RoundRecord.metrics`` and
+streamed as the sink's ``metrics`` event; the same reduction runs on a
+Monte-Carlo sweep's per-seed stacks, so seed 0 of a sweep reproduces the
+plan's own metric stream.
+
+Tap selection (``MetricsConfig.taps``) and what each lowers to:
+
+=============  =============================================================
+user tap       in-graph channel(s)
+=============  =============================================================
+grad_norms     ``grad_norm_client`` (+ ``grad_norm_server`` for SL): L2
+               norm of each tier's gradient, per (step, client slot)
+update_norms   ``update_norm_client`` / ``update_norm_server``: L2 norm of
+               the applied optimizer update (server / EPSL-shared client
+               updates are one-per-step scalars)
+smashed        ``smashed_mean`` / ``smashed_std`` / ``smashed_absmax``: the
+               raw smashed activation entering the link boundary (SL only)
+quant_error    ``quant_error``: RMS of (dequantized - raw) at the boundary
+               — only lowered when the plan has an int8 link
+loss_spread    host-side only: std of per-client losses per step, averaged
+               over the round's steps (from the loss stack already pulled)
+mask           host-side only: active-slot tally + fraction of the round's
+               client mask
+=============  =============================================================
+
+plus the training-health monitor (``nan_guard=True``): a per-(step, client)
+``nonfinite`` flag — loss or either tier's gradient went NaN/inf — that the
+host localizes to the FIRST bad (round, step, client slot).
+``on_nonfinite="record"`` books it into ``RoundRecord.metrics`` under
+``health/*``; ``"raise"`` raises :class:`NonfiniteError` carrying the
+coordinate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MetricsConfig", "NonfiniteError", "TAPS", "engine_tap_names",
+           "split_step_tap_names", "step_taps", "tree_norm", "tree_nonfinite",
+           "smashed_tap_values", "summarize_round_metrics",
+           "first_nonfinite_coord"]
+
+# the user-facing tap vocabulary (MetricsConfig.taps)
+TAPS = ("grad_norms", "update_norms", "smashed", "quant_error",
+        "loss_spread", "mask")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsConfig:
+    """Compile-time tap selection for the in-graph metrics bus.
+
+    ``taps`` picks from :data:`TAPS`; inapplicable taps are skipped per
+    engine (FL has no link boundary; ``quant_error`` needs an int8 link),
+    never errors. ``nan_guard`` lowers the per-(step, client) nonfinite
+    flag; ``on_nonfinite`` picks the host policy when it fires.
+    """
+    taps: Tuple[str, ...] = TAPS
+    nan_guard: bool = True
+    on_nonfinite: str = "record"     # "record" | "raise"
+
+    def __post_init__(self):
+        unknown = [t for t in self.taps if t not in TAPS]
+        if unknown:
+            raise ValueError(f"unknown metrics taps {unknown}; pick from "
+                             f"{TAPS}")
+        if self.on_nonfinite not in ("record", "raise"):
+            raise ValueError(f"on_nonfinite must be 'record' or 'raise', "
+                             f"got {self.on_nonfinite!r}")
+
+
+class NonfiniteError(RuntimeError):
+    """The health monitor found a NaN/inf and the plan was compiled with
+    ``on_nonfinite="raise"``. Carries the first bad coordinate."""
+
+    def __init__(self, *, round_index: int, step: int, client: int,
+                 count: int):
+        self.round_index = round_index
+        self.step = step
+        self.client = client
+        self.count = count
+        super().__init__(
+            f"nonfinite loss/gradient first at round={round_index} "
+            f"step={step} client_slot={client} ({count} flagged slot-steps "
+            f"this round)")
+
+
+def engine_tap_names(cfg: Optional[MetricsConfig], *, kind: str,
+                     has_link: bool) -> Tuple[str, ...]:
+    """The in-graph tap channels ``cfg`` lowers to for one engine.
+
+    ``kind`` is the engine family ('fl' | 'sl'); ``has_link`` whether the
+    plan's link boundary transforms the smashed tensor (int8). Empty tuple
+    (metrics off, or nothing applicable) means the round builders emit the
+    bit-identical tap-free program.
+    """
+    if cfg is None:
+        return ()
+    names = []
+    if "grad_norms" in cfg.taps:
+        names.append("grad_norm_client")
+        if kind == "sl":
+            names.append("grad_norm_server")
+    if "update_norms" in cfg.taps:
+        names.append("update_norm_client")
+        if kind == "sl":
+            names.append("update_norm_server")
+    if kind == "sl" and "smashed" in cfg.taps:
+        names += ["smashed_mean", "smashed_std", "smashed_absmax"]
+    if kind == "sl" and has_link and "quant_error" in cfg.taps:
+        names.append("quant_error")
+    if cfg.nan_guard:
+        names.append("nonfinite")
+    return tuple(names)
+
+
+def split_step_tap_names(names: Tuple[str, ...]) -> Tuple[str, ...]:
+    """The subset of engine tap channels computed INSIDE ``SplitStep.
+    loss_fn`` (they need the smashed tensor, which only exists there) —
+    carried out through the step's aux dict."""
+    return tuple(n for n in names
+                 if n.startswith("smashed_") or n == "quant_error")
+
+
+# ---------------------------------------------------------------------------
+# in-graph tap helpers (pure jax; every value is a float32 scalar per call)
+# ---------------------------------------------------------------------------
+
+def tree_norm(tree) -> jax.Array:
+    """Global L2 norm of a pytree, accumulated in float32."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_nonfinite(tree) -> jax.Array:
+    """1.0 when any leaf element of ``tree`` is NaN/inf, else 0.0."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    bad = sum(jnp.sum(~jnp.isfinite(x.astype(jnp.float32)))
+              for x in leaves)
+    return (bad > 0).astype(jnp.float32)
+
+
+def smashed_tap_values(names, smashed, boundary_out) -> dict:
+    """The ``SplitStep.loss_fn`` taps: statistics of the raw smashed
+    activation entering the link, and the RMS quantization error the
+    boundary introduced (``boundary_out`` is the post-boundary tensor —
+    identical object when the link is transparent)."""
+    out = {}
+    flat = jnp.concatenate(
+        [x.astype(jnp.float32).ravel()
+         for x in jax.tree_util.tree_leaves(smashed)])
+    if "smashed_mean" in names:
+        out["smashed_mean"] = jnp.mean(flat)
+    if "smashed_std" in names:
+        out["smashed_std"] = jnp.std(flat)
+    if "smashed_absmax" in names:
+        out["smashed_absmax"] = jnp.max(jnp.abs(flat))
+    if "quant_error" in names:
+        err = jax.tree_util.tree_map(
+            lambda q, s: q.astype(jnp.float32) - s.astype(jnp.float32),
+            boundary_out, smashed)
+        flat_err = jnp.concatenate(
+            [x.ravel() for x in jax.tree_util.tree_leaves(err)])
+        out["quant_error"] = jnp.sqrt(jnp.mean(jnp.square(flat_err)))
+    return out
+
+
+def step_taps(names, *, loss=None, aux_taps=None, g_c=None, g_s=None,
+              up_c=None, up_s=None) -> dict:
+    """One (step, client)'s tap dict from whatever the round body has in
+    hand. Channels not in ``names`` cost nothing; channels whose source
+    argument is None are skipped (e.g. no server tier in FL)."""
+    out = {}
+    if "grad_norm_client" in names and g_c is not None:
+        out["grad_norm_client"] = tree_norm(g_c)
+    if "grad_norm_server" in names and g_s is not None:
+        out["grad_norm_server"] = tree_norm(g_s)
+    if "update_norm_client" in names and up_c is not None:
+        out["update_norm_client"] = tree_norm(up_c)
+    if "update_norm_server" in names and up_s is not None:
+        out["update_norm_server"] = tree_norm(up_s)
+    if "nonfinite" in names:
+        # an L2 norm is NaN/inf exactly when its source tree holds a
+        # NaN/inf element (or its square-sum overflowed float32 — itself
+        # a training-health event), so already-tapped norms double as the
+        # guard; only trees WITHOUT a tapped norm pay the elementwise pass
+        bad = jnp.zeros((), jnp.float32)
+        if loss is not None:
+            bad = (~jnp.isfinite(loss)).astype(jnp.float32)
+        for k, tree in (("grad_norm_client", g_c),
+                        ("grad_norm_server", g_s)):
+            if k in out:
+                bad = jnp.maximum(
+                    bad, (~jnp.isfinite(out[k])).astype(jnp.float32))
+            elif tree is not None:
+                bad = jnp.maximum(bad, tree_nonfinite(tree))
+        out["nonfinite"] = bad
+    if aux_taps:
+        for k in ("smashed_mean", "smashed_std", "smashed_absmax",
+                  "quant_error"):
+            if k in names and k in aux_taps:
+                out[k] = aux_taps[k]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# host-side summarization (numpy only: runs on pulled arrays, also inside
+# MonteCarloResult.records_for_seed on the per-seed stacks)
+# ---------------------------------------------------------------------------
+
+def _time_major(arr, kind: str):
+    """Tap/loss arrays in (step, client) order: SL rounds already emit
+    (local_rounds, clients); FL rounds emit (clients, steps)."""
+    import numpy as np
+    a = np.asarray(arr)
+    if kind == "fl" and a.ndim == 2:
+        return a.T
+    return a
+
+
+def first_nonfinite_coord(flags, kind: str):
+    """``(step, client, count)`` of the FIRST flagged (time-major) slot in
+    one round's nonfinite tap, or ``None`` when the round is clean."""
+    import numpy as np
+    a = _time_major(flags, kind)
+    bad = np.argwhere(np.asarray(a) > 0)
+    if bad.size == 0:
+        return None
+    step = int(bad[0][0])
+    client = int(bad[0][1]) if a.ndim == 2 else -1
+    return step, client, int((np.asarray(a) > 0).sum())
+
+
+def summarize_round_metrics(cfg: MetricsConfig, taps: Optional[dict], *,
+                            losses, kind: str, n: int,
+                            active: int) -> dict:
+    """Reduce one round's raw tap arrays to the flat JSON-able scalar dict
+    carried by ``RoundRecord.metrics``.
+
+    ``taps`` is the engine's tap pytree for the round (possibly ``None``
+    when nothing lowered in-graph); ``losses`` the round's raw loss stack
+    in engine layout; ``active``/``n`` the surviving/total client slots.
+    Purely numpy — byte-for-byte reproducible on a Monte-Carlo sweep's
+    per-seed stacks (``MonteCarloResult.records_for_seed``).
+    """
+    import numpy as np
+    out = {}
+    for name in sorted(taps or ()):
+        if name == "nonfinite":
+            continue
+        v = np.asarray(taps[name])
+        out[f"{name}/mean"] = float(v.mean())
+        out[f"{name}/max"] = float(v.max())
+    if "loss_spread" in cfg.taps:
+        lm = _time_major(losses, kind)
+        if lm.ndim == 2 and lm.shape[1] > 0:
+            out["loss/spread"] = float(np.std(lm, axis=1).mean())
+    if "mask" in cfg.taps:
+        out["mask/active"] = int(active)
+        out["mask/fraction"] = float(active / n) if n else 0.0
+    if taps and "nonfinite" in taps:
+        coord = first_nonfinite_coord(taps["nonfinite"], kind)
+        if coord is None:
+            out["health/nonfinite"] = 0
+            out["health/first_step"] = -1
+            out["health/first_client"] = -1
+        else:
+            step, client, count = coord
+            out["health/nonfinite"] = count
+            out["health/first_step"] = step
+            out["health/first_client"] = client
+    return out

@@ -67,6 +67,27 @@ class MonteCarloResult:
     engine: str
     mode: str                   # "vmap" | "loop"
     wall_s: float               # rollout wall time (post-compile)
+    # metrics-bus settings of the swept plan (None when the plan was
+    # compiled without MetricsConfig): records_for_seed re-runs the SAME
+    # numpy reduction the plan's _assemble_record ran, on the per-seed
+    # stacks, so seed 0 reproduces plan.run()'s metric stream
+    metrics_config: object = None
+    kind: str = "sl"
+    num_clients: int = 0
+
+    def _round_metrics(self, i: int, r: int) -> dict:
+        if self.metrics_config is None:
+            return {}
+        from ..obs.metrics import summarize_round_metrics
+        s = self.stacks
+        taps = {k.split("/", 1)[1]: s[k][i, r]
+                for k in s if k.startswith("metrics/")}
+        return summarize_round_metrics(
+            self.metrics_config, taps,
+            losses=s["loss_stack"][i, r] if "loss_stack" in s
+            else np.zeros(0, np.float32),
+            kind=self.kind, n=self.num_clients,
+            active=int(s["active_clients"][i, r]))
 
     def records_for_seed(self, i: int) -> list:
         from ..api.records import RoundRecord
@@ -89,7 +110,8 @@ class MonteCarloResult:
             active_clients=int(s["active_clients"][i, r]),
             engine=self.engine,
             cohort_pids=(tuple(int(p) for p in s["cohort"][i, r])
-                         if "cohort" in s else ())) for r in range(self.rounds)]
+                         if "cohort" in s else ()),
+            metrics=self._round_metrics(i, r)) for r in range(self.rounds)]
 
     def summary(self) -> dict:
         """Across-seed statistics of campaign totals + the final-round loss."""
@@ -108,6 +130,11 @@ class MonteCarloResult:
             "total_link_energy_j": _stats(s["link_energy_j"].sum(axis=1)),
             "total_client_energy_j": _stats(s["client_energy_j"].sum(axis=1)),
             "total_energy_j": _stats(total_energy),
+            # across-seed spread of each in-graph tap channel: per-seed mean
+            # over the sweep's (rounds, steps, clients) tap stack -> _stats
+            "metrics": {k.split("/", 1)[1]:
+                        _stats(s[k].reshape(s[k].shape[0], -1).mean(axis=1))
+                        for k in sorted(s) if k.startswith("metrics/")} or None,
         }
 
 
@@ -124,6 +151,11 @@ def _mc_context(plan):
     ctx = {
         "n": n, "steps": spec.local_steps, "kind": spec.engine.kind,
         "needs_mask": plan._mask_in_engine,
+        # metrics-bus taps (repro.obs.metrics): when the plan compiled with
+        # a MetricsConfig its raw round emits (state, losses, taps) and the
+        # rollout stacks each tap channel as a "metrics/<name>" output
+        "taps": tuple(getattr(plan, "graph_taps", ())),
+        "metrics": getattr(plan, "metrics_config", None),
         # a plain ClientSpec.dropout_rate is the i.i.d. special case of an
         # availability trace — honor it per seed as one
         "avail": (scn.availability if scn.needs_mask
@@ -185,7 +217,12 @@ def _round_outputs(ctx, kr, state, up, batch, run):
                          jnp.zeros(ctx["n"], mask.dtype).at[0].set(1))
         batch = jax.tree_util.tree_map(
             lambda x: x[cohort % ctx["n_parts"]], batch)
-    state, losses = run(state, batch, mask if ctx["needs_mask"] else None)
+    if ctx["taps"]:
+        state, losses, taps = run(state, batch,
+                                  mask if ctx["needs_mask"] else None)
+    else:
+        state, losses = run(state, batch, mask if ctx["needs_mask"] else None)
+        taps = None
     steps = ctx["steps"]
     active = jnp.maximum(mask.sum(), 1.0)
     w = mask[:, None] if ctx["kind"] == "fl" else mask[None, :]
@@ -216,6 +253,13 @@ def _round_outputs(ctx, kr, state, up, batch, run):
     }
     if cohort is not None:
         out["cohort"] = cohort
+    if ctx["metrics"] is not None:
+        # raw per-(step, client) loss stack: records_for_seed reduces it to
+        # loss_spread with the same numpy path as the plan's round records
+        out["loss_stack"] = losses
+    if taps is not None:
+        for name, v in taps.items():
+            out[f"metrics/{name}"] = v
     return state, up, out
 
 
@@ -391,4 +435,6 @@ def run_monte_carlo(plan, num_seeds: int, *, rounds: Optional[int] = None,
         obs.flush()
     return MonteCarloResult(stacks=stacks, num_seeds=num_seeds,
                             rounds=rounds, engine=plan.engine_label,
-                            mode=mode, wall_s=wall)
+                            mode=mode, wall_s=wall,
+                            metrics_config=ctx["metrics"], kind=ctx["kind"],
+                            num_clients=ctx["n"])

@@ -4,6 +4,8 @@
     python tools/obs_report.py results/runs/<run_id>
     python tools/obs_report.py results/runs            # latest run under root
     python tools/obs_report.py <run_dir> --coverage-min 0.95   # CI smoke gate
+    python tools/obs_report.py <run_dir> --health-gate         # 0 nonfinite
+    python tools/obs_report.py --compare <run_a> <run_b>       # phase deltas
 
 Reads ``manifest.json`` + ``events.jsonl`` (the schema ``repro.obs``
 writes — see ``docs/ARCHITECTURE.md`` §Observability) and prints:
@@ -18,8 +20,15 @@ writes — see ``docs/ARCHITECTURE.md`` §Observability) and prints:
     ``--coverage-min`` turns it into an exit-status gate);
   * per-round sparklines of loss / round wall / recompiles from the
     ``record`` + ``gauge`` event streams;
+  * metrics-bus tap sparklines + the training-health table from the
+    ``metrics`` event stream, when the run was compiled with
+    ``ObsConfig(metrics=MetricsConfig(...))`` (``--health-gate`` turns
+    "zero nonfinite slot-steps" into an exit-status gate);
   * the simulated-clock mission dwell decomposition (travel/hover/comm)
     when the run carried a UAV mission.
+
+``--compare run_a run_b`` instead renders the two runs' phase tables side
+by side with wall/share deltas (same ``path`` aggregation).
 
 Zero dependencies beyond the stdlib: the report must render on a machine
 that cannot import jax (e.g. inspecting a CI artifact locally).
@@ -113,6 +122,88 @@ def root_coverage(events: list[dict]) -> tuple[float, dict | None]:
     return (child_s / wall if wall > 0 else 1.0), root
 
 
+def metrics_rounds(events: list[dict]) -> list[dict]:
+    """The run's ``metrics`` events in round order (the per-round dict the
+    metrics bus summarized into ``RoundRecord.metrics``)."""
+    mev = [ev for ev in events if ev.get("ev") == "metrics"]
+    mev.sort(key=lambda ev: ev.get("round", 0))
+    return mev
+
+
+def health_nonfinite_total(events: list[dict]) -> int:
+    """Total nonfinite slot-steps the run's health monitor flagged."""
+    return sum(int(ev.get("health/nonfinite", 0))
+               for ev in metrics_rounds(events))
+
+
+def metrics_section(events: list[dict]) -> list[str]:
+    """Tap sparklines + the training-health table (empty without a
+    ``metrics`` event stream)."""
+    mev = metrics_rounds(events)
+    if not mev:
+        return []
+    chans = sorted({k for ev in mev for k in ev
+                    if "/" in k and not k.startswith("health/")})
+    out = ["", f"  metrics taps ({len(mev)} rounds):"]
+    for k in chans:
+        vals = [float(ev[k]) if k in ev else float("nan") for ev in mev]
+        fin = [v for v in vals if v == v]
+        last = fin[-1] if fin else float("nan")
+        out.append(f"    {k:<26} {spark(vals)}  last={last:.4g}")
+    tot = health_nonfinite_total(events)
+    out += ["", f"  training health: {tot} nonfinite slot-step(s)"]
+    if tot:
+        out.append(f"    {'round':>6} {'count':>6} {'first_step':>11} "
+                   f"{'first_client':>13}")
+        for ev in mev:
+            c = int(ev.get("health/nonfinite", 0))
+            if c:
+                out.append(f"    {ev.get('round', '?'):>6} {c:>6} "
+                           f"{int(ev.get('health/first_step', -1)):>11} "
+                           f"{int(ev.get('health/first_client', -1)):>13}")
+    return out
+
+
+def compare_runs(run_a: str, run_b: str) -> list[str]:
+    """Side-by-side phase table of two run dirs: per shared ``path``, both
+    wall clocks and root-share percentages plus their deltas (phases only
+    one run hit render with a ``—`` on the other side)."""
+    rows_by, totals, labels = [], [], []
+    for run_dir in (run_a, run_b):
+        _, events = load_run(run_dir)
+        rows = phase_table(events)
+        cov, root = root_coverage(events)
+        total = (root.get("dur_s", 0.0) if root
+                 else sum(r["wall_s"] for r in rows if r["depth"] == 0))
+        rows_by.append({r["path"]: r for r in rows})
+        totals.append(total)
+        labels.append(os.path.basename(os.path.normpath(run_dir)))
+    order = list(rows_by[0])
+    order += [p for p in rows_by[1] if p not in rows_by[0]]
+    out = [f"compare  A={labels[0]}  B={labels[1]}",
+           f"  {'phase':<40} {'wall_A':>9} {'wall_B':>9} {'d_wall':>9} "
+           f"{'share_A':>8} {'share_B':>8} {'d_share':>8}"]
+    for path in order:
+        a, b = rows_by[0].get(path), rows_by[1].get(path)
+        wa = a["wall_s"] if a else None
+        wb = b["wall_s"] if b else None
+        sa = (wa / totals[0] if a and totals[0] > 0 else None)
+        sb = (wb / totals[1] if b and totals[1] > 0 else None)
+        fmt_w = lambda w: f"{w:9.4f}" if w is not None else f"{'—':>9}"
+        fmt_s = lambda s: f"{s:8.1%}" if s is not None else f"{'—':>8}"
+        d_w = (f"{wb - wa:+9.4f}" if wa is not None and wb is not None
+               else f"{'—':>9}")
+        d_s = (f"{sb - sa:+8.1%}" if sa is not None and sb is not None
+               else f"{'—':>8}")
+        depth = (a or b)["depth"]
+        name = "  " * min(depth, 4) + path
+        out.append(f"  {name:<40} {fmt_w(wa)} {fmt_w(wb)} {d_w} "
+                   f"{fmt_s(sa)} {fmt_s(sb)} {d_s}")
+    out.append(f"  root wall: A={totals[0]:.4f}s  B={totals[1]:.4f}s  "
+               f"delta={totals[1] - totals[0]:+.4f}s")
+    return out
+
+
 def render(run_dir: str, manifest: dict, events: list[dict]) -> list[str]:
     out = [f"run {manifest.get('run_id', os.path.basename(run_dir))}  "
            f"({run_dir})",
@@ -191,6 +282,8 @@ def render(run_dir: str, manifest: dict, events: list[dict]) -> list[str]:
         if sb:
             out.append(f"    state     {sb[-1] / 1e6:.2f}MB (engine state)")
 
+    out += metrics_section(events)
+
     mission = [ev for ev in events if ev.get("ev") == "mission_span"]
     if mission:
         legs: dict[str, float] = {}
@@ -212,7 +305,17 @@ def main():
                     help="exit nonzero unless the root span's direct "
                          "children cover at least this fraction of its "
                          "wall clock (CI smoke gate, e.g. 0.95)")
+    ap.add_argument("--health-gate", action="store_true",
+                    help="exit nonzero if the run's metrics stream flagged "
+                         "any nonfinite slot-step (CI smoke gate; also "
+                         "fails when the run carried no metrics events)")
+    ap.add_argument("--compare", nargs=2, metavar=("RUN_A", "RUN_B"),
+                    help="render two run dirs' phase tables side by side "
+                         "with wall/share deltas, then exit")
     args = ap.parse_args()
+    if args.compare:
+        print("\n".join(compare_runs(*args.compare)))
+        return
     run_dir = args.path
     if not os.path.exists(os.path.join(run_dir, "events.jsonl")) and \
             not os.path.exists(os.path.join(run_dir, "manifest.json")):
@@ -230,6 +333,17 @@ def main():
             sys.exit(1)
         print(f"obs-report: coverage ok ({cov:.1%} >= "
               f"{args.coverage_min:.1%})")
+    if args.health_gate:
+        if not metrics_rounds(events):
+            print("obs-report: health gate needs a metrics event stream "
+                  "(compile with ObsConfig(metrics=MetricsConfig()))")
+            sys.exit(1)
+        tot = health_nonfinite_total(events)
+        if tot:
+            print(f"obs-report: health gate FAILED — {tot} nonfinite "
+                  f"slot-step(s) flagged")
+            sys.exit(1)
+        print("obs-report: health ok (0 nonfinite slot-steps)")
 
 
 if __name__ == "__main__":
